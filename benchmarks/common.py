@@ -1,0 +1,22 @@
+"""Shared benchmark plumbing: timing + `name,us_per_call,derived` CSV."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: dict) -> None:
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}", flush=True)
+
+
+class timed:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        pass
+
+    @property
+    def us(self) -> float:
+        return (time.time() - self.t0) * 1e6

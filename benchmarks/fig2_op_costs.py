@@ -1,0 +1,42 @@
+"""Figure 2: per-op MPC cost of one transformer block forward.
+
+Paper setup: one layer, 12 heads, batch 5 (seq 128), CrypTen over WAN
+(100 MB/s, 100 ms). Reports rounds / bytes / simulated time per op class
+and asserts the paper's headline: softmax dominates communication.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.mpc import costs
+from repro.mpc.comm import WAN
+
+
+def run() -> dict:
+    g = costs.BlockGeom(batch=5, seq=128, d_model=768, heads=12,
+                        d_head=64, d_ff=3072)
+    with timed() as t:
+        led = costs.exact_block_cost(g)
+    groups: dict[str, dict] = {}
+    for k, r in led.by_op().items():
+        top = k.split(".")[0] + "." + (k.split(".")[1] if "." in k else "")
+        grp = ("softmax" if "softmax" in k else
+               "layernorm" if ".ln" in k or "layernorm" in k else
+               "gelu" if "gelu" in k else
+               "matmul" if any(s in k for s in
+                               ("qkv", "scores", "av", "out", "fc")) else k)
+        d = groups.setdefault(grp, {"rounds": 0, "mbytes": 0.0})
+        d["rounds"] += r.rounds
+        d["mbytes"] += r.nbytes / 1e6
+    total_b = sum(d["mbytes"] for d in groups.values())
+    total_r = sum(d["rounds"] for d in groups.values())
+    sm_frac = groups["softmax"]["mbytes"] / total_b
+    for grp, d in sorted(groups.items(), key=lambda kv: -kv[1]["mbytes"]):
+        emit(f"fig2.{grp}", t.us, {
+            "rounds": d["rounds"], "MB": round(d["mbytes"], 1),
+            "wan_s": round(WAN.time(d["rounds"], d["mbytes"] * 1e6), 1)})
+    emit("fig2.total", t.us, {
+        "rounds": total_r, "MB": round(total_b, 1),
+        "softmax_byte_frac": round(sm_frac, 3),
+        "paper_claim": 0.819})
+    assert sm_frac > 0.5, "softmax must dominate communication (Fig 2)"
+    return {"softmax_frac": sm_frac, "rounds": total_r}

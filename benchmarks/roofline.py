@@ -1,0 +1,152 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = wire_bytes_per_device / link_bw          (50 GB/s ICI)
+
+cost_analysis() of the SPMD-partitioned module is per-device, so the
+brief's global formulas reduce to the per-device forms above (global =
+per-device x chips on both numerator and denominator).
+
+MODEL_FLOPS: 6*N_active*D (train), 2*N_active*D (prefill),
+2*N_active*B (decode step). The MODEL/HLO ratio flags remat/redundancy
+waste (train remat recompute, causal-chunk overcount, MoE padding).
+
+Writes experiments/roofline.md (the EXPERIMENTS.md table) + CSV lines.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, timed
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline.md")
+
+
+def model_flops(cell: dict) -> float:
+    """Ideal model FLOPs: 6*N_active*D train / 2*N_active*D prefill /
+    2*N_active*B decode, + the attention S^2 term from the dry-run."""
+    n = cell["active_params"]
+    sh = cell["shape"]
+    attn = cell.get("attn_model_flops", 0.0)
+    if sh["kind"] == "train":
+        return 6.0 * n * sh["global_batch"] * sh["seq_len"] + attn
+    if sh["kind"] == "prefill":
+        return 2.0 * n * sh["global_batch"] * sh["seq_len"] + attn
+    return 2.0 * n * sh["global_batch"] + attn   # decode: one token
+
+
+def memory_bytes(cell: dict) -> float:
+    """Per-device HBM traffic estimate.
+
+    XLA-CPU `bytes accessed` counts fusion-internal traffic and is not
+    HBM-representative; instead: measured buffer streams from
+    memory_analysis (arguments read + outputs written — params, optimizer
+    state, KV caches) plus analytic activation traffic of
+    KAPPA x d_model x n_layers x tokens_per_device x 2B (KAPPA ~= tensors
+    touched per token-layer; 16 fwd-only, 24 with bwd + remat). Decode
+    streams buffers only (1-token activations are noise).
+    """
+    mem = cell["memory"]
+    base = (mem["argument_bytes"] or 0) + (mem["output_bytes"] or 0)
+    sh = cell["shape"]
+    if sh["kind"] == "decode":
+        return base
+    from repro.configs.base import load_arch
+    nb = 32 if "2x16x16" in cell["mesh"] else 16
+    b, s = sh["global_batch"], sh["seq_len"]
+    tokens_dev = b * s / nb if b % nb == 0 else b * s
+    cfg = load_arch(cell["arch"])
+    kappa = 24.0 if sh["kind"] == "train" else 16.0
+    act = kappa * cfg.d_model * cfg.n_layers * tokens_dev * 2.0
+    return base + act
+
+
+def analyze(cell: dict) -> dict:
+    n_dev = cell["n_devices"]
+    hlo_global = cell["cost"].get("flops_global") or \
+        (cell["cost"]["flops"] or 0.0) * n_dev
+    fl_dev = hlo_global / n_dev
+    by = memory_bytes(cell)
+    wire = cell["collectives"].get("wire_bytes_per_device_scaled",
+                                   cell["collectives"]["wire_bytes_per_device"])
+    t_c = fl_dev / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_x = wire / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(cell)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": max(t_c, 1e-30)
+        / max(t_c, t_m, t_x, 1e-30),
+        "peak_gb": (cell["memory"]["peak_bytes"] or 0) / 2 ** 30,
+    }
+
+
+SUGGEST = {
+    "compute": "reduce recompute (remat policy) / causal-block skipping",
+    "memory": "fuse elementwise chains; widen arithmetic intensity via "
+              "larger per-device batch or weight-stationary blocking",
+    "collective": "re-shard to cut all-gathers (FSDP axis choice), overlap "
+                  "collectives with compute, or compress the reduced grads",
+}
+
+
+def run() -> dict:
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(p) as f:
+            c = json.load(f)
+        if c.get("applicable") and "error" not in c:
+            cells[c["cell"]] = c
+    lines = ["| cell | compute s | memory s | collective s | dominant | "
+             "MODEL/HLO | peak GB | note |",
+             "|---|---|---|---|---|---|---|---|"]
+    worst, most_coll = None, None
+    out = {}
+    with timed() as t:
+        for name, c in cells.items():
+            a = analyze(c)
+            out[name] = a
+            emit(f"roofline.{name}", t.us, {
+                "compute_s": f"{a['compute_s']:.3e}",
+                "memory_s": f"{a['memory_s']:.3e}",
+                "collective_s": f"{a['collective_s']:.3e}",
+                "dominant": a["dominant"],
+                "useful_ratio": round(a["useful_ratio"], 3)})
+            lines.append(
+                f"| {name} | {a['compute_s']:.3e} | {a['memory_s']:.3e} | "
+                f"{a['collective_s']:.3e} | {a['dominant']} | "
+                f"{a['useful_ratio']:.2f} | {a['peak_gb']:.1f} | "
+                f"{SUGGEST[a['dominant']]} |")
+            if name.count("__") != 2:
+                continue            # hillclimb variants: rows only, not picks
+            frac = a["roofline_fraction"]
+            if worst is None or frac < worst[1]:
+                worst = (name, frac)
+            cshare = a["collective_s"] / max(
+                a["compute_s"] + a["memory_s"] + a["collective_s"], 1e-30)
+            if most_coll is None or cshare > most_coll[1]:
+                most_coll = (name, cshare)
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    emit("roofline.summary", t.us, {
+        "cells": len(cells),
+        "worst_fraction_cell": worst[0] if worst else "-",
+        "worst_fraction": round(worst[1], 4) if worst else "-",
+        "most_collective_cell": most_coll[0] if most_coll else "-",
+    })
+    return out

@@ -1,0 +1,46 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: every paper table/figure + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig2 fig6  # subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SUITES = ["fig2", "fig5", "fig6", "fig7", "table1", "table2", "table3",
+          "table4", "roofline"]
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    chosen = args or SUITES
+    print("name,us_per_call,derived")
+    failures = []
+    for name in chosen:
+        mod_name = {
+            "fig2": "benchmarks.fig2_op_costs",
+            "fig5": "benchmarks.fig5_budget_sweep",
+            "fig6": "benchmarks.fig6_delay",
+            "fig7": "benchmarks.fig7_ablation",
+            "table1": "benchmarks.table1_efficacy",
+            "table2": "benchmarks.table2_mlp_ablation",
+            "table3": "benchmarks.table3_baselines",
+            "table4": "benchmarks.table4_multiphase",
+            "roofline": "benchmarks.roofline",
+        }[name]
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception as e:                           # noqa: BLE001
+            failures.append((name, e))
+            print(f"{name}.FAILED,0,error={type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

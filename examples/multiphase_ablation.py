@@ -1,0 +1,58 @@
+"""Multi-phase vs single-phase selection (paper Table 4 protocol at CPU
+scale): same final proxy, with/without the phase-1 cheap sieve, plus the
+modeled delay difference.
+
+    PYTHONPATH=src python examples/multiphase_ablation.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.paper_targets import TINY_TARGET  # noqa: E402
+from repro.core import target as tgt  # noqa: E402
+from repro.core.proxy import ProxySpec  # noqa: E402
+from repro.core.selection import SelectionConfig, run_selection  # noqa: E402
+from repro.data.tasks import make_classification_task  # noqa: E402
+from repro.launch.select import paper_scale_delay  # noqa: E402
+
+
+def main() -> None:
+    task = make_classification_task(1, n_pool=600, n_test=300, seq=16,
+                                    vocab=256, n_classes=4)
+    cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
+    key = jax.random.key(1)
+    params0 = tgt.init_classifier(key, cfg, task.n_classes)
+
+    def run_with(phases, tag):
+        sel = SelectionConfig(phases=phases, budget_frac=0.25,
+                              boot_frac=0.05, exvivo_steps=120,
+                              invivo_steps=60, finetune_steps=80)
+        res = run_selection(key, params0, cfg, task.pool_tokens, sel,
+                            n_classes=task.n_classes,
+                            boot_labels_fn=lambda i: task.pool_labels[i])
+        import jax.numpy as jnp
+        p, _ = tgt.finetune(jax.random.fold_in(key, 9), params0, cfg,
+                            jnp.asarray(task.pool_tokens[res.selected]),
+                            jnp.asarray(task.pool_labels[res.selected]),
+                            steps=150)
+        acc = tgt.accuracy(p, cfg, jnp.asarray(task.test_tokens),
+                           task.test_labels)
+        print(f"[{tag}] acc={acc:.3f} selected={len(res.selected)}")
+        return acc
+
+    acc_sps = run_with([ProxySpec(2, 4, 8, 1.0)], "single-phase")
+    acc_mps = run_with([ProxySpec(1, 2, 2, 0.4), ProxySpec(2, 4, 8, 1.0)],
+                       "multi-phase")
+    print(f"[ablation] multi-phase {acc_mps:.3f} vs single {acc_sps:.3f}")
+    d = paper_scale_delay(42_000, 0.2)
+    print(f"[ablation] modeled WAN delay ours "
+          f"{d['wan']['ours_hours']:.1f}h (multi-phase pipeline)")
+
+
+if __name__ == "__main__":
+    main()

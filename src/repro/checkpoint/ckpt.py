@@ -1,0 +1,152 @@
+"""Distributed checkpoint: manifest-verified .npz shards, atomic rename,
+async save thread, auto-resume.
+
+Layout:  <dir>/step_<N>/shard_<host>.npz     flattened pytree leaves
+         <dir>/step_<N>/manifest.json        treedef + shapes + crc32s
+         <dir>/step_<N>/COMMIT               written last (atomicity mark)
+
+Restore picks the newest COMMITted step, verifies the manifest, and
+rebuilds the pytree. Corrupt/partial steps (no COMMIT or crc mismatch)
+are skipped — the restart path after a mid-save node failure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, str(treedef)
+
+
+_UINT_VIEW = {2: np.uint16, 1: np.uint8}     # bf16/fp8: not numpy-native
+
+
+def _to_storable(a: np.ndarray) -> tuple[np.ndarray, str]:
+    """(storable array, logical dtype name). Exotic dtypes -> uint view."""
+    name = a.dtype.name
+    if name in ("float64", "float32", "float16", "int64", "int32", "int16",
+                "int8", "uint64", "uint32", "uint16", "uint8", "bool"):
+        return a, name
+    return a.view(_UINT_VIEW[a.dtype.itemsize]), name
+
+
+def _from_storable(a: np.ndarray, logical: str) -> np.ndarray:
+    if a.dtype.name == logical:
+        return a
+    import ml_dtypes
+    return a.view(np.dtype(getattr(ml_dtypes, logical, logical)))
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, host: int = 0,
+                    keep: int = 3) -> str:
+    leaves, treedef_str = _flatten(tree)
+    stored = [_to_storable(np.asarray(l)) for l in leaves]
+    arrays = {f"leaf_{i}": a for i, (a, _) in enumerate(stored)}
+    logical = [d for _, d in stored]
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    shard = os.path.join(step_dir, f"shard_{host}.npz")
+    tmp = shard + ".tmp.npz"          # keep .npz suffix: np.savez appends it
+    np.savez(tmp, **arrays)
+    os.replace(tmp, shard)
+    manifest = {
+        "step": step,
+        "treedef": treedef_str,
+        "leaves": [{"name": f"leaf_{i}", "shape": list(a.shape),
+                    "dtype": str(a.dtype), "logical_dtype": logical[i],
+                    "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes())}
+                   for i, a in enumerate(arrays.values())],
+    }
+    mpath = os.path.join(step_dir, "manifest.json")
+    with open(mpath + ".tmp", "w") as f:
+        json.dump(manifest, f)
+    os.replace(mpath + ".tmp", mpath)
+    with open(os.path.join(step_dir, "COMMIT"), "w") as f:
+        f.write("ok")
+    _gc(ckpt_dir, keep)
+    return step_dir
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "COMMIT")):
+            out.append(int(m.group(1)))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = _steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, tree_like, *, step: int | None = None,
+                       host: int = 0):
+    """Restore into the structure of `tree_like`. Returns (tree, step) or
+    (tree_like, None) if no valid checkpoint exists."""
+    steps = sorted(_steps(ckpt_dir), reverse=True)
+    if step is not None:
+        steps = [s for s in steps if s == step]
+    for s in steps:
+        step_dir = os.path.join(ckpt_dir, f"step_{s:08d}")
+        try:
+            with open(os.path.join(step_dir, "manifest.json")) as f:
+                manifest = json.load(f)
+            with np.load(os.path.join(step_dir, f"shard_{host}.npz")) as z:
+                arrays = [z[e["name"]] for e in manifest["leaves"]]
+            for a, e in zip(arrays, manifest["leaves"]):
+                if zlib.crc32(np.ascontiguousarray(a).tobytes()) != e["crc32"]:
+                    raise IOError(f"crc mismatch in {e['name']}")
+            leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+            if len(leaves) != len(arrays):
+                raise IOError("leaf count mismatch")
+            restored = [_from_storable(np.asarray(a),
+                                       e.get("logical_dtype", str(a.dtype)))
+                        for a, e in zip(arrays, manifest["leaves"])]
+            return jax.tree_util.tree_unflatten(treedef, restored), s
+        except Exception:
+            continue          # corrupt step: fall through to older one
+    return tree_like, None
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves: device->host copy on the caller, disk IO on a
+    background thread (one in flight; newer save waits for the previous)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)      # sync copy out
+        self.wait()
+        self._thread = threading.Thread(
+            target=save_checkpoint,
+            args=(self.ckpt_dir, step, host_tree),
+            kwargs={"keep": self.keep}, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,3 @@
+from repro.configs.base import (
+    ArchConfig, ShapeSpec, SHAPES, ARCH_IDS, load_arch, cell_is_applicable,
+)

@@ -1,0 +1,44 @@
+"""The paper's own target models (Section 5.1): BERT, DistilBERT, ViT.
+
+Modeled in the same zoo as encoder-style dense transformers (bidir mask,
+classification head via the selection core). ViT's patchify frontend is a
+stub per the modality rule. These drive the paper-reproduction benchmarks
+(selection efficacy + delay), not the assigned-arch dry-run grid.
+"""
+from repro.configs.base import ArchConfig
+
+BERT = ArchConfig(
+    name="bert-base", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+    d_ff=3072, vocab_size=30522,
+    norm_type="layernorm", act="gelu", rope_theta=1e4,
+)
+
+DISTILBERT = ArchConfig(
+    name="distilbert", family="dense",
+    n_layers=6, d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+    d_ff=3072, vocab_size=30522,
+    norm_type="layernorm", act="gelu", rope_theta=1e4,
+)
+
+VIT_BASE = ArchConfig(
+    name="vit-base", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+    d_ff=3072, vocab_size=1000,
+    norm_type="layernorm", act="gelu", rope_theta=1e4,
+)
+
+VIT_SMALL = ArchConfig(
+    name="vit-small", family="dense",
+    n_layers=12, d_model=384, n_heads=6, n_kv_heads=6, d_head=64,
+    d_ff=1536, vocab_size=1000,
+    norm_type="layernorm", act="gelu", rope_theta=1e4,
+)
+
+# tiny geometry used by the CPU-scale efficacy experiments
+TINY_TARGET = ArchConfig(
+    name="tiny-target", family="dense",
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
+    d_ff=256, vocab_size=512,
+    norm_type="layernorm", act="gelu", rope_theta=1e4,
+)

@@ -1,0 +1,15 @@
+"""The paper's contribution, as composable modules.
+
+  approx.py     MLP emulators for fused nonlinearities (MLP_sm / MLP_ln /
+                MLP_se) + ex-vivo Gaussian-synthesis training + clear and
+                MPC execution paths
+  target.py     classifier targets (paper setting: BERT-style encoder +
+                head), finetuning loop
+  proxy.py      proxy generation: sub-model extraction, head/depth
+                pruning, MLP substitution, in-vivo finetune
+  selection.py  the 3-stage private selection workflow (bootstrap ->
+                multi-phase MPC sieve -> transaction/appraisal)
+  iosched.py    parallel MPC execution: latency-op coalescing + comm/
+                compute overlap makespan (paper 4.4), drives Fig 6/7
+"""
+from repro.core import approx, proxy, selection, iosched, target

@@ -1,0 +1,158 @@
+"""MLP emulators for fused nonlinear operators (paper §4.3).
+
+Each emulator is a 2-layer MLP (Linear -> ReLU -> Linear) substituting a
+*group* of nonlinear ops while reducing the dimension the nonlinearity is
+evaluated at:
+
+  MLP_sm  softmax over attention scores:   R^S -> R^h -> R^S  (h = 2..16)
+  MLP_ln  rsqrt(var + eps) in LayerNorm:   R^1 -> R^h -> R^1
+  MLP_se  softmax(logits) + entropy fused: R^C -> R^h -> R^1
+
+Ex-vivo training (paper: 5.12M synthetic points): estimate Gaussian
+<mu, sigma> from activations observed while finetuning M_g on the
+bootstrap sample, synthesize inputs from that Gaussian, regress onto the
+true operator outputs. In-vivo: the inserted MLPs are co-tuned with the
+proxy end-to-end (proxy.py).
+
+Both execution paths are provided: `mlp_apply` (clear, used inside proxy
+training) and `mlp_apply_mpc` (share-level: 2 Beaver matmuls + low-dim
+ReLU — this is where the MPC savings come from).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.mpc import ops as mops, compare
+from repro.mpc.sharing import AShare
+
+
+def init_mlp(key, d_in: int, hidden: int, d_out: int):
+    k1, k2 = jax.random.split(key)
+    s1 = (2.0 / (d_in + hidden)) ** 0.5
+    s2 = (2.0 / (hidden + d_out)) ** 0.5
+    return {"w1": jax.random.normal(k1, (d_in, hidden)) * s1,
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, d_out)) * s2,
+            "b2": jnp.zeros((d_out,))}
+
+
+def mlp_apply(p, x):
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def mlp_apply_mpc(p_sh: dict, x: AShare, key) -> AShare:
+    """Share-level MLP: weights are model-owner-private shares.
+
+    Cost: 2 Beaver matmuls (1 round each, bytes ~ rows*(d_in + d_out))
+    + ReLU over `hidden` elements only — the dimension reduction.
+    """
+    import jax.numpy as _jnp
+
+    def _badd(h: AShare, b: AShare) -> AShare:
+        bb = _jnp.broadcast_to(b.sh[:, None, :], h.sh.shape)
+        return mops.add(h, AShare(bb, h.ring))
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = mops.matmul(x, p_sh["w1"], k1)
+    h = _badd(h, p_sh["b1"])
+    h = compare.relu(h, k2)
+    out = mops.matmul(h, p_sh["w2"], k3)
+    return _badd(out, p_sh["b2"])
+
+
+# ---------------------------------------------------------------------------
+# the three target operators
+# ---------------------------------------------------------------------------
+
+def op_softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def op_rsqrt(v, eps: float = 1e-5):
+    return jax.lax.rsqrt(v + eps)
+
+
+def op_softmax_entropy(logits):
+    p = jax.nn.softmax(logits, axis=-1)
+    return -jnp.sum(p * jnp.log(p + 1e-9), axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# activation statistics + ex-vivo training
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GaussStats:
+    mu: jax.Array      # per-feature mean (or scalar)
+    sigma: jax.Array   # per-feature std
+
+    @staticmethod
+    def estimate(samples: jax.Array) -> "GaussStats":
+        flat = samples.reshape(-1, samples.shape[-1]).astype(jnp.float32)
+        return GaussStats(jnp.mean(flat, 0), jnp.std(flat, 0) + 1e-4)
+
+    def sample(self, key, n: int) -> jax.Array:
+        d = self.mu.shape[-1]
+        return self.mu + self.sigma * jax.random.normal(key, (n, d))
+
+
+def fit_mlp(key, op_fn, stats: GaussStats, d_in: int, hidden: int,
+            d_out: int, *, steps: int = 400, batch: int = 2048,
+            lr: float = 3e-3, positive_input: bool = False):
+    """Ex-vivo regression of `op_fn` on Gaussian-synthesized inputs."""
+    kinit, kdata = jax.random.split(key)
+    p = init_mlp(kinit, d_in, hidden, d_out)
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+
+    def loss_fn(p, x):
+        y = op_fn(x)
+        return jnp.mean((mlp_apply(p, x) - y) ** 2)
+
+    @jax.jit
+    def step(p, m, v, key, i):
+        x = stats.sample(key, batch)
+        if positive_input:
+            x = jnp.abs(x) + 1e-4
+        g = jax.grad(loss_fn)(p, x)
+        m = jax.tree.map(lambda m, g: 0.9 * m + 0.1 * g, m, g)
+        v = jax.tree.map(lambda v, g: 0.999 * v + 0.001 * g * g, v, g)
+        mh = jax.tree.map(lambda m: m / (1 - 0.9 ** (i + 1.0)), m)
+        vh = jax.tree.map(lambda v: v / (1 - 0.999 ** (i + 1.0)), v)
+        p = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + 1e-8),
+                         p, mh, vh)
+        return p, m, v
+
+    for i in range(steps):
+        kdata, k = jax.random.split(kdata)
+        p, m, v = step(p, m, v, k, jnp.float32(i))
+    return p
+
+
+def fit_softmax_mlp(key, stats: GaussStats, seq: int, hidden: int, **kw):
+    return fit_mlp(key, op_softmax, stats, seq, hidden, seq, **kw)
+
+
+def fit_rsqrt_mlp(key, stats: GaussStats, hidden: int, **kw):
+    return fit_mlp(key, op_rsqrt, stats, 1, hidden, 1,
+                   positive_input=True, **kw)
+
+
+def fit_entropy_mlp(key, stats: GaussStats, n_classes: int, hidden: int, **kw):
+    return fit_mlp(key, op_softmax_entropy, stats, n_classes, hidden, 1, **kw)
+
+
+def op_sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def fit_gate_mlp(key, stats: GaussStats, d: int, hidden: int, **kw):
+    """Beyond-paper: emulate the sigmoid gates of RG-LRU / MoE routers —
+    the same fuse-and-reduce trick applied to non-softmax nonlinearities
+    (DESIGN.md §4 notes these attach where the backbone has them)."""
+    return fit_mlp(key, op_sigmoid, stats, d, hidden, d, **kw)

@@ -1,0 +1,84 @@
+"""Parallel MPC execution / IO scheduling (paper §4.4).
+
+The paper's observation: after the MLPs project nonlinearities to low
+dimensions, the op stream splits into
+  bandwidth-bound ops ("bw"): big Beaver matmul openings — cost ~ bytes
+  latency-bound ops ("lat"): comparisons & low-dim MLP internals — cost
+                             ~ rounds * RTT
+
+Two optimizations:
+  1. COALESCING: latency-bound ops from W concurrent batches are stacked
+     into one message flight — rounds are paid once per wave, not per
+     batch (bytes unchanged).
+  2. OVERLAP: while batch i's data is on the wire, batch i+1 computes.
+     Makespan -> max(total_comm, total_compute) + pipeline fill, instead
+     of their sum.
+
+`makespan` turns a per-batch Ledger into an end-to-end delay under any
+NetProfile; the four Fig-7 variants are (coalesce, overlap) in
+{False,True}^2. This same model, re-parameterized with the pod-DCN
+profile, schedules the TPU deployment (launch/select.py), where overlap
+is realized with double-buffered inter-pod collectives (kernels aside,
+XLA async collectives hide the share-exchange behind the Beaver-local
+matmuls).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.mpc.comm import Ledger, NetProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedConfig:
+    coalesce: bool = True
+    overlap: bool = True
+    wave: int = 8                 # batches coalesced per flight
+    flops_per_s: float = 10e12    # per-party local compute throughput
+    memory_batches: int = 8       # max in-flight batches (buffer limit)
+
+
+def batch_times(led: Ledger, net: NetProfile, sched: SchedConfig):
+    """(latency_time, wire_time, compute_time) for ONE batch's ledger."""
+    lat_rounds = sum(r.rounds for r in led.records if r.tag == "lat")
+    bw_rounds = sum(r.rounds for r in led.records if r.tag == "bw")
+    nbytes = led.nbytes
+    compute = led.flops / sched.flops_per_s
+    return lat_rounds, bw_rounds, nbytes, compute
+
+
+def makespan(per_batch: Ledger, n_batches: int, net: NetProfile,
+             sched: SchedConfig) -> float:
+    """End-to-end delay of n_batches identical batch ledgers."""
+    lat_rounds, bw_rounds, nbytes, compute = batch_times(per_batch, net, sched)
+    if sched.coalesce:
+        waves = max(1, -(-n_batches // sched.wave))
+        latency_total = (waves * lat_rounds + n_batches * bw_rounds) * net.latency_s
+    else:
+        latency_total = n_batches * (lat_rounds + bw_rounds) * net.latency_s
+    wire_total = n_batches * nbytes / net.bandwidth_Bps
+    compute_total = n_batches * compute
+    if sched.overlap:
+        # two-stage pipeline: the dominant resource runs continuously, the
+        # other contributes one batch of fill at the pipeline boundary
+        comm_total = latency_total + wire_total
+        if comm_total >= compute_total:
+            return comm_total + compute                # comm-bound
+        return compute_total + (lat_rounds + bw_rounds) * net.latency_s \
+            + nbytes / net.bandwidth_Bps               # compute-bound
+    return latency_total + wire_total + compute_total
+
+
+def fig7_variants(per_batch: Ledger, n_batches: int, net: NetProfile,
+                  flops_per_s: float = 10e12) -> dict[str, float]:
+    """The paper's ablation points: PMT (no IO sched) vs Ours (full)."""
+    base = SchedConfig(coalesce=False, overlap=False, flops_per_s=flops_per_s)
+    co = SchedConfig(coalesce=True, overlap=False, flops_per_s=flops_per_s)
+    ov = SchedConfig(coalesce=False, overlap=True, flops_per_s=flops_per_s)
+    full = SchedConfig(coalesce=True, overlap=True, flops_per_s=flops_per_s)
+    return {
+        "serial": makespan(per_batch, n_batches, net, base),
+        "+coalesce": makespan(per_batch, n_batches, net, co),
+        "+overlap": makespan(per_batch, n_batches, net, ov),
+        "ours": makespan(per_batch, n_batches, net, full),
+    }

@@ -1,0 +1,99 @@
+"""Offline grid search over selection schedules (paper §4.2).
+
+"The model owner schedules the selection by setting {<l_i, w_i, d_i>}
+for N phases... SelectFormer determines the schedule via offline grid
+search." This module implements that search against the calibrated cost
+model: enumerate 1/2/3-phase schedules from the paper's grid
+(d in {2,4,8,16}, l in {1,3}), price each with the IO-scheduled makespan,
+and return the Pareto set over (modeled delay, proxy capacity score).
+
+Capacity score is a cheap monotone proxy for expected selection quality:
+sum over phases of log(l*w*d) weighted by the fraction of the pool the
+phase actually scores — matching the paper's observation that capacity
+in LATER phases (which decide the final set) matters most.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core import iosched
+from repro.core.proxy import ProxySpec
+from repro.mpc import costs
+from repro.mpc.comm import NetProfile, WAN
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoredSchedule:
+    phases: tuple[ProxySpec, ...]
+    delay_s: float
+    capacity: float
+
+
+def schedule_delay(phases, n_pool: int, budget: int, *, d_model: int = 768,
+                   heads: int = 12, classes: int = 2, seq: int = 512,
+                   batch: int = 4, net: NetProfile = WAN,
+                   sched: iosched.SchedConfig | None = None) -> float:
+    sched = sched or iosched.SchedConfig()
+    remaining = n_pool
+    total = 0.0
+    dh = d_model // heads
+    for i, ph in enumerate(phases):
+        g = costs.BlockGeom(batch, seq, d_model, min(ph.n_heads, heads), dh, 0)
+        led = costs.proxy_model_cost(g, ph.n_layers, classes, ph.mlp_dim)
+        total += iosched.makespan(led, -(-remaining // batch), net, sched)
+        remaining = budget if i == len(phases) - 1 else \
+            max(budget, int(remaining * ph.selectivity))
+    return total
+
+
+def capacity_score(phases, n_pool: int, budget: int) -> float:
+    import math
+    remaining = n_pool
+    score = 0.0
+    for i, ph in enumerate(phases):
+        frac = remaining / n_pool
+        # final-phase capacity decides the purchased set: weight by the
+        # inverse of how much pool it sees (later = more selective)
+        weight = 1.0 + (i + 1) / len(phases)
+        score += weight * math.log(ph.n_layers * ph.n_heads * ph.mlp_dim) \
+            * (0.5 + 0.5 * frac)
+        remaining = budget if i == len(phases) - 1 else \
+            max(budget, int(remaining * ph.selectivity))
+    return score
+
+
+def grid_search(n_pool: int, budget_frac: float = 0.2, *, heads: int = 12,
+                max_phases: int = 3, net: NetProfile = WAN
+                ) -> list[ScoredSchedule]:
+    """Pareto frontier over (delay, capacity) for 1..max_phases."""
+    budget = int(budget_frac * n_pool)
+    dims = (2, 4, 8, 16)
+    layer_opts = (1, 3)
+    sel_opts = (0.3, 0.5)
+    cands: list[tuple[ProxySpec, ...]] = []
+    for d in dims:
+        for l in layer_opts:
+            cands.append((ProxySpec(l, heads if l > 1 else 1, d, 1.0),))
+    if max_phases >= 2:
+        for d1, d2 in itertools.product((2, 4), dims):
+            if d2 < d1:
+                continue
+            for s1 in sel_opts:
+                cands.append((ProxySpec(1, 1, d1, s1),
+                              ProxySpec(3, heads, d2, 1.0)))
+    if max_phases >= 3:
+        for d2 in (4, 8):
+            cands.append((ProxySpec(1, 1, 2, 0.5),
+                          ProxySpec(1, heads, d2, 0.5),
+                          ProxySpec(3, heads, 16, 1.0)))
+    scored = [ScoredSchedule(p, schedule_delay(p, n_pool, budget,
+                                               heads=heads, net=net),
+                             capacity_score(p, n_pool, budget))
+              for p in cands]
+    # Pareto: keep schedules not dominated in (lower delay, higher capacity)
+    pareto = [s for s in scored
+              if not any(o.delay_s <= s.delay_s and o.capacity > s.capacity
+                         or o.delay_s < s.delay_s and o.capacity >= s.capacity
+                         for o in scored)]
+    return sorted(pareto, key=lambda s: s.delay_s)

@@ -1,0 +1,198 @@
+"""The 3-stage private selection workflow (paper §4.1, Figure 1/3).
+
+Stage 1 (clear): exchange metadata, purchase bootstrap sample S_boot.
+Stage 2 (MPC):   N-phase progressive sieve. Phase i scores surviving
+                 candidates with proxy M̂_i (encrypted entropy) and keeps
+                 the top alpha_i fraction via QuickSelect over secure
+                 comparisons (only comparison bits revealed).
+Stage 3 (clear): transaction; optional appraisal = mean entropy of S_N.
+
+Two execution modes share the same control flow:
+  mode="clear"  float proxies (fast; used for efficacy experiments and
+                as the numerical reference)
+  mode="mpc"    share-level proxies over the RING64 oracle ring with the
+                ambient cost Ledger recording every wire interaction
+
+Phase boundaries checkpoint the surviving index set — a natural
+fault-tolerance barrier (runtime/ft.py restores an interrupted
+selection from the last completed phase).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import proxy as proxy_mod, target as target_mod
+from repro.core.proxy import ProxySpec
+from repro.mpc import quickselect
+from repro.mpc.sharing import share, AShare
+from repro.mpc.ring import RING64
+
+
+@dataclasses.dataclass
+class SelectionConfig:
+    phases: list[ProxySpec]
+    budget_frac: float = 0.20         # B / |D|
+    boot_frac: float = 0.05           # bootstrap share of the pool
+    score_batch: int = 64
+    exvivo_steps: int = 300
+    invivo_steps: int = 150
+    finetune_steps: int = 200
+    mode: str = "clear"               # or "mpc"
+    checkpoint_dir: str | None = None
+    variant: frozenset = frozenset({"sm", "ln", "se"})  # Table 2/3 ablations
+
+
+@dataclasses.dataclass
+class SelectionResult:
+    selected: np.ndarray              # indices into the pool
+    boot_idx: np.ndarray
+    phase_survivors: list[np.ndarray]
+    appraisal_entropy: float
+
+
+def two_phase_default(seq_len_heads: int = 12) -> list[ProxySpec]:
+    """The paper's main schedule: <1 layer, 1 head, d=2> -> <3, all, 16>."""
+    return [ProxySpec(1, 1, 2, selectivity=0.5),
+            ProxySpec(3, seq_len_heads, 16, selectivity=1.0)]
+
+
+def _phase_keep(n_pool: int, budget: int, phases: list[ProxySpec]) -> list[int]:
+    """Survivor counts per phase ending exactly at the budget."""
+    keeps = []
+    cur = n_pool
+    for i, ph in enumerate(phases):
+        if i == len(phases) - 1:
+            keeps.append(budget)
+        else:
+            cur = max(budget, int(round(cur * ph.selectivity)))
+            keeps.append(cur)
+    return keeps
+
+
+def _score_clear(pp, cfg, tokens, spec,
+                 variant=frozenset({"sm", "ln", "se"})) -> np.ndarray:
+    fn = jax.jit(lambda t: proxy_mod.proxy_entropy_clear(pp, cfg, t, spec,
+                                                         variant))
+    out = []
+    for i in range(0, tokens.shape[0], 256):
+        out.append(np.asarray(fn(tokens[i:i + 256])))
+    return np.concatenate(out)
+
+
+def _score_mpc(key, pp, cfg, tokens, spec, batch: int) -> AShare:
+    """Returns encrypted entropy shares for every candidate."""
+    pp_sh = proxy_mod.share_proxy(jax.random.fold_in(key, 1), pp)
+    ents = []
+    for i in range(0, tokens.shape[0], batch):
+        tok = tokens[i:i + batch]
+        x = jnp.take(pp["embed"], tok, axis=0) * (cfg.d_model ** 0.5)
+        key, kx, kf = jax.random.split(key, 3)
+        x_sh = share(kx, x.astype(jnp.float32))
+        ents.append(proxy_mod.proxy_entropy_mpc(pp_sh, cfg, x_sh, spec, kf))
+    sh = jnp.concatenate([e.sh for e in ents], axis=1)
+    return AShare(sh, ents[0].ring)
+
+
+def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
+                  sel: SelectionConfig, *, n_classes: int,
+                  boot_labels_fn=None) -> SelectionResult:
+    """Full pipeline. `boot_labels_fn(idx) -> labels` models the clear
+    purchase of the bootstrap sample (labels delivered with the data)."""
+    n = pool_tokens.shape[0]
+    budget = int(round(sel.budget_frac * n))
+    n_boot = max(8, int(round(sel.boot_frac * n)))
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2 ** 31 - 1)))
+
+    # ---- stage 1: bootstrap purchase (random, clear) --------------------
+    boot_idx = np.sort(rng.choice(n, size=n_boot, replace=False))
+    boot_tokens = pool_tokens[boot_idx]
+    boot_labels = boot_labels_fn(boot_idx)
+
+    # ---- proxy generation (model-owner side, clear) ---------------------
+    max_l = max(ph.n_layers for ph in sel.phases)
+    key, kg, kf = jax.random.split(key, 3)
+    m_g = proxy_mod.extract_backbone(target_params, max_l)
+    m_g, _ = target_mod.finetune(kf, m_g, cfg, boot_tokens, boot_labels,
+                                 steps=sel.finetune_steps, n_layers=max_l)
+    proxies = []
+    for ph in sel.phases:
+        key, ks, kb, ki = jax.random.split(key, 4)
+        stats = proxy_mod.collect_stats(m_g, cfg, boot_tokens[:256], ph)
+        pp = proxy_mod.build_proxy(kb, m_g, cfg, stats, ph,
+                                   seq_len=pool_tokens.shape[1],
+                                   n_classes=n_classes,
+                                   exvivo_steps=sel.exvivo_steps)
+        pp = proxy_mod.invivo_finetune(ki, pp, cfg, boot_tokens, boot_labels,
+                                       ph, steps=sel.invivo_steps)
+        proxies.append(pp)
+
+    # ---- stage 2: multi-phase MPC sieve ----------------------------------
+    surviving = np.setdiff1d(np.arange(n), boot_idx)
+    keeps = _phase_keep(len(surviving), budget - n_boot, sel.phases)
+    survivors_log = []
+    appraisal = 0.0
+    for pi, (ph, pp, keep) in enumerate(zip(sel.phases, proxies, keeps)):
+        tok = pool_tokens[surviving]
+        if sel.mode == "mpc":
+            key, ks, kq = jax.random.split(key, 3)
+            ent_sh = _score_mpc(ks, pp, cfg, tok, ph, sel.score_batch)
+            top_local = quickselect.top_k_indices(ent_sh, keep,
+                                                  seed=1234 + pi)
+            appraisal = float(jnp.mean(
+                (ent_sh[np.asarray(top_local)].sh[0]
+                 + ent_sh[np.asarray(top_local)].sh[1]).astype(jnp.float64)
+                / ent_sh.ring.scale))
+        else:
+            ents = _score_clear(pp, cfg, tok, ph, sel.variant)
+            top_local = np.argsort(ents)[-keep:]
+            appraisal = float(np.mean(ents[top_local]))
+        surviving = np.sort(surviving[top_local])
+        survivors_log.append(surviving.copy())
+        _checkpoint_phase(sel, pi, surviving)
+
+    selected = np.sort(np.concatenate([boot_idx, surviving]))
+    return SelectionResult(selected, boot_idx, survivors_log, appraisal)
+
+
+def _checkpoint_phase(sel: SelectionConfig, phase: int, surviving) -> None:
+    if not sel.checkpoint_dir:
+        return
+    os.makedirs(sel.checkpoint_dir, exist_ok=True)
+    path = os.path.join(sel.checkpoint_dir, f"phase_{phase}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"phase": phase, "surviving": surviving.tolist()}, f)
+    os.replace(tmp, path)
+
+
+def appraise_threshold(ent_sh: AShare, idx, threshold: float, key) -> bool:
+    """Paper §4.1 appraisal: if the average entropy of the selected set is
+    sensitive, jointly compare the (encrypted) average against a public
+    threshold and reveal ONLY the one-bit outcome."""
+    from repro.mpc import ops as mops, compare
+    sel = ent_sh[np.asarray(idx)]
+    avg = mops.mean(sel, axis=0, key=jax.random.fold_in(key, 1))
+    thr = mops.add_public(mops.neg(avg), threshold)      # thr - avg
+    bit = compare.reveal_lt(thr, AShare(jnp.zeros_like(thr.sh), thr.ring))
+    return bool(np.asarray(bit))                         # avg > threshold
+
+
+def resume_phase(sel: SelectionConfig) -> tuple[int, np.ndarray] | None:
+    """Restart support: latest completed phase's survivor set."""
+    if not sel.checkpoint_dir or not os.path.isdir(sel.checkpoint_dir):
+        return None
+    best = None
+    for f in os.listdir(sel.checkpoint_dir):
+        if f.startswith("phase_") and f.endswith(".json"):
+            with open(os.path.join(sel.checkpoint_dir, f)) as fh:
+                d = json.load(fh)
+            if best is None or d["phase"] > best[0]:
+                best = (d["phase"], np.asarray(d["surviving"]))
+    return best

@@ -1,0 +1,93 @@
+"""Classifier targets for the paper's experiments.
+
+The paper finetunes BERT/DistilBERT/ViT on selected data and reports test
+accuracy. We model the target as a bidirectional encoder from the zoo +
+mean-pool classification head. The same apply function serves (a) Oracle
+selection scoring, (b) final train-on-selected-data, (c) M_g (the proxy
+backbone) finetuning on the bootstrap sample.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, transformer as T
+
+
+def init_classifier(key, cfg: ArchConfig, n_classes: int):
+    k1, k2 = jax.random.split(key)
+    params = T.init_params(k1, cfg)
+    params["cls_head"] = common.dense_init(k2, (cfg.d_model, n_classes))
+    return params
+
+
+def encode(params, cfg: ArchConfig, tokens, *, n_layers: int | None = None):
+    """Bidirectional encoder features (optionally only bottom n_layers)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.float32)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(x.shape[1])
+    layers = params["layers"]
+    if n_layers is not None:
+        layers = jax.tree.map(lambda a: a[:n_layers], layers)
+
+    def fn(x, lp):
+        y, _, aux = T._decoder_layer(x, lp, cfg, mask_kind="bidir",
+                                     positions=positions)
+        return y, aux
+    x, _ = T._scan_uniform(x, layers, fn, remat=False)
+    return common.apply_norm(x, params["final_norm"], cfg.norm_type)
+
+
+def classifier_logits(params, cfg: ArchConfig, tokens, *,
+                      n_layers: int | None = None):
+    x = encode(params, cfg, tokens, n_layers=n_layers)
+    pooled = jnp.mean(x, axis=1)
+    return pooled @ params["cls_head"].astype(pooled.dtype)
+
+
+def prediction_entropy(params, cfg: ArchConfig, tokens, **kw):
+    logits = classifier_logits(params, cfg, tokens, **kw)
+    p = jax.nn.softmax(logits, axis=-1)
+    return -jnp.sum(p * jnp.log(p + 1e-9), axis=-1)
+
+
+def finetune(key, params, cfg: ArchConfig, tokens, labels, *,
+             steps: int = 200, batch: int = 32, lr: float = 1e-3,
+             n_layers: int | None = None):
+    """Plain Adam finetune of the classifier (clear, model-owner side)."""
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, tok, lab):
+        logits = classifier_logits(p, cfg, tok, n_layers=n_layers)
+        return common.cross_entropy(logits[:, None], lab[:, None])
+
+    @jax.jit
+    def step(p, m, v, tok, lab, i):
+        loss, g = jax.value_and_grad(loss_fn)(p, tok, lab)
+        m = jax.tree.map(lambda m, g: 0.9 * m + 0.1 * g, m, g)
+        v = jax.tree.map(lambda v, g: 0.999 * v + 0.001 * g * g, v, g)
+        mh = jax.tree.map(lambda m: m / (1 - 0.9 ** (i + 1.0)), m)
+        vh = jax.tree.map(lambda v: v / (1 - 0.999 ** (i + 1.0)), v)
+        p = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + 1e-8),
+                         p, mh, vh)
+        return p, m, v, loss
+
+    n = tokens.shape[0]
+    loss = jnp.inf
+    for i in range(steps):
+        key, k = jax.random.split(key)
+        idx = jax.random.randint(k, (min(batch, n),), 0, n)
+        params, m, v, loss = step(params, m, v, tokens[idx], labels[idx],
+                                  jnp.float32(i))
+    return params, float(loss)
+
+
+def accuracy(params, cfg: ArchConfig, tokens, labels, batch: int = 256) -> float:
+    hits = 0
+    fn = jax.jit(lambda tok: jnp.argmax(classifier_logits(params, cfg, tok), -1))
+    for i in range(0, tokens.shape[0], batch):
+        pred = fn(tokens[i:i + batch])
+        hits += int(jnp.sum(pred == labels[i:i + batch]))
+    return hits / tokens.shape[0]

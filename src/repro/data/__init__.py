@@ -1,0 +1,2 @@
+from repro.data.tasks import make_classification_task, ClassTask
+from repro.data.pipeline import DataPipeline, synth_lm_batch

@@ -1,0 +1,63 @@
+"""Fused softmax+entropy over logits — the Oracle's scoring op.
+
+H(row) = m + log(z) - s/z with online accumulators over vocab tiles:
+  m = running max, z = sum exp(x - m), s = sum x * exp(x - m).
+One pass over the (R, V) logits; never materializes probabilities.
+(SelectFormer's MLP_se replaces exactly this computation under MPC; on
+TPU in the clear this kernel is the fair baseline for benchmarks.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, o_ref, m_acc, z_acc, s_acc, *, nv: int):
+    iv = pl.program_id(1)
+
+    @pl.when(iv == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        z_acc[...] = jnp.zeros_like(z_acc)
+        s_acc[...] = jnp.zeros_like(s_acc)
+
+    x = x_ref[...].astype(jnp.float32)                     # (br, bv)
+    m_new = jnp.maximum(m_acc[...], jnp.max(x, -1, keepdims=True))
+    alpha = jnp.exp(m_acc[...] - m_new)
+    e = jnp.exp(x - m_new)
+    z_acc[...] = z_acc[...] * alpha + jnp.sum(e, -1, keepdims=True)
+    s_acc[...] = s_acc[...] * alpha + jnp.sum(x * e, -1, keepdims=True)
+    m_acc[...] = m_new
+
+    @pl.when(iv == nv - 1)
+    def _epilogue():
+        z = jnp.maximum(z_acc[...], 1e-30)
+        h = m_acc[...] + jnp.log(z) - s_acc[...] / z
+        o_ref[...] = h[:, 0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bv", "interpret"))
+def entropy_head(logits, *, br: int = 256, bv: int = 512,
+                 interpret: bool = False):
+    """logits: (R, V) -> entropy (R,) in fp32."""
+    r, v = logits.shape
+    br = min(br, r)
+    bv = min(bv, v)
+    assert r % br == 0 and v % bv == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, nv=v // bv),
+        grid=(r // br, v // bv),
+        in_specs=[pl.BlockSpec((br, bv), lambda ir, iv: (ir, iv))],
+        out_specs=pl.BlockSpec((br,), lambda ir, iv: (ir,)),
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((br, 1), jnp.float32),
+                        pltpu.VMEM((br, 1), jnp.float32),
+                        pltpu.VMEM((br, 1), jnp.float32)],
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,84 @@
+"""Exact-softmax flash attention (baseline / target models).
+
+Standard online-softmax tiling: grid (BH, Sq/bq, Skv/bk) with KV
+innermost; running (m, l, acc) in VMEM scratch; causal variant skips
+fully-masked KV tiles at runtime via pl.when (the compute is elided on
+TPU because the MXU issue itself sits under the predicate).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_acc, l_acc, acc,
+            *, nk: int, bq: int, bk: int, scale: float, causal: bool):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+        l_acc[...] = jnp.zeros_like(l_acc)
+        acc[...] = jnp.zeros_like(acc)
+
+    run = (not causal) or (ik * bk <= iq * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m_acc[...], jnp.max(s, -1, keepdims=True))
+        alpha = jnp.exp(m_acc[...] - m_new)
+        p = jnp.exp(s - m_new)
+        l_acc[...] = l_acc[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc[...] = acc[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_acc[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _epilogue():
+        o_ref[0, ...] = (acc[...] / jnp.maximum(l_acc[...], 1e-30)
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attn(q, k, v, *, causal: bool = True, bq: int = 128,
+               bk: int = 128, interpret: bool = False):
+    """q,k,v: (BH, S, Dh) -> (BH, S, Dh)."""
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    nq, nk = sq // bq, skv // bk
+    scale = dh ** -0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk, bq=bq, bk=bk, scale=scale,
+                          causal=causal),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,90 @@
+"""Fused MLP-softmax attention — the paper's hot spot, TPU-native.
+
+SelectFormer replaces softmax(scores) with a 2-layer MLP along the KV
+axis: probs = relu(S @ W1 + b1) @ W2 + b2. We exploit associativity:
+
+    out = probs @ V
+        = relu(S @ W1 + b1) @ (W2 @ V)  +  b2 @ V
+                 \_ H _/        \_ U _/     \_ u0 _/
+
+so the (Sq x Skv) probs matrix NEVER materializes: the kernel streams KV
+tiles, accumulating the tiny H = S @ W1 (bq x hid) in VMEM, then applies
+one fused epilogue H_relu @ U. HBM traffic per q tile: Q, K tiles, and a
+(bq x Dh) output — probs never leave VMEM (they never even exist).
+
+Grid: (BH, Sq/bq, Skv/bk), KV innermost. Scratch: H (bq, hid) f32,
+persisting across the KV loop (TPU sequential grid semantics).
+
+MXU alignment: bq, bk multiples of 128; hid is zero-padded to >= 128 by
+ops.py (the pad columns of W1 are zero, contributing nothing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, w1_ref, b1_ref, u_ref, u0_ref, o_ref, h_acc,
+            *, nk: int, scale: float):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        h_acc[...] = jnp.zeros_like(h_acc)
+
+    q = q_ref[0].astype(jnp.float32)                      # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    w1 = w1_ref[...].astype(jnp.float32)                  # (bk, hid)
+    h_acc[...] += jnp.dot(s, w1, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _epilogue():
+        h = jax.nn.relu(h_acc[...] + b1_ref[...].astype(jnp.float32))
+        u = u_ref[0].astype(jnp.float32)                  # (hid, dh)
+        out = jnp.dot(h, u, preferred_element_type=jnp.float32)
+        o_ref[0, ...] = (out + u0_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def mlp_softmax_attn(q, k, v, w1, b1, w2, b2, *, bq: int = 128,
+                     bk: int = 128, interpret: bool = False):
+    """q,k,v: (BH, S, Dh); w1: (S, hid); w2: (hid, S); b1: (hid,); b2: (S,)."""
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    hid = w1.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0
+    nq, nk = sq // bq, skv // bk
+    scale = dh ** -0.5
+
+    # precompute U = W2 @ V and u0 = b2 @ V (cheap: hid*S*dh, 1*S*dh)
+    u = jnp.einsum("hs,bsd->bhd", w2.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    u0 = jnp.einsum("s,bsd->bd", b2.astype(jnp.float32),
+                    v.astype(jnp.float32))[:, None]
+
+    grid = (bh, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((bk, hid), lambda b, iq, ik: (ik, 0)),
+            pl.BlockSpec((hid,), lambda b, iq, ik: (0,)),
+            pl.BlockSpec((1, hid, dh), lambda b, iq, ik: (b, 0, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b, iq, ik: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, hid), jnp.float32)],
+        interpret=interpret,
+    )(q, k, w1, b1, u, u0)
+    return out

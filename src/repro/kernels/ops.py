@@ -1,0 +1,85 @@
+"""Dispatch wrappers: Pallas kernel on TPU, interpret/ref elsewhere.
+
+`use_pallas()` — TPU backend gets compiled kernels; CPU gets either
+interpret-mode kernels (tests: numerics of the kernel body itself) or
+the jnp reference (fast path for examples). Callers can force either
+via the `impl` argument ("pallas" | "interpret" | "ref" | "auto").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.mlp_softmax_attn import mlp_softmax_attn as _msa
+from repro.kernels.flash_attn import flash_attn as _fa
+from repro.kernels.entropy_head import entropy_head as _eh
+from repro.kernels.ssd import ssd_chunked as _ssd
+from repro.kernels.rg_lru import rg_lru_scan as _lru
+from repro.kernels.secure_matmul import secure_matmul as _smm
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if on_tpu() else "ref"
+
+
+def mlp_softmax_attn(q, k, v, w1, b1, w2, b2, *, impl="auto", **kw):
+    m = _mode(impl)
+    if m == "ref":
+        return _ref.mlp_softmax_attn(q, k, v, w1, b1, w2, b2)
+    return _msa(q, k, v, w1, b1, w2, b2, interpret=(m == "interpret"), **kw)
+
+
+def flash_attn(q, k, v, *, causal=True, impl="auto", **kw):
+    m = _mode(impl)
+    if m == "ref":
+        return _ref.flash_attn(q, k, v, causal=causal)
+    return _fa(q, k, v, causal=causal, interpret=(m == "interpret"), **kw)
+
+
+def entropy_head(logits, *, impl="auto", **kw):
+    m = _mode(impl)
+    if m == "ref":
+        return _ref.entropy_head(logits)
+    return _eh(logits, interpret=(m == "interpret"), **kw)
+
+
+def ssd_chunked(x, a, b, c, *, chunk=128, impl="auto", **kw):
+    """x: (B, T, H, P), a: (B, T, H), b/c: (B, T, N) — layout adapter
+    around the kernel's (B, H, nc, Q, ...) arrangement."""
+    m = _mode(impl)
+    if m == "ref":
+        return _ref.ssd(x, a, b, c)
+    bs, t, h, p = x.shape
+    q = min(chunk, t)
+    assert t % q == 0
+    nc = t // q
+    xk = jnp.moveaxis(x.reshape(bs, nc, q, h, p), 3, 1)       # B H nc Q P
+    ak = jnp.moveaxis(a.reshape(bs, nc, q, h), 3, 1)          # B H nc Q
+    bk = b.reshape(bs, nc, q, -1)
+    ck = c.reshape(bs, nc, q, -1)
+    y = _ssd(xk, ak, bk, ck, interpret=(m == "interpret"), **kw)
+    return jnp.moveaxis(y, 1, 3).reshape(bs, t, h, p)
+
+
+def rg_lru_scan(a, b, *, impl="auto", **kw):
+    m = _mode(impl)
+    if m == "ref":
+        return _ref.rg_lru(a, b)
+    return _lru(a, b, interpret=(m == "interpret"), **kw)
+
+
+def secure_matmul(eps, dlt, a_sh, b_sh, c_sh, *, impl="auto", **kw):
+    m = _mode(impl)
+    if m == "ref":
+        return jnp.stack([
+            _ref.secure_matmul_combine(eps, dlt, a_sh[0], b_sh[0], c_sh[0], 0),
+            _ref.secure_matmul_combine(eps, dlt, a_sh[1], b_sh[1], c_sh[1], 1),
+        ])
+    return _smm(eps, dlt, a_sh, b_sh, c_sh, interpret=(m == "interpret"), **kw)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_softmax_attn(q, k, v, w1, b1, w2, b2, *, scale=None):
+    """SelectFormer MLP-approximated attention, materialized form.
+
+    q,k,v: (BH, S, Dh); w1: (S, hid); b1: (hid,); w2: (hid, S); b2: (S,).
+    probs = relu(scores @ w1 + b1) @ w2 + b2  (the paper's MLP_sm),
+    out = probs @ v.
+    """
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    h = jax.nn.relu(s @ w1.astype(jnp.float32) + b1)
+    probs = h @ w2.astype(jnp.float32) + b2
+    return jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32))
+
+
+def flash_attn(q, k, v, *, causal=True, scale=None):
+    """Exact softmax attention. q,k,v: (BH, S, Dh)."""
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = s.shape[-2:]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), sk - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+def entropy_head(logits):
+    """H = logZ - E_p[x] per row. logits: (R, V) -> (R,)."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, -1, keepdims=True)
+    e = jnp.exp(x - m)
+    z = jnp.sum(e, -1)
+    s = jnp.sum(x * e, -1)
+    return m[:, 0] + jnp.log(z) - s / z
+
+
+def ssd(x, a, b, c):
+    """Sequential state-space scan oracle.
+
+    x: (B, T, H, P) (dt-scaled inputs), a: (B, T, H) log decays,
+    b, c: (B, T, N). Returns y: (B, T, H, P).
+    """
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = state * jnp.exp(a_t)[..., None, None] \
+            + jnp.einsum("bn,bhp->bhpn", b_t, x_t)
+        y = jnp.einsum("bn,bhpn->bhp", c_t, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    s0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def rg_lru(a, bterm, h0=None):
+    """h_t = a_t * h_{t-1} + b_t. a, b: (B, T, D). Returns h trace."""
+    bsz, t, d = a.shape
+    h = jnp.zeros((bsz, d), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bterm, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def secure_matmul_combine(eps, dlt, a_sh, b_sh, c_sh, party: int):
+    """One party's Beaver combine: z_p = c_p + eps@b_p + a_p@dlt (+p0: eps@dlt).
+
+    All int32 ring arithmetic (wrapping). eps/dlt are the opened masked
+    values; *_sh are this party's triple shares.
+    """
+    z = c_sh \
+        + jnp.matmul(eps, b_sh, preferred_element_type=jnp.int32) \
+        + jnp.matmul(a_sh, dlt, preferred_element_type=jnp.int32)
+    if party == 0:
+        z = z + jnp.matmul(eps, dlt, preferred_element_type=jnp.int32)
+    return z

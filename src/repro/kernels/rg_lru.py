@@ -1,0 +1,53 @@
+"""RG-LRU linear recurrence kernel: h_t = a_t * h_{t-1} + b_t.
+
+Grid (B, T/bt), time tiles innermost; the (1, D) state persists in VMEM
+scratch across tiles. Inside a tile the recurrence is a fori_loop over
+the bt steps — serial in time but D-wide on the VPU, with all operands
+VMEM-resident (one HBM read of (a, b) and one write of h per tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h_ref, state, *, bt: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    a = a_ref[0].astype(jnp.float32)                       # (bt, D)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    state[0] = jax.lax.fori_loop(0, bt, step, state[0])
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def rg_lru_scan(a, b, *, bt: int = 128, interpret: bool = False):
+    """a, b: (B, T, D) -> h trace (B, T, D)."""
+    bsz, t, d = a.shape
+    bt = min(bt, t)
+    assert t % bt == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        grid=(bsz, t // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, d), lambda ib, it: (ib, it, 0)),
+            pl.BlockSpec((1, bt, d), lambda ib, it: (ib, it, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, d), lambda ib, it: (ib, it, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, t, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,84 @@
+"""Beaver-combine matmul on the int32 TPU ring (both parties fused).
+
+Computes, in one pass over K tiles (exact wrapping int32 arithmetic):
+  z_p = c_p + eps @ b_p + a_p @ dlt   (+ party0 only: eps @ dlt)
+
+This is the per-party local step of a secure matmul after (eps, dlt) are
+opened; it is the bandwidth-bound hot loop of the MPC selection phase.
+Grid (M/bm, N/bn, K/bk), K innermost, int32 accumulator in VMEM.
+
+TPU note: int32 multiplies run on the VPU; an MXU path would decompose
+into 4x int8 partial products (left as the documented perf follow-up —
+correctness here is exact ring arithmetic, validated in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(eps_ref, dlt_ref, a0_ref, a1_ref, b0_ref, b1_ref,
+            c0_ref, c1_ref, z0_ref, z1_ref, acc0, acc1, *, nk: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc0[...] = jnp.zeros_like(acc0)
+        acc1[...] = jnp.zeros_like(acc1)
+
+    eps = eps_ref[...]
+    dlt = dlt_ref[...]
+    for acc, a_r, b_r, p0 in ((acc0, a0_ref, b0_ref, True),
+                              (acc1, a1_ref, b1_ref, False)):
+        z = jnp.dot(eps, b_r[0], preferred_element_type=jnp.int32) \
+            + jnp.dot(a_r[0], dlt, preferred_element_type=jnp.int32)
+        if p0:
+            z = z + jnp.dot(eps, dlt, preferred_element_type=jnp.int32)
+        acc[...] += z
+
+    @pl.when(ik == nk - 1)
+    def _epilogue():
+        z0_ref[...] = acc0[...] + c0_ref[0]
+        z1_ref[...] = acc1[...] + c1_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def secure_matmul(eps, dlt, a_sh, b_sh, c_sh, *, bm: int = 128,
+                  bn: int = 128, bk: int = 128, interpret: bool = False):
+    """eps: (M, K), dlt: (K, N) opened int32; a_sh/b_sh/c_sh: (2, ...) share
+    stacks. Returns z_sh (2, M, N) — both parties' combine in one launch
+    (single-pod simulation layout; on the 2-pod mesh each pod runs its
+    party's half via the pod-sharded leading axis)."""
+    m, kdim = eps.shape
+    n = dlt.shape[1]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
+    z = pl.pallas_call(
+        functools.partial(_kernel, nk=kdim // bk),
+        grid=(m // bm, n // bn, kdim // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda im, in_, ik: (im, ik)),
+            pl.BlockSpec((bk, bn), lambda im, in_, ik: (ik, in_)),
+            pl.BlockSpec((1, bm, bk), lambda im, in_, ik: (0, im, ik)),
+            pl.BlockSpec((1, bm, bk), lambda im, in_, ik: (0, im, ik)),
+            pl.BlockSpec((1, bk, bn), lambda im, in_, ik: (0, ik, in_)),
+            pl.BlockSpec((1, bk, bn), lambda im, in_, ik: (0, ik, in_)),
+            pl.BlockSpec((1, bm, bn), lambda im, in_, ik: (0, im, in_)),
+            pl.BlockSpec((1, bm, bn), lambda im, in_, ik: (0, im, in_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda im, in_, ik: (im, in_)),
+            pl.BlockSpec((bm, bn), lambda im, in_, ik: (im, in_)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((m, n), jnp.int32),
+                   jax.ShapeDtypeStruct((m, n), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32),
+                        pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(eps, dlt, a_sh[0][None], a_sh[1][None], b_sh[0][None], b_sh[1][None],
+      c_sh[0][None], c_sh[1][None])
+    return jnp.stack(z)

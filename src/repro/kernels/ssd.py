@@ -1,0 +1,77 @@
+"""Mamba-2 chunked SSD kernel with VMEM-resident inter-chunk state.
+
+Layout (pre-arranged by ops.py): x (B, H, nc, Q, P), a (B, H, nc, Q),
+b/c (B, nc, Q, N) shared across heads. Grid (B, H, nc), chunks innermost;
+the (P, N) running state lives in VMEM scratch across the chunk loop —
+one HBM round-trip per chunk tile instead of per step.
+
+Per chunk: intra-chunk quadratic term  y_d = ((C B^T) ⊙ L) X
+           state read                  y_o = C S_prev * exp(cum)
+           state update                S   = S exp(sum a) + (B dX)^T-agg
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state, *, q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)                 # (Q, P)
+    a = a_ref[0, 0, 0, 0].astype(jnp.float32)              # (Q,)
+    b = b_ref[0, 0].astype(jnp.float32)                    # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)                    # (Q, N)
+
+    cum = jnp.cumsum(a)                                    # (Q,)
+    seg = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l_mat = jnp.where(tri, jnp.exp(seg), 0.0)              # (Q, Q)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_diag = jnp.dot(scores * l_mat, x, preferred_element_type=jnp.float32)
+
+    decay_in = jnp.exp(cum)[:, None]                       # (Q, 1)
+    y_off = jnp.dot(c, state[...].T,
+                    preferred_element_type=jnp.float32) * decay_in  # (Q, P)
+
+    chunk_sum = cum[q - 1]
+    decay_out = jnp.exp(chunk_sum - cum)[:, None]          # (Q, 1)
+    new_contrib = jax.lax.dot_general(
+        x * decay_out, b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (P, N)
+    state[...] = state[...] * jnp.exp(chunk_sum) + new_contrib
+
+    y_ref[0, 0, 0, ...] = (y_diag + y_off).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunked(x, a, b, c, *, interpret: bool = False):
+    """x: (B, H, nc, Q, P); a: (B, H, nc, Q); b,c: (B, nc, Q, N)."""
+    bs, h, nc, q, p = x.shape
+    n = b.shape[-1]
+    a4 = a[..., None, :]                                   # (B, H, nc, 1, Q)
+    return pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=(bs, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1, q), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda ib, ih, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda ib, ih, ic: (ib, ic, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, q, p),
+                               lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, h, nc, q, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a4, b, c)

@@ -1,0 +1,4 @@
+# Launch layer: mesh.py / dryrun.py / train.py / serve.py / select.py.
+# NOTE: dryrun.py must be started as its own process (python -m
+# repro.launch.dryrun) — it sets XLA_FLAGS for 512 host devices before
+# importing jax and must not be imported into a live session.

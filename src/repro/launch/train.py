@@ -1,0 +1,135 @@
+"""Training driver: data pipeline + sharded train step + checkpoint/
+restart + fault-tolerance hooks.
+
+Runs at any scale: on the CPU container it trains smoke configs end to
+end (examples/quickstart.py); on a pod it is the same code with the
+production mesh. The loop structure is the deliverable: deterministic
+resume (data state is (seed, step)), async checkpoints, heartbeat +
+straggler-mitigated input pipeline, optional gradient compression.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, restore_checkpoint, latest_step
+from repro.configs.base import load_arch, ARCH_IDS
+from repro.data.pipeline import DataPipeline
+from repro.launch.mesh import make_host_mesh, data_shards
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.parallel.sharding import (ShardRules, param_specs, rules_scope,
+                                     batch_spec)
+from repro.runtime.ft import HeartbeatMonitor, StragglerMitigator, retry
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    arch: str = "qwen2_0_5b"
+    smoke: bool = True
+    steps: int = 50
+    batch: int = 8
+    seq: int = 128
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 20
+    model_parallel: int = 1
+    seed: int = 0
+    log_every: int = 10
+    remat: bool = True
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, remat: bool):
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            partial(T.train_loss, remat=remat), has_aux=True)(
+                params, cfg, batch)
+        params, opt_state, stats = adamw_update(params, grads, opt_state,
+                                                opt_cfg)
+        return params, opt_state, loss, stats["grad_norm"]
+    return train_step
+
+
+def train(tc: TrainConfig) -> dict:
+    cfg = load_arch(tc.arch, smoke=tc.smoke)
+    mesh = make_host_mesh(tc.model_parallel)
+    rules = ShardRules(mesh)
+    if cfg.family == "moe":
+        g = data_shards(mesh)
+        if (tc.batch * tc.seq) % g == 0:
+            cfg = dataclasses.replace(cfg, moe_groups=g)
+    opt_cfg = AdamWConfig(total_steps=tc.steps, warmup_steps=max(tc.steps // 10, 1))
+
+    key = jax.random.key(tc.seed)
+    with rules_scope(rules):
+        params = T.init_params(key, cfg)
+        opt_state = init_opt_state(params)
+        p_shard = param_specs(params, rules)
+        o_shard = param_specs(opt_state, rules)
+        params = jax.device_put(params, p_shard)
+        opt_state = jax.device_put(opt_state, o_shard)
+
+        # ---- restore ----------------------------------------------------
+        start_step = 0
+        restored, step_found = restore_checkpoint(
+            tc.ckpt_dir, {"params": params, "opt": opt_state})
+        if step_found is not None:
+            params = jax.device_put(restored["params"], p_shard)
+            opt_state = jax.device_put(restored["opt"], o_shard)
+            start_step = step_found
+            print(f"[train] resumed from step {start_step}")
+
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, tc.remat),
+                          in_shardings=(p_shard, o_shard, None),
+                          donate_argnums=(0, 1))
+
+        pipe = DataPipeline(tc.seed, tc.batch, tc.seq, cfg.vocab_size,
+                            start_step=start_step)
+        ckpt = AsyncCheckpointer(tc.ckpt_dir)
+        hb = HeartbeatMonitor(n_hosts=1, timeout_s=60)
+        strag = StragglerMitigator()
+        losses = []
+        t0 = time.time()
+        for step in range(start_step, tc.steps):
+            batch_np = strag.run(lambda: next(pipe), backup=lambda: next(pipe))
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt_state, loss, gnorm = step_fn(params, opt_state, batch)
+            hb.beat(0)
+            losses.append(float(loss))
+            if (step + 1) % tc.log_every == 0:
+                print(f"[train] step {step + 1} loss {float(loss):.4f} "
+                      f"gnorm {float(gnorm):.3f} "
+                      f"({(step + 1 - start_step) / (time.time() - t0):.2f} it/s)")
+            if (step + 1) % tc.ckpt_every == 0 or step + 1 == tc.steps:
+                ckpt.save(step + 1, {"params": params, "opt": opt_state})
+        ckpt.wait()
+        pipe.close()
+    return {"final_loss": losses[-1] if losses else None,
+            "first_loss": losses[0] if losses else None,
+            "healthy": hb.healthy(), "backups": strag.backups_fired,
+            "resumed_from": start_step}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_0_5b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (pod scale) instead of smoke")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+    out = train(TrainConfig(arch=args.arch, smoke=not args.full,
+                            steps=args.steps, batch=args.batch, seq=args.seq,
+                            ckpt_dir=args.ckpt_dir))
+    print("[train] done:", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Composable model zoo.
+
+All models are pure-functional pytrees + apply functions. Layer parameters
+are stacked on a leading axis and consumed with jax.lax.scan so the HLO is
+O(1) in depth (critical for 512-device dry-run compile times on one CPU).
+
+Modules:
+  common.py       norms, rope, activations, initializers, masks
+  attention.py    GQA attention: full / chunked-flash(XLA) / decode / local
+  ffn.py          dense GLU/MLP and top-k MoE (capacity gather dispatch)
+  rglru.py        Griffin RG-LRU recurrent block (associative scan)
+  ssd.py          Mamba-2 SSD mixer (chunked) + single-step decode
+  transformer.py  decoder-only LM / enc-dec assembly, prefill/decode paths
+"""
+from repro.models.transformer import (
+    init_params, forward_logits, train_loss, prefill, decode_step,
+    init_cache,
+)

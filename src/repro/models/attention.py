@@ -1,0 +1,149 @@
+"""GQA attention: full / XLA-chunked-flash / decode-with-cache / local.
+
+The chunked path is the dry-run/compile path (pure XLA, scan-based online
+softmax, O(q_chunk * kv_chunk) live scores). On TPU the Pallas kernels in
+repro.kernels take over via ops-level dispatch; numerics match ref.py.
+
+Layout convention: q (B, S, H, Dh), k/v (B, S, K, Dh) with H = K * G.
+Grouped matmuls keep the K axis explicit so GSPMD can shard heads without
+materializing repeated KV.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def _split_groups(q, n_kv: int):
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, dh)
+
+
+def attend_full(q, k, v, *, mask_kind: str = "causal", window: int = 0,
+                prefix_len: int = 0, q_offset=0, scale: float | None = None):
+    """Reference attention; used for small seqs, tests, and smoke configs."""
+    b, sq, h, dh = q.shape
+    n_kv = k.shape[2]
+    scale = scale if scale is not None else dh ** -0.5
+    qg = _split_groups(q, n_kv)                                  # b s k g d
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    pred = common.mask_fn(mask_kind, window, prefix_len)
+    m = pred(qpos[:, None], kpos[None, :])                       # (sq, skv)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, dh)
+
+
+def attend_chunked(q, k, v, *, mask_kind: str = "causal", window: int = 0,
+                   prefix_len: int = 0, q_chunk: int = 512,
+                   kv_chunk: int = 1024, scale: float | None = None):
+    """Flash-style online-softmax attention in pure XLA (scan over chunks).
+
+    Memory: O(B * H * q_chunk * kv_chunk) live scores.
+    For mask_kind=="local", each q chunk attends a statically-sized
+    [qs - window, qs + q_chunk) KV slice (exact, no wasted chunks).
+    For causal, all KV chunks are scanned with masking (the known 2x FLOP
+    overcount vs a triangular schedule — accounted in the roofline notes;
+    the Pallas kernel skips fully-masked blocks at runtime).
+    """
+    import math
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    n_kv = k.shape[2]
+    scale = scale if scale is not None else dh ** -0.5
+    # largest chunk <= requested that divides the length (prefix-extended
+    # seqs like VLM 4096+256 are not powers of two)
+    q_chunk = math.gcd(sq, min(q_chunk, sq))
+    kv_chunk = math.gcd(skv, min(kv_chunk, skv))
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    pred = common.mask_fn(mask_kind, window, prefix_len)
+    qg = _split_groups(q, n_kv).reshape(b, nq, q_chunk, n_kv, h // n_kv, dh)
+
+    if mask_kind == "local" and window and skv >= window + q_chunk:
+        # pad KV so every q chunk sees a static window slice
+        pad = window
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+        def q_step(_, qi):
+            qc = qg[:, qi]                                       # b qc k g d
+            qs = qi * q_chunk
+            kc = jax.lax.dynamic_slice_in_dim(kp, qs, window + q_chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, qs, window + q_chunk, axis=1)
+            s = jnp.einsum("bqkgd,bjkd->bkgqj", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            qpos = qs + jnp.arange(q_chunk)
+            kpos = qs - pad + jnp.arange(window + q_chunk)
+            m = pred(qpos[:, None], kpos[None, :]) & (kpos[None, :] >= 0)
+            s = jnp.where(m[None, None, None], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgqj,bjkd->bqkgd", p.astype(v.dtype), vc)
+            return None, o.reshape(b, q_chunk, h, dh)
+
+        # static slice sizes require concrete qi: unroll via scan over iota
+        _, os = jax.lax.scan(
+            lambda c, qi: q_step(c, qi), None, jnp.arange(nq))
+        return jnp.moveaxis(os, 0, 1).reshape(b, sq, h, dh)
+
+    kc_all = k.reshape(b, nk, kv_chunk, n_kv, dh)
+    vc_all = v.reshape(b, nk, kv_chunk, n_kv, dh)
+
+    def q_step(_, qi):
+        qc = qg[:, qi]                                           # b qc k g d
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj):
+            m_run, l_run, acc = carry
+            kc = kc_all[:, kj]
+            vc = vc_all[:, kj]
+            s = jnp.einsum("bqkgd,bjkd->bkgqj", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            msk = pred(qpos[:, None], kpos[None, :])
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqj,bjkd->bkgqd", p, vc.astype(jnp.float32))
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        g = h // n_kv
+        init = (jnp.full((b, n_kv, g, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((b, n_kv, g, q_chunk), jnp.float32),
+                jnp.zeros((b, n_kv, g, q_chunk, dh), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        o = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, jnp.moveaxis(o, 3, 1).reshape(b, q_chunk, h, dh).astype(q.dtype)
+
+    _, os = jax.lax.scan(q_step, None, jnp.arange(nq))
+    return jnp.moveaxis(os, 0, 1).reshape(b, sq, h, dh)
+
+
+def attend_decode(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                  prefix_len: int = 0, scale: float | None = None):
+    """One-token decode vs a (B, Smax, K, Dh) cache. cache_len masks tail."""
+    b, sq, h, dh = q.shape
+    n_kv = k_cache.shape[2]
+    scale = scale if scale is not None else dh ** -0.5
+    qg = _split_groups(q, n_kv)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(k_cache.shape[1])
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    valid = kpos[None, :] < cache_len[:, None]
+    if window:
+        valid = valid & (kpos[None, :] >= cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkd->bqkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, sq, h, dh)

@@ -1,0 +1,127 @@
+"""Shared building blocks: norms, RoPE, activations, init, masks."""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    scale = 1.0 / math.sqrt(fan_in)
+    return jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * scale
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, p, norm_type: str):
+    if norm_type == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def init_norm(d: int, norm_type: str):
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}   # rmsnorm stored as delta
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float, fraction: float = 1.0):
+    d_rot = int(d_head * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+    return inv, d_rot
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    d_head = x.shape[-1]
+    inv, d_rot = rope_freqs(d_head, theta, fraction)
+    ang = positions[..., :, None].astype(jnp.float32) * inv          # (..., S, d_rot/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]
+    cos = cos[..., :, None, :]
+    xr = x[..., :d_rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    rot = jnp.stack([y1, y2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    if d_rot == d_head:
+        return rot
+    return jnp.concatenate([rot, x[..., d_rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"gelu": jax.nn.gelu, "relu": jax.nn.relu, "silu": jax.nn.silu,
+            "gelu_tanh": partial(jax.nn.gelu, approximate=True)}[name]
+
+
+# ---------------------------------------------------------------------------
+# masks (returned as additive bias-free boolean predicates on (q_pos, k_pos))
+# ---------------------------------------------------------------------------
+
+def mask_fn(kind: str, window: int = 0, prefix_len: int = 0):
+    """Returns pred(q_pos, k_pos) -> bool allowed. Positions are absolute."""
+    if kind == "causal":
+        return lambda q, k: k <= q
+    if kind == "local":
+        return lambda q, k: (k <= q) & (k > q - window)
+    if kind == "bidir":
+        return lambda q, k: jnp.ones(jnp.broadcast_shapes(jnp.shape(q), jnp.shape(k)), bool)
+    if kind == "prefix":
+        return lambda q, k: (k <= q) | (k < prefix_len)
+    raise ValueError(kind)
+
+
+def cross_entropy(logits, labels, ignore_id: int = -1):
+    """Mean token cross-entropy in fp32; labels==ignore_id masked out.
+
+    The label logit is extracted with an iota-select reduction instead of
+    take_along_axis: a gather along a vocab-sharded axis makes GSPMD
+    all-gather the full logits (40 GB at 152k vocab); the masked
+    reduction stays shard-local and fuses.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,132 @@
+"""FFN variants: dense GLU / plain MLP, and top-k MoE.
+
+MoE dispatch is capacity-based gather/scatter (no (T, E, C) one-hot):
+each expert gathers its top-C tokens by router weight (priority-drop when
+over capacity), computes its FFN on a dense (E, C, d) block via stacked-
+weight einsum, and scatter-adds gated outputs. FLOPs = E*C*d*dff ~
+top_k * T * d * dff * capacity_factor; the (E, C, d) blocks shard over
+the "model"/expert axis (EP) or the d_ff axis (TP) per config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+def init_dense_ffn(key, d_model: int, d_ff: int, act: str, n_layers: int):
+    k1, k2 = jax.random.split(key)
+    glu = act in ("swiglu", "geglu")
+    wi_out = 2 * d_ff if glu else d_ff
+    return {
+        "wi": common.dense_init(k1, (n_layers, d_model, wi_out)),
+        "wo": common.dense_init(k2, (n_layers, d_ff, d_model), in_axis=-2),
+    }
+
+
+def dense_ffn(x, p, act: str):
+    """x: (B, T, d); p per-layer slice {wi, wo}."""
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(x.dtype))
+    if act in ("swiglu", "geglu"):
+        g, u = jnp.split(h, 2, axis=-1)
+        fn = jax.nn.silu if act == "swiglu" else jax.nn.gelu
+        h = fn(g) * u
+    else:
+        h = common.act_fn(act)(h)
+    return jnp.einsum("btf,fd->btd", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def init_moe(key, d_model: int, d_expert: int, n_experts: int, act: str,
+             n_layers: int, n_shared: int = 0):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    glu = act in ("swiglu", "geglu")
+    wi_out = 2 * d_expert if glu else d_expert
+    p = {
+        "router": common.dense_init(k1, (n_layers, d_model, n_experts)),
+        "wi": common.dense_init(k2, (n_layers, n_experts, d_model, wi_out)),
+        "wo": common.dense_init(k3, (n_layers, n_experts, d_expert, d_model),
+                                in_axis=-2),
+    }
+    if n_shared:
+        p["shared"] = init_dense_ffn(k4, d_model, n_shared * d_expert, act, n_layers)
+    return p
+
+
+def moe_ffn(x, p, act: str, top_k: int, capacity_factor: float = 1.25,
+            n_groups: int = 1):
+    """x: (B, T, d). Returns (out, aux) with load-balance stats.
+
+    Scalable dispatch: tokens are partitioned into `n_groups` routing
+    groups (set to the number of DATA shards by the launcher so each
+    group is device-local). Routing, capacity selection, and the gather
+    into (G, E, C, d) blocks are group-local — no cross-shard token
+    movement; the only collective is the expert-parallel reduce of the
+    scatter-add output (classic EP all-to-all/reduce-scatter pattern,
+    inserted by GSPMD from the sharding constraints below).
+    """
+    import math
+
+    from repro.parallel.sharding import shard
+
+    b, t, d = x.shape
+    e = p["router"].shape[-1]
+    n_tok = b * t
+    g_cnt = n_groups if n_tok % n_groups == 0 else 1
+    tl = n_tok // g_cnt                                           # tokens/group
+    xg_ = x.reshape(g_cnt, tl, d)
+    xg_ = shard(xg_, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg_.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(probs, top_k)                   # (G, t, k)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx_k, e, dtype=jnp.float32)          # (G, t, k, E)
+    w_te = jnp.einsum("gtk,gtke->gte", gate_k, onehot)
+
+    # capacity floor of 8 slots avoids drops at tiny token counts (decode);
+    # at scale ceil(tl*k/E*cf) dominates, matching GShard-style capacity.
+    cap = int(max(8, math.ceil(tl * top_k / e * capacity_factor)))
+    cap = min(cap, tl)
+    # each expert takes its per-group top-C tokens by gate (priority drop)
+    top_w, top_i = jax.lax.top_k(jnp.swapaxes(w_te, 1, 2), cap)   # (G, E, C)
+
+    gather = jax.vmap(lambda xr, ir: jnp.take(xr, ir, axis=0))    # per group
+    xc = gather(xg_, top_i.reshape(g_cnt, e * cap))               # (G, E*C, d)
+    xc = xc.reshape(g_cnt, e, cap, d)
+    xc = shard(xc, "batch", "expert", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xc, p["wi"].astype(x.dtype))
+    if act in ("swiglu", "geglu"):
+        gt, u = jnp.split(h, 2, axis=-1)
+        fn = jax.nn.silu if act == "swiglu" else jax.nn.gelu
+        h = fn(gt) * u
+    else:
+        h = common.act_fn(act)(h)
+    y = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    y = y * top_w[..., None].astype(y.dtype)
+    y = shard(y, "batch", "expert", None, None)
+
+    scatter = jax.vmap(lambda yr, ir: jnp.zeros((tl, d), yr.dtype)
+                       .at[ir].add(yr))
+    out = scatter(y.reshape(g_cnt, e * cap, d),
+                  top_i.reshape(g_cnt, e * cap))                  # (G, t, d)
+    out = shard(out, "batch", None, None)
+
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))            # f_e
+    frac_prob = jnp.mean(probs, axis=(0, 1))                      # P_e
+    aux = {"lb_loss": e * jnp.sum(frac_tokens * frac_prob),
+           "router_z": jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2)}
+    out = out.reshape(b, t, d)
+    if "shared" in p:
+        out = out + dense_ffn(x, p["shared"], act)
+    return out, aux

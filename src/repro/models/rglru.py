@@ -1,0 +1,114 @@
+"""Griffin RG-LRU recurrent block (RecurrentGemma), arXiv:2402.19427.
+
+Block:  x -> [branch1: linear -> causal conv1d(w=4) -> RG-LRU]
+             [branch2: linear -> GeLU]
+        out = linear(branch1 * branch2)
+
+RG-LRU recurrence (diagonal, gated):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    log a_t = -c * r_t * softplus(Lambda)        (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses jax.lax.associative_scan over the (a, b) linear
+recurrence; decode is a single fused step. State is O(lru_width) per
+sequence — this is why recurrentgemma runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+C_GATE = 8.0
+
+
+def init_rglru_block(key, d_model: int, lru_width: int, n_layers: int,
+                     conv_width: int = 4):
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": common.dense_init(ks[0], (n_layers, d_model, lru_width)),
+        "w_gate_br": common.dense_init(ks[1], (n_layers, d_model, lru_width)),
+        "conv_w": common.dense_init(ks[2], (n_layers, conv_width, lru_width)) * 0.1,
+        "conv_b": jnp.zeros((n_layers, lru_width)),
+        "w_a": common.dense_init(ks[3], (n_layers, lru_width, lru_width)),
+        "b_a": jnp.zeros((n_layers, lru_width)),
+        "w_x": common.dense_init(ks[4], (n_layers, lru_width, lru_width)),
+        "b_x": jnp.zeros((n_layers, lru_width)),
+        # Lambda init so a^c in [0.9, 0.999] (Griffin's init)
+        "lam": jnp.log(jnp.expm1(
+            jnp.linspace(2.0, 6.0, lru_width)))[None].repeat(n_layers, 0),
+        "w_out": common.dense_init(ks[5], (n_layers, lru_width, d_model),
+                                   in_axis=-2),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, T, C), w: (W, C). Returns y, new_state."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else None
+    return y + b, new_state
+
+
+def _rglru_gates(u, p):
+    """u: (B, T, lru). Returns (a, bterm) of the recurrence h = a h- + b."""
+    r = jax.nn.sigmoid(jnp.einsum("btl,lm->btm", u, p["w_a"].astype(u.dtype))
+                       + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(jnp.einsum("btl,lm->btm", u, p["w_x"].astype(u.dtype))
+                       + p["b_x"].astype(u.dtype))
+    log_a = (-C_GATE * r.astype(jnp.float32)
+             * jax.nn.softplus(p["lam"].astype(jnp.float32)))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    bterm = mult * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, bterm
+
+
+def rglru_scan(u, p, h0=None):
+    """Associative scan over time. u: (B, T, lru) -> (y, h_last)."""
+    a, bterm = _rglru_gates(u, p)
+    if h0 is not None:
+        # fold initial state into the first step
+        bterm = bterm.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, ar * bl + br
+
+    a_s, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_step(u, p, h):
+    """Single decode step. u: (B, 1, lru), h: (B, lru)."""
+    a, bterm = _rglru_gates(u, p)
+    h_new = a[:, 0] * h + bterm[:, 0]
+    return h_new[:, None].astype(u.dtype), h_new
+
+
+def rglru_block(x, p, state=None, decode: bool = False):
+    """Full Griffin recurrent block. state = (conv_state, h)."""
+    u = jnp.einsum("btd,dl->btl", x, p["w_in"].astype(x.dtype))
+    gate = jax.nn.gelu(jnp.einsum("btd,dl->btl", x, p["w_gate_br"].astype(x.dtype)))
+    conv_state = state[0] if state is not None else None
+    h0 = state[1] if state is not None else None
+    u, conv_state_new = _causal_conv(u, p["conv_w"].astype(x.dtype),
+                                     p["conv_b"].astype(x.dtype), conv_state)
+    if decode:
+        y, h_new = rglru_step(u, p, h0)
+    else:
+        y, h_new = rglru_scan(u, p, h0)
+    out = jnp.einsum("btl,ld->btd", y * gate, p["w_out"].astype(x.dtype))
+    return out, (conv_state_new, h_new)
+
+
+def init_rglru_state(batch: int, lru_width: int, conv_width: int = 4,
+                     dtype=jnp.bfloat16):
+    return (jnp.zeros((batch, conv_width - 1, lru_width), dtype),
+            jnp.zeros((batch, lru_width), jnp.float32))

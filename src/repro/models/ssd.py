@@ -1,0 +1,147 @@
+"""Mamba-2 SSD (state-space duality) mixer, arXiv:2405.21060.
+
+Block: in_proj -> [z | xBC | dt]; causal conv1d + silu on xBC;
+SSD core (chunked scan: intra-chunk quadratic attention-like term +
+inter-chunk linear state recurrence); gated RMSNorm; out_proj.
+
+The chunked core scans over chunks so live memory is
+O(B * H * Q^2 + B * H * P * N) regardless of T — this is why mamba2 runs
+the long_500k shape. Single-step decode carries (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_ssd_block(key, d_model: int, n_layers: int, d_state: int = 128,
+                   expand: int = 2, head_dim: int = 64, conv_width: int = 4):
+    d_in = expand * d_model
+    n_heads = d_in // head_dim
+    ks = jax.random.split(key, 5)
+    d_xbc = d_in + 2 * d_state
+    return {
+        "w_in": common.dense_init(ks[0], (n_layers, d_model,
+                                          2 * d_in + 2 * d_state + n_heads)),
+        "conv_w": common.dense_init(ks[1], (n_layers, conv_width, d_xbc)) * 0.1,
+        "conv_b": jnp.zeros((n_layers, d_xbc)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads))[None].repeat(n_layers, 0),
+        "dt_bias": jnp.zeros((n_layers, n_heads)),
+        "d_skip": jnp.ones((n_layers, n_heads)),
+        "norm_scale": jnp.zeros((n_layers, d_in)),
+        "w_out": common.dense_init(ks[2], (n_layers, d_in, d_model), in_axis=-2),
+    }
+
+
+def _segsum(a):
+    """a: (B, H, Q) log decays -> (B, H, Q, Q) lower-tri pairwise sums."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    # L[i, j] = exp(sum_{j+1..i} a) for i >= j: cum[i] - cum[j]
+    seg = cum[..., :, None] - cum[..., None, :]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(tri, seg, -jnp.inf)
+
+
+def ssd_scan(x, a, b, c, chunk: int = 128, state0=None):
+    """Chunked SSD.
+
+    x: (B, T, H, P) inputs (already dt-scaled), a: (B, T, H) log decays,
+    b, c: (B, T, N) in/out state projections (n_groups=1, shared by heads).
+    Returns y: (B, T, H, P), final state (B, H, P, N).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    nc = t // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+    s0 = (state0 if state0 is not None
+          else jnp.zeros((bsz, h, p, n), jnp.float32))
+
+    def step(state, inp):
+        x_, a_, b_, c_ = inp                      # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        a_ = a_.astype(jnp.float32)
+        cum = jnp.cumsum(a_, axis=1)              # (B,Q,H)
+        L = jnp.exp(_segsum(jnp.moveaxis(a_, -1, 1)))     # (B,H,Q,Q)
+        scores = jnp.einsum("bqn,bsn->bqs", c_.astype(jnp.float32),
+                            b_.astype(jnp.float32))
+        m = scores[:, None] * L                   # (B,H,Q,Q)
+        y_diag = jnp.einsum("bhqs,bshp->bqhp", m, x_.astype(jnp.float32))
+        # contribution of the carried state
+        decay_in = jnp.exp(cum)                   # (B,Q,H)
+        y_off = jnp.einsum("bqn,bhpn->bqhp", c_.astype(jnp.float32), state)
+        y_off = y_off * decay_in[..., None]
+        # state update
+        chunk_sum = cum[:, -1]                    # (B,H)
+        decay_out = jnp.exp(chunk_sum[:, None] - cum)     # (B,Q,H)
+        new_contrib = jnp.einsum("bqn,bqh,bqhp->bhpn", b_.astype(jnp.float32),
+                                 decay_out, x_.astype(jnp.float32))
+        state = state * jnp.exp(chunk_sum)[..., None, None] + new_contrib
+        return state, (y_diag + y_off).astype(x.dtype)
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(ac, 1, 0),
+          jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0))
+    state_f, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, t, h, p)
+    return y, state_f
+
+
+def ssd_step(x, a, b, c, state):
+    """One decode step. x: (B, 1, H, P); a: (B, 1, H); b/c: (B, 1, N)."""
+    a_ = jnp.exp(a[:, 0].astype(jnp.float32))                  # (B,H)
+    contrib = jnp.einsum("bn,bhp->bhpn", b[:, 0].astype(jnp.float32),
+                         x[:, 0].astype(jnp.float32))
+    state = state * a_[..., None, None] + contrib
+    y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), state)
+    return y[:, None].astype(x.dtype), state
+
+
+def ssd_block(x, p, cfg, state=None, decode: bool = False):
+    """Full Mamba-2 block. state = (conv_state, ssm_state)."""
+    d_model = x.shape[-1]
+    d_in = cfg.ssm_expand * d_model
+    hd = cfg.ssm_head_dim
+    n_heads = d_in // hd
+    n_state = cfg.ssm_state
+
+    proj = jnp.einsum("btd,dk->btk", x, p["w_in"].astype(x.dtype))
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * n_state], axis=-1)
+    conv_state = state[0] if state is not None else None
+    from repro.models.rglru import _causal_conv
+    xbc, conv_state_new = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                       p["conv_b"].astype(x.dtype), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xi, b, c = jnp.split(xbc, [d_in, d_in + n_state], axis=-1)
+    xh = xi.reshape(*xi.shape[:2], n_heads, hd)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,T,H)
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))             # (H,)
+    log_decay = dt * a_neg                                        # (B,T,H)
+    x_in = xh * dt[..., None].astype(xh.dtype)
+
+    ssm_state = state[1] if state is not None else None
+    if decode:
+        y, ssm_new = ssd_step(x_in, log_decay, b, c, ssm_state)
+    else:
+        y, ssm_new = ssd_scan(x_in, log_decay, b, c, state0=ssm_state)
+    y = y + xh * p["d_skip"].astype(x.dtype)[:, None]
+    y = y.reshape(*x.shape[:2], d_in)
+    y = common.rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return jnp.einsum("bti,id->btd", y, p["w_out"].astype(x.dtype)), \
+        (conv_state_new, ssm_new)
+
+
+def init_ssd_state(batch: int, d_model: int, cfg, dtype=jnp.bfloat16):
+    d_in = cfg.ssm_expand * d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    d_xbc = d_in + 2 * cfg.ssm_state
+    return (jnp.zeros((batch, cfg.conv_width - 1, d_xbc), dtype),
+            jnp.zeros((batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32))

@@ -1,0 +1,695 @@
+"""Model assembly: decoder-only LM / hybrid / SSM / enc-dec / VLM.
+
+Layer params are stacked on a leading L axis and consumed by lax.scan, so
+HLO size is depth-independent (512-device dry-run compiles stay tractable
+on one CPU core). Hybrid models scan over repeating super-blocks.
+
+Entry points (all pure):
+  init_params(key, cfg)
+  forward_logits(params, cfg, batch)            train/eval forward
+  train_loss(params, cfg, batch)                scalar loss + aux
+  init_cache(cfg, batch, max_len)               decode cache pytree
+  prefill(params, cfg, batch, max_len)          logits + filled cache
+  decode_step(params, cfg, cache, batch, pos)   one-token step
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, attention, ffn as ffn_mod, rglru, ssd
+from repro.parallel.sharding import shard
+
+FULL_ATTN_MAX = 2048          # above this, the chunked-flash path is used
+
+
+def _cdtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ===========================================================================
+# parameter init
+# ===========================================================================
+
+def _init_attn(key, cfg: ArchConfig, n: int):
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (n, d, h * dh)),
+        "wk": common.dense_init(ks[1], (n, d, k * dh)),
+        "wv": common.dense_init(ks[2], (n, d, k * dh)),
+        "wo": common.dense_init(ks[3], (n, h * dh, d), in_axis=-2),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n, h * dh))
+        p["bk"] = jnp.zeros((n, k * dh))
+        p["bv"] = jnp.zeros((n, k * dh))
+    return p
+
+
+def _init_norms(cfg: ArchConfig, n: int, names=("ln1", "ln2")):
+    out = {}
+    for nm in names:
+        base = common.init_norm(cfg.d_model, cfg.norm_type)
+        out[nm] = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), base)
+    return out
+
+
+def _init_ffn(key, cfg: ArchConfig, n: int):
+    if cfg.family == "moe":
+        return {"moe": ffn_mod.init_moe(key, cfg.d_model, cfg.d_expert,
+                                        cfg.n_experts, cfg.act, n,
+                                        cfg.n_shared_experts)}
+    return {"ffn": ffn_mod.init_dense_ffn(key, cfg.d_model, cfg.d_ff, cfg.act, n)}
+
+
+def init_params(key, cfg: ArchConfig):
+    keys = jax.random.split(key, 12)
+    d, v = cfg.d_model, cfg.vocab_size
+    params: dict = {"embed": common.embed_init(keys[0], (v, d))}
+    if not cfg.tie_embeddings:
+        params["unembed"] = common.dense_init(keys[1], (d, v))
+    params["final_norm"] = common.init_norm(d, cfg.norm_type)
+
+    if cfg.family == "ssm":
+        params["layers"] = {
+            "ssd": ssd.init_ssd_block(keys[2], d, cfg.n_layers, cfg.ssm_state,
+                                      cfg.ssm_expand, cfg.ssm_head_dim,
+                                      cfg.conv_width),
+            **_init_norms(cfg, cfg.n_layers, ("ln1",)),
+        }
+    elif cfg.family == "hybrid":
+        kinds = cfg._layer_kinds()
+        n_rec = kinds.count("rec")
+        n_att = kinds.count("attn")
+        params["rec_layers"] = {
+            "mix": rglru.init_rglru_block(keys[2], d, cfg.lru_width, n_rec,
+                                          cfg.conv_width),
+            **_init_ffn(keys[3], cfg, n_rec), **_init_norms(cfg, n_rec),
+        }
+        params["attn_layers"] = {
+            "attn": _init_attn(keys[4], cfg, n_att),
+            **_init_ffn(keys[5], cfg, n_att), **_init_norms(cfg, n_att),
+        }
+    elif cfg.family == "encdec":
+        params["enc_layers"] = {
+            "attn": _init_attn(keys[2], cfg, cfg.n_enc_layers),
+            **_init_ffn(keys[3], cfg, cfg.n_enc_layers),
+            **_init_norms(cfg, cfg.n_enc_layers),
+        }
+        params["layers"] = {
+            "attn": _init_attn(keys[4], cfg, cfg.n_layers),
+            "xattn": _init_attn(keys[5], cfg, cfg.n_layers),
+            **_init_ffn(keys[6], cfg, cfg.n_layers),
+            **_init_norms(cfg, cfg.n_layers, ("ln1", "ln2", "ln3")),
+        }
+        params["enc_norm"] = common.init_norm(d, cfg.norm_type)
+        params["frontend"] = common.dense_init(keys[7], (d, d))
+    else:                                   # dense / moe / vlm
+        params["layers"] = {
+            "attn": _init_attn(keys[2], cfg, cfg.n_layers),
+            **_init_ffn(keys[3], cfg, cfg.n_layers),
+            **_init_norms(cfg, cfg.n_layers),
+        }
+        if cfg.family == "vlm":
+            params["frontend"] = common.dense_init(keys[7], (d, d))
+    return params
+
+
+# ===========================================================================
+# blocks
+# ===========================================================================
+
+def _qkv(x, lp, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    h, k, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dh->bsh", x, lp["wq"].astype(x.dtype))
+    kk = jnp.einsum("bsd,dh->bsh", x, lp["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, lp["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(x.dtype)
+        kk = kk + lp["bk"].astype(x.dtype)
+        v = v + lp["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, dh)
+    kk = kk.reshape(b, s, k, dh)
+    v = v.reshape(b, s, k, dh)
+    q = common.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    kk = common.apply_rope(kk, positions, cfg.rope_theta, cfg.rope_fraction)
+    q = shard(q, "batch", None, "model", None)
+    kk = shard(kk, "batch", None, None, None)
+    return q, kk, v
+
+
+def _quant_kv(t):
+    """Per-(batch, head) symmetric int8 quant of one token's K or V."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(t.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def _attn_mix(x, lp, cfg: ArchConfig, *, mask_kind, positions, window=0,
+              prefix_len=0, cache=None, pos=None):
+    """Attention mixer. cache = (k, v[, k_scale, v_scale]) buffers."""
+    q, k, v = _qkv(x, lp, cfg, positions)
+    b, s = x.shape[:2]
+    if cache is not None:
+        int8kv = len(cache) == 4
+        ck, cv = cache[0], cache[1]
+        max_len = ck.shape[1]
+        slot = pos % max_len if window else jnp.minimum(pos, max_len - 1)
+        if int8kv:
+            cks, cvs = cache[2], cache[3]
+            kq, ks_new = _quant_kv(k[:, 0])
+            vq, vs_new = _quant_kv(v[:, 0])
+            ck = jax.lax.dynamic_update_index_in_dim(ck, kq, slot, axis=1)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, vq, slot, axis=1)
+            cks = jax.lax.dynamic_update_index_in_dim(cks, ks_new, slot, axis=1)
+            cvs = jax.lax.dynamic_update_index_in_dim(cvs, vs_new, slot, axis=1)
+            dk = ck.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
+            dv = cv.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
+            new_cache = (ck, cv, cks, cvs)
+        else:
+            ck = jax.lax.dynamic_update_index_in_dim(ck, k[:, 0].astype(ck.dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, v[:, 0].astype(cv.dtype), slot, axis=1)
+            dk, dv = ck, cv
+            new_cache = (ck, cv)
+        if window:
+            # ring buffer: every slot is valid once pos >= window
+            o = attention.attend_decode(q, dk, dv,
+                                        jnp.minimum(pos + 1, max_len))
+        else:
+            o = attention.attend_decode(q, dk, dv, pos + 1)
+    else:
+        if s <= FULL_ATTN_MAX:
+            o = attention.attend_full(q, k, v, mask_kind=mask_kind,
+                                      window=window, prefix_len=prefix_len)
+        else:
+            o = attention.attend_chunked(q, k, v, mask_kind=mask_kind,
+                                         window=window, prefix_len=prefix_len)
+        new_cache = (k, v)
+    o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
+    out = jnp.einsum("bsh,hd->bsd", o, lp["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def _ffn_apply(x, lp, cfg: ArchConfig):
+    if cfg.family == "moe":
+        out, aux = ffn_mod.moe_ffn(x, lp["moe"], cfg.act, cfg.moe_top_k,
+                                   cfg.capacity_factor, cfg.moe_groups)
+        return out, aux
+    return ffn_mod.dense_ffn(x, lp["ffn"], cfg.act), {}
+
+
+def _decoder_layer(x, lp, cfg: ArchConfig, *, mask_kind, positions,
+                   window=0, prefix_len=0, cache=None, pos=None,
+                   xa=None):
+    """One residual block: [attn or mixer] + ffn. Returns (x, cache, aux)."""
+    h = common.apply_norm(x, lp["ln1"], cfg.norm_type)
+    att, new_cache = _attn_mix(h, lp["attn"], cfg, mask_kind=mask_kind,
+                               positions=positions, window=window,
+                               prefix_len=prefix_len, cache=cache, pos=pos)
+    x = x + att
+    if xa is not None:                     # enc-dec cross attention
+        h = common.apply_norm(x, lp["ln3"], cfg.norm_type)
+        ca, _ = _cross_attn(h, lp["xattn"], cfg, xa)
+        x = x + ca
+    h = common.apply_norm(x, lp["ln2"], cfg.norm_type)
+    f, aux = _ffn_apply(h, lp, cfg)
+    x = x + f
+    x = shard(x, "batch", "seq", None)
+    return x, new_cache, aux
+
+
+def _cross_attn(x, lp, cfg: ArchConfig, enc_out):
+    """Cross-attention to (precomputed) encoder states; no RoPE on keys."""
+    b, s, _ = x.shape
+    h, k, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dh->bsh", x, lp["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    kk = jnp.einsum("bsd,dh->bsh", enc_out, lp["wk"].astype(x.dtype)) \
+        .reshape(b, enc_out.shape[1], k, dh)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, lp["wv"].astype(x.dtype)) \
+        .reshape(b, enc_out.shape[1], k, dh)
+    if enc_out.shape[1] <= FULL_ATTN_MAX or s > 1:
+        o = attention.attend_full(q, kk, v, mask_kind="bidir") \
+            if enc_out.shape[1] <= FULL_ATTN_MAX else \
+            attention.attend_chunked(q, kk, v, mask_kind="bidir")
+    else:
+        o = attention.attend_decode(q, kk, v, kk.shape[1])
+    o = o.reshape(b, s, h * dh)
+    return jnp.einsum("bsh,hd->bsd", o, lp["wo"].astype(x.dtype)), None
+
+
+def _rec_layer(x, lp, cfg: ArchConfig, *, state=None, decode=False):
+    h = common.apply_norm(x, lp["ln1"], cfg.norm_type)
+    mix, new_state = rglru.rglru_block(h, lp["mix"], state, decode)
+    x = x + mix
+    h = common.apply_norm(x, lp["ln2"], cfg.norm_type)
+    f, aux = _ffn_apply(h, lp, cfg)
+    return x + f, new_state, aux
+
+
+def _ssd_layer(x, lp, cfg: ArchConfig, *, state=None, decode=False):
+    h = common.apply_norm(x, lp["ln1"], cfg.norm_type)
+    mix, new_state = ssd.ssd_block(h, lp["ssd"], cfg, state, decode)
+    return x + mix, new_state, {}
+
+
+# ===========================================================================
+# stacks (scan over layers)
+# ===========================================================================
+
+def _scan_uniform(x, stacked, layer_fn, remat: bool, unroll: int = 1):
+    """Scan a uniform stack; layer_fn(x, lp) -> (x, aux_scalar_dict)."""
+    def body(carry, lp):
+        x, aux_acc = carry
+        fn = jax.checkpoint(layer_fn) if remat else layer_fn
+        x, aux = fn(x, lp)
+        aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()} \
+            if aux else aux_acc
+        return (x, aux_acc), None
+
+    length = jax.tree.leaves(stacked)[0].shape[0]
+    (x, aux), _ = jax.lax.scan(body, (x, {k: jnp.zeros(()) for k in
+                                          _aux_keys(stacked)}), stacked,
+                               unroll=min(unroll, length))
+    return x, aux
+
+
+def _aux_keys(stacked) -> tuple[str, ...]:
+    return ("lb_loss", "router_z") if "moe" in stacked else ()
+
+
+def _scan_with_cache(x, stacked, cache, layer_fn, remat: bool = False,
+                     unroll: int = 1):
+    """Scan stack + per-layer cache; emits updated cache as scan ys."""
+    def body(carry, xs):
+        x, aux_acc = carry
+        lp, cache_l = xs
+        fn = jax.checkpoint(layer_fn) if remat else layer_fn
+        x, new_cache, aux = fn(x, lp, cache_l)
+        aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()} \
+            if aux else aux_acc
+        return (x, aux_acc), new_cache
+
+    init_aux = {k: jnp.zeros(()) for k in _aux_keys(stacked)}
+    length = jax.tree.leaves(stacked)[0].shape[0]
+    (x, aux), new_cache = jax.lax.scan(body, (x, init_aux), (stacked, cache),
+                                       unroll=min(unroll, length))
+    return x, new_cache, aux
+
+
+# ===========================================================================
+# embedding / head
+# ===========================================================================
+
+def _embed(params, cfg: ArchConfig, batch, *, decode=False, pos=None):
+    """Token (+stub-modal) embedding. Returns (x, prefix_len)."""
+    dt = _cdtype(cfg)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    prefix_len = 0
+    if cfg.family == "vlm" and not decode:
+        patches = batch["patches"].astype(dt)                 # (B, P, d) stub
+        patches = jnp.einsum("bpd,de->bpe", patches,
+                             params["frontend"].astype(dt))
+        x = jnp.concatenate([patches, x], axis=1)
+        prefix_len = patches.shape[1]
+    return shard(x, "batch", "seq", None), prefix_len
+
+
+def _head(x, params, cfg: ArchConfig):
+    dt = x.dtype
+    x = common.apply_norm(x, params["final_norm"], cfg.norm_type)
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(dt))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ===========================================================================
+# forward passes
+# ===========================================================================
+
+def _run_stack(params, cfg: ArchConfig, x, positions, *, mask_kind,
+               prefix_len=0, remat=False):
+    """Training/eval forward through the body (no cache)."""
+    if cfg.family == "ssm":
+        def fn(x, lp):
+            y, _, aux = _ssd_layer(x, lp, cfg)
+            return y, aux
+        x, aux = _scan_uniform(x, params["layers"], fn, remat, cfg.scan_unroll)
+        return x, aux
+    if cfg.family == "hybrid":
+        return _run_hybrid(params, cfg, x, positions, remat=remat)
+    if cfg.family == "encdec":
+        raise ValueError("use forward_encdec")
+
+    def fn(x, lp):
+        y, _, aux = _decoder_layer(x, lp, cfg, mask_kind=mask_kind,
+                                   positions=positions,
+                                   window=cfg.window_size,
+                                   prefix_len=prefix_len)
+        return y, aux
+    x, aux = _scan_uniform(x, params["layers"], fn, remat, cfg.scan_unroll)
+    return x, aux
+
+
+def _hybrid_split(cfg: ArchConfig):
+    kinds = cfg._layer_kinds()
+    pat = list(cfg.block_pattern)
+    n_full = cfg.n_layers // len(pat)
+    rem = kinds[n_full * len(pat):]
+    return pat, n_full, rem
+
+
+def _run_hybrid(params, cfg: ArchConfig, x, positions, *, remat=False):
+    pat, n_full, rem = _hybrid_split(cfg)
+    n_rec_pat = pat.count("rec")
+    n_att_pat = pat.count("attn")
+    rec, att = params["rec_layers"], params["attn_layers"]
+    rec_main = jax.tree.map(
+        lambda a: a[:n_full * n_rec_pat].reshape((n_full, n_rec_pat) + a.shape[1:]), rec)
+    att_main = jax.tree.map(
+        lambda a: a[:n_full * n_att_pat].reshape((n_full, n_att_pat) + a.shape[1:]), att)
+
+    def super_block(x, xs):
+        rp, ap = xs
+        ri = ai = 0
+        for kind in pat:
+            if kind == "rec":
+                lp = jax.tree.map(lambda a: a[ri], rp)
+                x, _, _ = _rec_layer(x, lp, cfg)
+                ri += 1
+            else:
+                lp = jax.tree.map(lambda a: a[ai], ap)
+                x, _, _ = _decoder_layer(x, lp, cfg, mask_kind="local",
+                                         positions=positions,
+                                         window=cfg.window_size)
+                ai += 1
+        return x, {}
+
+    x, _ = _scan_uniform(x, (rec_main, att_main),
+                         lambda x, xs: super_block(x, xs), remat,
+                         cfg.scan_unroll)
+    # remainder layers (at most one pattern's worth) — unrolled
+    ri = n_full * n_rec_pat
+    ai = n_full * n_att_pat
+    for kind in rem:
+        if kind == "rec":
+            lp = jax.tree.map(lambda a: a[ri], rec)
+            x, _, _ = _rec_layer(x, lp, cfg)
+            ri += 1
+        else:
+            lp = jax.tree.map(lambda a: a[ai], att)
+            x, _, _ = _decoder_layer(x, lp, cfg, mask_kind="local",
+                                     positions=positions,
+                                     window=cfg.window_size)
+            ai += 1
+    return x, {}
+
+
+def forward_encoder(params, cfg: ArchConfig, batch):
+    dt = _cdtype(cfg)
+    frames = batch["frames"].astype(dt)                        # (B, S, d) stub
+    x = jnp.einsum("bsd,de->bse", frames, params["frontend"].astype(dt))
+    positions = jnp.arange(x.shape[1])
+
+    def fn(x, lp):
+        y, _, aux = _decoder_layer(x, lp, cfg, mask_kind="bidir",
+                                   positions=positions)
+        return y, aux
+    x, _ = _scan_uniform(x, params["enc_layers"], fn, remat=False,
+                       unroll=cfg.scan_unroll)
+    return common.apply_norm(x, params["enc_norm"], cfg.norm_type)
+
+
+def forward_logits(params, cfg: ArchConfig, batch, *, remat=False):
+    """Teacher-forced logits over the full sequence."""
+    if cfg.family == "encdec":
+        enc = forward_encoder(params, cfg, batch)
+        x, _ = _embed(params, cfg, batch)
+        positions = jnp.arange(x.shape[1])
+
+        def fn(x, lp):
+            y, _, aux = _decoder_layer(x, lp, cfg, mask_kind="causal",
+                                       positions=positions, xa=enc)
+            return y, aux
+        x, aux = _scan_uniform(x, params["layers"], fn, remat, cfg.scan_unroll)
+        return _head(x, params, cfg), aux
+    x, prefix_len = _embed(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+    mask_kind = "prefix" if cfg.family == "vlm" else "causal"
+    x, aux = _run_stack(params, cfg, x, positions, mask_kind=mask_kind,
+                        prefix_len=prefix_len, remat=remat)
+    return _head(x, params, cfg), aux
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, remat=True):
+    logits, aux = forward_logits(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.family == "vlm":                       # image prefix carries no loss
+        pad = jnp.full(labels.shape[:1] + (logits.shape[1] - labels.shape[1],),
+                       -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss = common.cross_entropy(logits, labels)
+    if aux:
+        loss = loss + 0.01 * aux.get("lb_loss", 0.0) + 1e-4 * aux.get("router_z", 0.0)
+    return loss, aux
+
+
+# ===========================================================================
+# serving: cache init / prefill / decode
+# ===========================================================================
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    dt = _cdtype(cfg)
+    k, dh = cfg.n_kv_heads, cfg.d_head
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_head_dim
+        d_xbc = d_in + 2 * cfg.ssm_state
+        return {"conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, d_xbc), dt),
+                "ssm": jnp.zeros((cfg.n_layers, batch, nh, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32)}
+    if cfg.family == "hybrid":
+        kinds = cfg._layer_kinds()
+        n_rec, n_att = kinds.count("rec"), kinds.count("attn")
+        w = min(cfg.window_size, max_len)
+        return {"conv": jnp.zeros((n_rec, batch, cfg.conv_width - 1, cfg.lru_width), dt),
+                "h": jnp.zeros((n_rec, batch, cfg.lru_width), jnp.float32),
+                "k": jnp.zeros((n_att, batch, w, k, dh), dt),
+                "v": jnp.zeros((n_att, batch, w, k, dh), dt)}
+    kv_dt = jnp.int8 if (cfg.kv_cache_dtype == "int8"
+                         and cfg.family in ("dense", "vlm")) else dt
+    cache = {"k": jnp.zeros((cfg.n_layers, batch, max_len, k, dh), kv_dt),
+             "v": jnp.zeros((cfg.n_layers, batch, max_len, k, dh), kv_dt)}
+    if kv_dt == jnp.int8:
+        cache["ks"] = jnp.zeros((cfg.n_layers, batch, max_len, k), jnp.float32)
+        cache["vs"] = jnp.zeros((cfg.n_layers, batch, max_len, k), jnp.float32)
+    if cfg.family == "encdec":
+        cache["xk"] = jnp.zeros((cfg.n_layers, batch, max_len, k, dh), dt)
+        cache["xv"] = jnp.zeros((cfg.n_layers, batch, max_len, k, dh), dt)
+    return cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, batch, pos):
+    """One new token against a filled cache. batch: {"tokens": (B, 1)}."""
+    x, _ = _embed(params, cfg, batch, decode=True, pos=pos)
+    positions = jnp.full((1,), pos)
+
+    if cfg.family == "ssm":
+        def fn(x, lp, cache_l):
+            conv, ssm_state = cache_l
+            y, new_state, aux = _ssd_layer(x, lp, cfg,
+                                           state=(conv, ssm_state), decode=True)
+            return y, new_state, aux
+        x, new_cache, _ = _scan_with_cache(
+            x, params["layers"], (cache["conv"], cache["ssm"]), fn,
+            unroll=cfg.scan_unroll)
+        cache = {"conv": new_cache[0], "ssm": new_cache[1]}
+    elif cfg.family == "hybrid":
+        x, cache = _decode_hybrid(params, cfg, cache, x, positions, pos)
+    elif cfg.family == "encdec":
+        def fn(x, lp, cache_l):
+            ck, cv, xk, xv = cache_l
+            h = common.apply_norm(x, lp["ln1"], cfg.norm_type)
+            att, (nk, nv) = _attn_mix(h, lp["attn"], cfg, mask_kind="causal",
+                                      positions=positions, cache=(ck, cv),
+                                      pos=pos)
+            x = x + att
+            h = common.apply_norm(x, lp["ln3"], cfg.norm_type)
+            q = jnp.einsum("bsd,dh->bsh", h, lp["xattn"]["wq"].astype(h.dtype))
+            b = x.shape[0]
+            q = q.reshape(b, 1, cfg.n_heads, cfg.d_head)
+            o = attention.attend_decode(q, xk, xv, xk.shape[1])
+            o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
+            x = x + jnp.einsum("bsh,hd->bsd", o,
+                               lp["xattn"]["wo"].astype(h.dtype))
+            h = common.apply_norm(x, lp["ln2"], cfg.norm_type)
+            f, aux = _ffn_apply(h, lp, cfg)
+            return x + f, (nk, nv, xk, xv), aux
+        x, new_cache, _ = _scan_with_cache(
+            x, params["layers"],
+            (cache["k"], cache["v"], cache["xk"], cache["xv"]), fn,
+            unroll=cfg.scan_unroll)
+        cache = dict(zip(("k", "v", "xk", "xv"), new_cache))
+    else:
+        int8kv = "ks" in cache
+        cache_xs = (cache["k"], cache["v"], cache["ks"], cache["vs"]) \
+            if int8kv else (cache["k"], cache["v"])
+
+        def fn(x, lp, cache_l):
+            return _decoder_layer(x, lp, cfg, mask_kind="causal",
+                                  positions=positions, cache=cache_l, pos=pos)
+        x, new_cache, _ = _scan_with_cache(
+            x, params["layers"], cache_xs, fn, unroll=cfg.scan_unroll)
+        cache = {"k": new_cache[0], "v": new_cache[1]}
+        if int8kv:
+            cache["ks"], cache["vs"] = new_cache[2], new_cache[3]
+    logits = _head(x, params, cfg)
+    return logits[:, -1], cache
+
+
+def _decode_hybrid(params, cfg: ArchConfig, cache, x, positions, pos):
+    pat, n_full, rem = _hybrid_split(cfg)
+    kinds = cfg._layer_kinds()
+    rec, att = params["rec_layers"], params["attn_layers"]
+    new_conv, new_h, new_k, new_v = [], [], [], []
+    ri = ai = 0
+    for kind in kinds:                    # decode is cheap: unrolled is fine
+        if kind == "rec":
+            lp = jax.tree.map(lambda a: a[ri], rec)
+            st = (cache["conv"][ri], cache["h"][ri])
+            x, (c2, h2), _ = _rec_layer(x, lp, cfg, state=st, decode=True)
+            new_conv.append(c2)
+            new_h.append(h2)
+            ri += 1
+        else:
+            lp = jax.tree.map(lambda a: a[ai], att)
+            x, (k2, v2), _ = _decoder_layer(
+                x, lp, cfg, mask_kind="causal", positions=positions,
+                window=cfg.window_size, cache=(cache["k"][ai], cache["v"][ai]),
+                pos=pos)
+            new_k.append(k2)
+            new_v.append(v2)
+            ai += 1
+    cache = {"conv": jnp.stack(new_conv), "h": jnp.stack(new_h),
+             "k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+    return x, cache
+
+
+def prefill(params, cfg: ArchConfig, batch, max_len: int | None = None):
+    """Process the full prompt; return (last-token logits, cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape[0], tokens.shape[1]
+    max_len = max_len or s
+    x, prefix_len = _embed(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+
+    if cfg.family == "ssm":
+        def fn(x, lp, _c):
+            y, st, aux = _ssd_layer(x, lp, cfg, state=None)
+            return y, st, aux
+        dummy = jnp.zeros((cfg.n_layers,))
+        x, states, _ = _scan_with_cache(x, params["layers"], dummy, fn,
+                                        unroll=cfg.scan_unroll)
+        cache = {"conv": states[0], "ssm": states[1]}
+        # head on the last position only (full (B,S,V) logits would be
+        # the dominant memory traffic of prefill, e.g. 638 GB @32k/152k)
+        return _head(x[:, -1:], params, cfg)[:, -1], cache
+
+    if cfg.family == "hybrid":
+        return _prefill_hybrid(params, cfg, batch, x, positions, max_len)
+
+    if cfg.family == "encdec":
+        enc = forward_encoder(params, cfg, batch)
+        def fn(x, lp, _c):
+            h = common.apply_norm(x, lp["ln1"], cfg.norm_type)
+            att, (k2, v2) = _attn_mix(h, lp["attn"], cfg, mask_kind="causal",
+                                      positions=positions)
+            x = x + att
+            h = common.apply_norm(x, lp["ln3"], cfg.norm_type)
+            ca, _ = _cross_attn(h, lp["xattn"], cfg, enc)
+            x = x + ca
+            h2 = common.apply_norm(x, lp["ln2"], cfg.norm_type)
+            f, aux = _ffn_apply(h2, lp, cfg)
+            xk = jnp.einsum("bsd,dh->bsh", enc, lp["xattn"]["wk"].astype(x.dtype)) \
+                .reshape(b, enc.shape[1], cfg.n_kv_heads, cfg.d_head)
+            xv = jnp.einsum("bsd,dh->bsh", enc, lp["xattn"]["wv"].astype(x.dtype)) \
+                .reshape(b, enc.shape[1], cfg.n_kv_heads, cfg.d_head)
+            return x + f, (k2, v2, xk, xv), aux
+        dummy = jnp.zeros((cfg.n_layers,))
+        x, caches, _ = _scan_with_cache(x, params["layers"], dummy, fn,
+                                        unroll=cfg.scan_unroll)
+        k2, v2, xk, xv = caches
+        cache = {"k": _pad_cache(k2, max_len), "v": _pad_cache(v2, max_len),
+                 "xk": xk, "xv": xv}
+        return _head(x[:, -1:], params, cfg)[:, -1], cache
+
+    mask_kind = "prefix" if cfg.family == "vlm" else "causal"
+
+    def fn(x, lp, _c):
+        return _decoder_layer(x, lp, cfg, mask_kind=mask_kind,
+                              positions=positions, window=cfg.window_size,
+                              prefix_len=prefix_len)
+    dummy = jnp.zeros((cfg.n_layers,))
+    x, caches, _ = _scan_with_cache(x, params["layers"], dummy, fn,
+                                    unroll=cfg.scan_unroll)
+    k2, v2 = caches
+    if cfg.kv_cache_dtype == "int8" and cfg.family in ("dense", "vlm"):
+        kq, ks = _quant_kv(k2)
+        vq, vs = _quant_kv(v2)
+        cache = {"k": _pad_cache(kq, max_len), "v": _pad_cache(vq, max_len),
+                 "ks": _pad_cache(ks, max_len), "vs": _pad_cache(vs, max_len)}
+    else:
+        cache = {"k": _pad_cache(k2, max_len), "v": _pad_cache(v2, max_len)}
+    # head on the last position only: full (B,S,V) logits would be the
+    # dominant memory traffic of prefill (e.g. 638 GB at 32k x 152k)
+    return _head(x[:, -1:], params, cfg)[:, -1], cache
+
+
+def _pad_cache(c, max_len: int):
+    s = c.shape[2]
+    if s >= max_len:
+        return c[:, :, :max_len]
+    pad = [(0, 0)] * c.ndim
+    pad[2] = (0, max_len - s)
+    return jnp.pad(c, pad)
+
+
+def _prefill_hybrid(params, cfg: ArchConfig, batch, x, positions, max_len):
+    kinds = cfg._layer_kinds()
+    rec, att = params["rec_layers"], params["attn_layers"]
+    b = x.shape[0]
+    w = min(cfg.window_size, max_len)
+    convs, hs, ks, vs = [], [], [], []
+    ri = ai = 0
+    for kind in kinds:
+        if kind == "rec":
+            lp = jax.tree.map(lambda a: a[ri], rec)
+            x, (c2, h2), _ = _rec_layer(x, lp, cfg)
+            convs.append(c2)
+            hs.append(h2)
+            ri += 1
+        else:
+            lp = jax.tree.map(lambda a: a[ai], att)
+            x, (k2, v2), _ = _decoder_layer(x, lp, cfg, mask_kind="local",
+                                            positions=positions,
+                                            window=cfg.window_size)
+            # ring-order the window slice: decode writes at pos % w, so the
+            # token at absolute position p must sit in slot p % w
+            s_full = k2.shape[1]
+            p0 = max(s_full - w, 0)
+            ks.append(jnp.roll(k2[:, -w:], shift=p0 % w, axis=1))
+            vs.append(jnp.roll(v2[:, -w:], shift=p0 % w, axis=1))
+            ai += 1
+    cache = {"conv": jnp.stack(convs), "h": jnp.stack(hs),
+             "k": jnp.stack(ks), "v": jnp.stack(vs)}
+    # head on the last position only: full (B,S,V) logits would be the
+    # dominant memory traffic of prefill (e.g. 638 GB at 32k x 152k)
+    return _head(x[:, -1:], params, cfg)[:, -1], cache

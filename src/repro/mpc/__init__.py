@@ -1,0 +1,25 @@
+"""2-party MPC substrate (CrypTen-style additive secret sharing).
+
+Layout of this package:
+
+  ring.py        fixed-point ring specs (int64/f16 CPU oracle, int32/f12 TPU)
+  sharing.py     AShare container (stacked party axis), share/open
+  beaver.py      trusted-dealer Beaver triples (elementwise + matmul)
+  ops.py         linear algebra over shares: add/sub/mul/matmul/trunc
+  compare.py     secure comparison (ideal-functionality semantics,
+                 protocol-accurate cost: 8 rounds / 432 B per scalar)
+  nonlinear.py   CrypTen-style baselines: exp, reciprocal, rsqrt, softmax,
+                 log, gelu/relu, layernorm — built from Beaver muls
+  quickselect.py top-k index selection over encrypted scores
+  comm.py        cost ledger + network profiles + delay model
+  costs.py       analytic per-op cost formulas (drive fig2/fig6/fig7)
+
+Security model: semi-honest 2PC with a trusted dealer (crypto provider),
+identical to CrypTen. Comparison is modeled as an ideal functionality with
+the real protocol's communication cost (see DESIGN.md §8) — the selection
+pipeline only ever reveals comparison *bits*, matching the paper.
+"""
+from repro.mpc.ring import RingSpec, RING64, RING32
+from repro.mpc.sharing import AShare, share, open_, reveal
+from repro.mpc.comm import Ledger, NetProfile, WAN, POD_DCN, get_ledger, ledger_scope
+from repro.mpc import ops, nonlinear, compare, beaver, quickselect, costs

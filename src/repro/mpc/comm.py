@@ -1,0 +1,118 @@
+"""Communication cost accounting + network delay model.
+
+Every MPC op that talks to the wire records a CostRecord into the ambient
+Ledger (a context-scoped accumulator). Records are *structural* — rounds
+and bytes are functions of static shapes — so accounting is exact whether
+ops run eagerly or under trace.
+
+Delay model (matches the paper's experiment setup, §5.1):
+  serial_time   = rounds * rtt_latency + bytes_on_wire / bandwidth + compute
+  overlapped    = the IO scheduler (core/iosched.py) computes a makespan
+                  where comm of batch i overlaps compute of batch i+1 and
+                  latency-bound ops are coalesced across batches.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class NetProfile:
+    name: str
+    bandwidth_Bps: float     # per-direction point-to-point
+    latency_s: float         # one round-trip
+
+    def time(self, rounds: float, nbytes: float, compute_s: float = 0.0) -> float:
+        return rounds * self.latency_s + nbytes / self.bandwidth_Bps + compute_s
+
+
+# Paper's WAN emulation: 100 MB/s, 100 ms (Section 5.1).
+WAN = NetProfile("wan", 100e6, 100e-3)
+# TPU v5e inter-pod data-center network (deployment projection).
+POD_DCN = NetProfile("pod_dcn", 25e9, 50e-6)
+# Intra-pod ICI (per-link), used by roofline collective term.
+ICI = NetProfile("ici", 50e9, 1e-6)
+
+
+@dataclasses.dataclass
+class CostRecord:
+    op: str
+    rounds: int
+    nbytes: int          # total bytes on the wire (both directions)
+    numel: int = 0
+    flops: int = 0       # local per-party compute, for the overlap model
+    tag: str = ""        # scheduler class: "bw" (bandwidth-bound) | "lat"
+
+
+class Ledger:
+    """Accumulates CostRecords; queried by benchmarks and the scheduler."""
+
+    def __init__(self) -> None:
+        self.records: list[CostRecord] = []
+
+    def add(self, rec: CostRecord) -> None:
+        self.records.append(rec)
+
+    # ---- aggregates -------------------------------------------------
+    @property
+    def rounds(self) -> int:
+        return sum(r.rounds for r in self.records)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(r.nbytes for r in self.records)
+
+    @property
+    def flops(self) -> int:
+        return sum(r.flops for r in self.records)
+
+    def serial_time(self, net: NetProfile, flops_per_s: float = 10e12) -> float:
+        return net.time(self.rounds, self.nbytes, self.flops / flops_per_s)
+
+    def by_op(self) -> dict[str, CostRecord]:
+        out: dict[str, CostRecord] = {}
+        for r in self.records:
+            if r.op not in out:
+                out[r.op] = CostRecord(r.op, 0, 0, 0, 0, r.tag)
+            agg = out[r.op]
+            agg.rounds += r.rounds
+            agg.nbytes += r.nbytes
+            agg.numel += r.numel
+            agg.flops += r.flops
+        return out
+
+    def scaled(self, k: float) -> "Ledger":
+        """Ledger for k identical repetitions of this workload."""
+        led = Ledger()
+        for r in self.records:
+            led.add(CostRecord(r.op, int(r.rounds * k), int(r.nbytes * k),
+                               int(r.numel * k), int(r.flops * k), r.tag))
+        return led
+
+
+_state = threading.local()
+
+
+def get_ledger() -> Ledger | None:
+    return getattr(_state, "ledger", None)
+
+
+def record(op: str, rounds: int, nbytes: int, numel: int = 0,
+           flops: int = 0, tag: str = "bw") -> None:
+    led = get_ledger()
+    if led is not None:
+        led.add(CostRecord(op, rounds, nbytes, numel, flops, tag))
+
+
+@contextlib.contextmanager
+def ledger_scope() -> Iterator[Ledger]:
+    prev = get_ledger()
+    led = Ledger()
+    _state.ledger = led
+    try:
+        yield led
+    finally:
+        _state.ledger = prev

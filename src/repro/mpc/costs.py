@@ -1,0 +1,277 @@
+"""Analytic MPC cost formulas (rounds / bytes / local flops).
+
+These mirror the executable protocols in ops.py/nonlinear.py exactly but
+evaluate at *paper scale* (BERT over 42K-188K candidates) without moving
+tensors, producing the Ledgers that fig2/fig6/fig7 benchmarks and the IO
+scheduler consume. Element size defaults to CrypTen's int64 ring (8 B).
+
+Tag convention ("bw" bandwidth-bound / "lat" latency-bound) feeds the
+paper's §4.4 scheduler: comparisons and low-dim ops are "lat", big-tensor
+Beaver openings are "bw".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.mpc.comm import Ledger, CostRecord
+from repro.mpc.compare import CMP_ROUNDS, CMP_BYTES
+from repro.mpc.nonlinear import EXP_ITERS, RECIP_ITERS, RSQRT_ITERS, LOG_ITERS
+
+EB = 8  # ring element bytes (int64)
+
+
+def _led(*recs: CostRecord) -> Ledger:
+    led = Ledger()
+    for r in recs:
+        led.add(r)
+    return led
+
+
+def merge(*ledgers: Ledger) -> Ledger:
+    out = Ledger()
+    for led in ledgers:
+        out.records.extend(led.records)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# primitive costs
+# ---------------------------------------------------------------------------
+
+def open_cost(n: int, op: str = "open") -> Ledger:
+    return _led(CostRecord(op, 1, 2 * EB * n, n, 0, "bw"))
+
+
+def mul_cost(n: int, op: str = "beaver_mul") -> Ledger:
+    return _led(CostRecord(op, 1, 4 * EB * n, n, 4 * n, "bw"))
+
+
+def matmul_cost(batch: int, m: int, k: int, n: int, op: str = "beaver_matmul") -> Ledger:
+    nbytes = 2 * EB * batch * (m * k + k * n)
+    return _led(CostRecord(op, 1, nbytes, batch * (m * k + k * n),
+                           2 * batch * m * k * n, "bw"))
+
+
+def cmp_cost(n: int, op: str = "secure_cmp") -> Ledger:
+    return _led(CostRecord(op, CMP_ROUNDS, CMP_BYTES * n, n, 0, "lat"))
+
+
+def relu_cost(n: int, op: str = "relu") -> Ledger:
+    return merge(cmp_cost(n, op + ".cmp"), mul_cost(n, op + ".mul"))
+
+
+def exp_cost(n: int, op: str = "exp") -> Ledger:
+    led = Ledger()
+    for rec in [CostRecord(op, 1, 4 * EB * n, n, 4 * n, "bw")] * EXP_ITERS:
+        led.add(rec)
+    return led
+
+
+def reciprocal_cost(n: int, op: str = "reciprocal") -> Ledger:
+    led = exp_cost(n, op + ".exp_init")
+    for _ in range(RECIP_ITERS):
+        led.records.extend(mul_cost(n, op + ".nr").records * 2)
+    return led
+
+
+def rsqrt_cost(n: int, op: str = "rsqrt") -> Ledger:
+    led = exp_cost(n, op + ".exp_init")
+    for _ in range(RSQRT_ITERS):
+        led.records.extend(mul_cost(n, op + ".nr").records * 3)
+    return led
+
+
+def log_cost(n: int, op: str = "log") -> Ledger:
+    led = Ledger()
+    for _ in range(LOG_ITERS):
+        led.records.extend(exp_cost(n, op + ".hh_exp").records)
+        led.records.extend(mul_cost(n, op + ".hh_mul").records)
+    return led
+
+
+def max_cost(rows: int, d: int, op: str = "max") -> Ledger:
+    """Tournament max: log2(d) sequential levels of (compare + select-mul)."""
+    led = Ledger()
+    levels = max(1, math.ceil(math.log2(max(d, 2))))
+    width = d
+    for _ in range(levels):
+        half = width // 2
+        if half == 0:
+            break
+        led.records.extend(cmp_cost(rows * half, op + ".cmp").records)
+        led.records.extend(mul_cost(rows * half, op + ".sel").records)
+        width = width - half
+    return led
+
+
+def softmax_cost(rows: int, d: int, op: str = "softmax") -> Ledger:
+    return merge(max_cost(rows, d, op + ".max"),
+                 exp_cost(rows * d, op + ".exp"),
+                 reciprocal_cost(rows, op + ".recip"),
+                 mul_cost(rows * d, op + ".norm"))
+
+
+def layernorm_cost(rows: int, d: int, op: str = "layernorm") -> Ledger:
+    return merge(mul_cost(rows * d, op + ".var"),
+                 rsqrt_cost(rows, op + ".rsqrt"),
+                 mul_cost(rows * d, op + ".normmul"),
+                 mul_cost(rows * d, op + ".affine"))
+
+
+def gelu_cost(n: int, op: str = "gelu") -> Ledger:
+    return merge(mul_cost(n, op + ".sq"), mul_cost(n, op + ".mul"))
+
+
+def entropy_cost(rows: int, classes: int, op: str = "entropy") -> Ledger:
+    return merge(softmax_cost(rows, classes, op + ".softmax"),
+                 log_cost(rows * classes, op + ".log"),
+                 mul_cost(rows * classes, op + ".plogp"))
+
+
+# ---------------------------------------------------------------------------
+# MLP emulator costs (the paper's technique)
+# ---------------------------------------------------------------------------
+
+def mlp_cost(rows: int, d_in: int, hidden: int, d_out: int,
+             op: str = "mlp") -> Ledger:
+    """Linear(d_in->h) + ReLU(h) + Linear(h->d_out), private weights."""
+    return merge(matmul_cost(1, rows, d_in, hidden, op + ".fc1"),
+                 relu_cost(rows * hidden, op + ".relu"),
+                 matmul_cost(1, rows, hidden, d_out, op + ".fc2"))
+
+
+# ---------------------------------------------------------------------------
+# block / model / selection costs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockGeom:
+    batch: int
+    seq: int
+    d_model: int
+    heads: int
+    d_head: int
+    d_ff: int
+
+    @property
+    def tokens(self) -> int:
+        return self.batch * self.seq
+
+
+def exact_attention_cost(g: BlockGeom) -> Ledger:
+    """One exact transformer block forward under CrypTen (the baseline)."""
+    t = g.tokens
+    dh = g.d_head
+    return merge(
+        matmul_cost(1, t, g.d_model, 3 * g.heads * dh, "attn.qkv"),
+        matmul_cost(g.batch * g.heads, g.seq, dh, g.seq, "attn.scores"),
+        softmax_cost(g.batch * g.heads * g.seq, g.seq, "attn.softmax"),
+        matmul_cost(g.batch * g.heads, g.seq, g.seq, dh, "attn.av"),
+        matmul_cost(1, t, g.heads * dh, g.d_model, "attn.out"),
+        layernorm_cost(t, g.d_model, "attn.ln"),
+    )
+
+
+def exact_ffn_cost(g: BlockGeom) -> Ledger:
+    t = g.tokens
+    return merge(
+        matmul_cost(1, t, g.d_model, g.d_ff, "ffn.fc1"),
+        gelu_cost(t * g.d_ff, "ffn.gelu"),
+        matmul_cost(1, t, g.d_ff, g.d_model, "ffn.fc2"),
+        layernorm_cost(t, g.d_model, "ffn.ln"),
+    )
+
+
+def exact_block_cost(g: BlockGeom) -> Ledger:
+    return merge(exact_attention_cost(g), exact_ffn_cost(g))
+
+
+def exact_model_cost(g: BlockGeom, layers: int, classes: int) -> Ledger:
+    led = Ledger()
+    blk = exact_block_cost(g)
+    for _ in range(layers):
+        led.records.extend(blk.records)
+    led.records.extend(matmul_cost(1, g.batch, g.d_model, classes, "head").records)
+    led.records.extend(entropy_cost(g.batch, classes).records)
+    return led
+
+
+def proxy_block_cost(g: BlockGeom, mlp_hidden: int) -> Ledger:
+    """SelectFormer proxy block: MLP_sm for softmax, MLP_ln for the
+    LayerNorm reciprocal, no FFN, GeLU->ReLU (no GeLU at all w/o FFN)."""
+    t = g.tokens
+    dh = g.d_head
+    rows_sm = g.batch * g.heads * g.seq
+    return merge(
+        matmul_cost(1, t, g.d_model, 3 * g.heads * dh, "proxy.qkv"),
+        matmul_cost(g.batch * g.heads, g.seq, dh, g.seq, "proxy.scores"),
+        mlp_cost(rows_sm, g.seq, mlp_hidden, g.seq, "proxy.mlp_sm"),
+        matmul_cost(g.batch * g.heads, g.seq, g.seq, dh, "proxy.av"),
+        matmul_cost(1, t, g.heads * dh, g.d_model, "proxy.out"),
+        # LayerNorm: numerator local; reciprocal-of-std emulated by MLP
+        mul_cost(t * g.d_model, "proxy.ln.var"),
+        mlp_cost(t, 1, mlp_hidden, 1, "proxy.mlp_ln"),
+        mul_cost(t * g.d_model, "proxy.ln.normmul"),
+    )
+
+
+def proxy_model_cost(g: BlockGeom, layers: int, classes: int,
+                     mlp_hidden: int) -> Ledger:
+    led = Ledger()
+    blk = proxy_block_cost(g, mlp_hidden)
+    for _ in range(layers):
+        led.records.extend(blk.records)
+    led.records.extend(matmul_cost(1, g.batch, g.d_model, classes, "proxy.head").records)
+    # fused softmax+entropy MLP: classes -> hidden -> 1
+    led.records.extend(mlp_cost(g.batch, classes, mlp_hidden, 1, "proxy.mlp_se").records)
+    return led
+
+
+def mpcformer_block_cost(g: BlockGeom) -> Ledger:
+    """MPCFormer baseline block: "2Quad" softmax (exp->(x+c)^2, recip stays),
+    quad GeLU, keeps FFN and full dims — no dimension reduction."""
+    t = g.tokens
+    dh = g.d_head
+    rows = g.batch * g.heads * g.seq
+    quad_softmax = merge(mul_cost(rows * g.seq, "mf.sm.sq"),
+                         reciprocal_cost(rows, "mf.sm.recip"),
+                         mul_cost(rows * g.seq, "mf.sm.norm"))
+    return merge(
+        matmul_cost(1, t, g.d_model, 3 * g.heads * dh, "mf.qkv"),
+        matmul_cost(g.batch * g.heads, g.seq, dh, g.seq, "mf.scores"),
+        quad_softmax,
+        matmul_cost(g.batch * g.heads, g.seq, g.seq, dh, "mf.av"),
+        matmul_cost(1, t, g.heads * dh, g.d_model, "mf.out"),
+        layernorm_cost(t, g.d_model, "mf.ln1"),
+        matmul_cost(1, t, g.d_model, g.d_ff, "mf.fc1"),
+        gelu_cost(t * g.d_ff, "mf.gelu"),
+        matmul_cost(1, t, g.d_ff, g.d_model, "mf.fc2"),
+        layernorm_cost(t, g.d_model, "mf.ln2"),
+    )
+
+
+def selection_phase_cost(n_candidates: int, keep: int, g: BlockGeom,
+                         layers: int, classes: int, mlp_hidden: int) -> Ledger:
+    """One multi-phase selection phase: score every candidate with the
+    proxy, then QuickSelect the top `keep` (batched comparisons)."""
+    n_batches = math.ceil(n_candidates / g.batch)
+    fwd = proxy_model_cost(g, layers, classes, mlp_hidden)
+    led = fwd.scaled(n_batches)
+    # quickselect: ~2n comparisons in ~log(n) coalesced flights
+    n_cmp = int(2.0 * n_candidates)
+    flights = max(1, math.ceil(math.log2(max(n_candidates, 2)))) + 4
+    led.add(CostRecord("quickselect", flights * CMP_ROUNDS,
+                       n_cmp * CMP_BYTES, n_cmp, 0, "lat"))
+    return led
+
+
+def oracle_selection_cost(n_candidates: int, keep: int, g: BlockGeom,
+                          layers: int, classes: int) -> Ledger:
+    n_batches = math.ceil(n_candidates / g.batch)
+    led = exact_model_cost(g, layers, classes).scaled(n_batches)
+    n_cmp = int(2.0 * n_candidates)
+    flights = max(1, math.ceil(math.log2(max(n_candidates, 2)))) + 4
+    led.add(CostRecord("quickselect", flights * CMP_ROUNDS,
+                       n_cmp * CMP_BYTES, n_cmp, 0, "lat"))
+    return led

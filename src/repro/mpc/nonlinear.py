@@ -1,0 +1,137 @@
+"""CrypTen-style nonlinear baselines over shares.
+
+These are the *expensive* ops the paper replaces with MLPs. They are real
+share-level protocols built from Beaver multiplications (exp, reciprocal,
+rsqrt, log) plus the comparison functionality (max, relu). Their cost is
+what makes Figure 2 / Figure 6's "Oracle" so slow; our benchmarks measure
+them via the ambient Ledger.
+
+Approximation choices follow CrypTen (Knott et al. 2021):
+  exp(x)        limit approximation (1 + x/2**t)**(2**t), t=8 squarings
+  reciprocal(x) Newton-Raphson, init 3*exp(0.5-x)+0.003, 10 iterations
+  rsqrt/sqrt    Newton-Raphson on y -> y(3 - x y^2)/2, 10 iterations
+  log(x)        2nd-order Householder iterations (CrypTen uses 8)
+  softmax       x - max(x); exp; sum; reciprocal; mul
+  gelu          0.5x(1+tanh-poly) via polynomial (MPC-friendly)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.mpc.sharing import AShare, from_public
+from repro.mpc import ops, compare
+
+EXP_ITERS = 8
+RECIP_ITERS = 10
+RSQRT_ITERS = 10
+LOG_ITERS = 8
+
+
+def exp(x: AShare, key: jax.Array) -> AShare:
+    """(1 + x/2**t)**(2**t): t sequential squarings = t rounds."""
+    y = ops.add_public(ops.mul_public(x, 1.0 / (1 << EXP_ITERS),
+                                      key=jax.random.fold_in(key, 99)), 1.0)
+    for i in range(EXP_ITERS):
+        y = ops.square(y, jax.random.fold_in(key, i))
+    return y
+
+
+def reciprocal(x: AShare, key: jax.Array) -> AShare:
+    """NR iterations y <- y(2 - x y); init 3 exp(0.5 - x) + 0.003."""
+    k0, key = jax.random.split(key)
+    init = ops.add_public(
+        ops.mul_public(exp(ops.add_public(ops.neg(x), 0.5), k0), 3.0,
+                       key=jax.random.fold_in(key, 98)),
+        0.003)
+    y = init
+    for i in range(RECIP_ITERS):
+        ki = jax.random.fold_in(key, i)
+        xy = ops.mul(x, y, ki)
+        y = ops.mul(y, ops.add_public(ops.neg(xy), 2.0),
+                    jax.random.fold_in(ki, 1))
+    return y
+
+
+def rsqrt(x: AShare, key: jax.Array) -> AShare:
+    """NR for 1/sqrt(x): y <- y(3 - x y^2)/2, init 3*exp(-(x/2+0.2))+0.2."""
+    k0, key = jax.random.split(key)
+    init = ops.add_public(
+        ops.mul_public(
+            exp(ops.add_public(ops.mul_public(ops.neg(x), 0.5,
+                                              key=jax.random.fold_in(key, 97)),
+                               -0.2), k0),
+            3.0, key=jax.random.fold_in(key, 96)),
+        0.2)
+    y = init
+    for i in range(RSQRT_ITERS):
+        ki = jax.random.fold_in(key, i)
+        y2 = ops.square(y, ki)
+        xy2 = ops.mul(x, y2, jax.random.fold_in(ki, 1))
+        y = ops.mul_public(
+            ops.mul(y, ops.add_public(ops.neg(xy2), 3.0), jax.random.fold_in(ki, 2)),
+            0.5, key=jax.random.fold_in(ki, 3))
+    return y
+
+
+def log(x: AShare, key: jax.Array) -> AShare:
+    """Householder iterations: y <- y - 1 + x*exp(-y) (order-1 form)."""
+    y = ops.add_public(ops.mul_public(x, 1.0 / 120.0,
+                                      key=jax.random.fold_in(key, 95)), 2.0)
+    # crude affine init y0 ~ x/120 + 2 (CrypTen uses x/120 - 20exp(-2x-1)+3)
+    for i in range(LOG_ITERS):
+        ki = jax.random.fold_in(key, i)
+        e = exp(ops.neg(y), ki)
+        xe = ops.mul(x, e, jax.random.fold_in(ki, 1))
+        y = ops.add_public(ops.add(y, xe), -1.0)
+    return y
+
+
+def softmax(x: AShare, key: jax.Array, axis: int = -1,
+            stabilize: bool = True) -> AShare:
+    """CrypTen softmax: subtract max (comparison tree), exp, normalize."""
+    kmax, kexp, krec, kmul, key = jax.random.split(key, 5)
+    if stabilize:
+        mx = compare.max_(x, axis=axis, key=kmax)
+        x = ops.sub(x, AShare(jnp.broadcast_to(mx.sh, x.sh.shape), x.ring))
+    e = exp(x, kexp)
+    s = ops.sum_(e, axis=axis, keepdims=True)
+    r = reciprocal(s, krec)
+    return ops.mul(e, AShare(jnp.broadcast_to(r.sh, e.sh.shape), e.ring), kmul)
+
+
+def layernorm(x: AShare, gamma, beta, key: jax.Array, eps: float = 1e-5) -> AShare:
+    """LayerNorm with NR-rsqrt for the variance reciprocal sqrt."""
+    kvar, krs, kmul, kaff = jax.random.split(key, 4)
+    d = x.shape[-1]
+    mu = ops.mean(x, axis=-1, key=jax.random.fold_in(key, 94))
+    xc = ops.sub(x, AShare(jnp.broadcast_to(mu.sh[..., None], x.sh.shape), x.ring))
+    var = ops.mean(ops.square(xc, kvar), axis=-1,
+                   key=jax.random.fold_in(key, 93))
+    inv = rsqrt(ops.add_public(var, eps), krs)
+    xn = ops.mul(xc, AShare(jnp.broadcast_to(inv.sh[..., None], xc.sh.shape), x.ring),
+                 kmul)
+    out = ops.mul_public(xn, gamma, key=kaff)
+    return ops.add(out, from_public(jnp.broadcast_to(jnp.asarray(beta), out.shape),
+                                    out.ring))
+
+
+def entropy_from_logits(logits: AShare, key: jax.Array) -> AShare:
+    """H = -sum p log p over the class axis — the Oracle's scoring op."""
+    ksm, klog, kmul, key = jax.random.split(key, 4)
+    p = softmax(logits, ksm, axis=-1)
+    lp = log(ops.add_public(p, 1e-6), klog)
+    plp = ops.mul(p, lp, kmul)
+    return ops.neg(ops.sum_(plp, axis=-1))
+
+
+def gelu(x: AShare, key: jax.Array) -> AShare:
+    """Quad approximation (MPCFormer uses this for the *baseline* models)."""
+    k1, k2 = jax.random.split(key)
+    x2 = ops.square(x, k1)
+    # 0.125 x^2 + 0.25 x + 0.5  (times x) — MPCFormer's "2Quad" GeLU
+    inner = ops.add_public(
+        ops.add(ops.mul_public(x2, 0.125, key=jax.random.fold_in(key, 92)),
+                ops.mul_public(x, 0.25, key=jax.random.fold_in(key, 91))),
+        0.5)
+    return ops.mul(x, inner, k2)

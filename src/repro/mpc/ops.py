@@ -1,0 +1,188 @@
+"""Linear algebra over additive shares.
+
+Cost accounting notes (all recorded into the ambient Ledger):
+  add/sub/neg/sum/mean-by-constant ......... local, 0 rounds
+  mul_public/matmul_public ................. local + trunc
+  mul (Beaver) ............................. 1 round: open(eps)+open(delta)
+  matmul (Beaver matrix triple) ............ 1 round
+  trunc local .............................. 0 rounds (RING64 path)
+  trunc dealer-assisted .................... 1 round (RING32/TPU path)
+
+All integer arithmetic relies on XLA's modular two's-complement semantics,
+which *is* ring arithmetic mod 2**bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.mpc.ring import RingSpec
+from repro.mpc.sharing import AShare, from_public
+from repro.mpc import beaver, comm
+
+
+def _numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# local (round-free) ops
+# ---------------------------------------------------------------------------
+
+def add(x: AShare, y: AShare) -> AShare:
+    return AShare(x.sh + y.sh, x.ring)
+
+
+def sub(x: AShare, y: AShare) -> AShare:
+    return AShare(x.sh - y.sh, x.ring)
+
+
+def neg(x: AShare) -> AShare:
+    return AShare(-x.sh, x.ring)
+
+
+def add_public(x: AShare, v) -> AShare:
+    enc = x.ring.encode(jnp.asarray(v))
+    pub = jnp.stack([jnp.broadcast_to(enc, x.shape),
+                     jnp.zeros(x.shape, x.ring.dtype)])
+    return AShare(x.sh + pub, x.ring)
+
+
+def mul_public(x: AShare, v, *, key: jax.Array | None = None) -> AShare:
+    """Multiply by a public float tensor; needs one truncation."""
+    enc = x.ring.encode(jnp.asarray(v))
+    z = AShare(x.sh * enc, x.ring)
+    return trunc(z, key=key)
+
+
+def mul_public_int(x: AShare, v: int) -> AShare:
+    """Multiply by a public *integer* — exact, no truncation."""
+    return AShare(x.sh * jnp.asarray(v, x.ring.dtype), x.ring)
+
+
+def matmul_public(x: AShare, w, *, key: jax.Array | None = None,
+                  w_encoded: jax.Array | None = None) -> AShare:
+    """x @ w with public (already known to both parties) w."""
+    enc = w_encoded if w_encoded is not None else x.ring.encode(jnp.asarray(w))
+    z = jnp.matmul(x.sh, enc, preferred_element_type=x.ring.dtype)
+    return trunc(AShare(z, x.ring), key=key)
+
+
+def sum_(x: AShare, axis=None, keepdims=False) -> AShare:
+    ax = axis
+    if ax is not None:
+        ax = tuple(a + 1 if a >= 0 else a for a in
+                   ((axis,) if isinstance(axis, int) else tuple(axis)))
+    else:
+        ax = tuple(range(1, x.sh.ndim))
+    return AShare(jnp.sum(x.sh, axis=ax, keepdims=keepdims), x.ring)
+
+
+def mean(x: AShare, axis: int, *, key: jax.Array | None = None) -> AShare:
+    n = x.shape[axis]
+    s = sum_(x, axis=axis)
+    return mul_public(s, 1.0 / n, key=key)
+
+
+def stack(xs: list[AShare], axis: int = 0) -> AShare:
+    return AShare(jnp.stack([x.sh for x in xs], axis=axis + 1), xs[0].ring)
+
+
+def concat(xs: list[AShare], axis: int = 0) -> AShare:
+    ax = axis + 1 if axis >= 0 else axis
+    return AShare(jnp.concatenate([x.sh for x in xs], axis=ax), xs[0].ring)
+
+
+# ---------------------------------------------------------------------------
+# truncation
+# ---------------------------------------------------------------------------
+
+def trunc(x: AShare, *, key: jax.Array | None = None) -> AShare:
+    """Divide by 2**frac_bits after a fixed-point product.
+
+    RING64: local arithmetic shift of both shares — correct up to ±1 LSB
+    w.p. 1 - |v|/2**(bits-1) per element (CrypTen's choice).
+    RING32: dealer-assisted pair (exact): open (x+r), shift publicly,
+    subtract the dealer's share of r>>f. Costs one opening round.
+    """
+    ring = x.ring
+    if ring.bits >= 64 or key is None:
+        s0 = x.sh[0] >> ring.frac_bits
+        s1 = -((-x.sh[1]) >> ring.frac_bits)
+        return AShare(jnp.stack([s0, s1]), ring)
+    # dealer-assisted exact truncation (TPU ring)
+    r, r_t = beaver.trunc_pair(key, x.shape, ring)
+    masked = AShare(x.sh + r.sh, ring)
+    m = masked.sh[0] + masked.sh[1]          # open
+    comm.record("trunc_open", rounds=1, nbytes=2 * ring.elem_bytes * _numel(x.shape),
+                numel=_numel(x.shape), tag="bw")
+    m_t = m >> ring.frac_bits
+    pub = jnp.stack([m_t, jnp.zeros_like(m_t)])
+    return AShare(pub - r_t.sh, ring)
+
+
+# ---------------------------------------------------------------------------
+# Beaver multiplication / matmul
+# ---------------------------------------------------------------------------
+
+def mul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True) -> AShare:
+    """Elementwise secure multiply. One opening round for (eps, delta)."""
+    ring = x.ring
+    shape = jnp.broadcast_shapes(x.shape, y.shape)
+    xb = AShare(jnp.broadcast_to(x.sh, (2,) + shape), ring)
+    yb = AShare(jnp.broadcast_to(y.sh, (2,) + shape), ring)
+    a, b, c = beaver.mul_triple(key, shape, ring)
+    eps = xb.sh - a.sh
+    dlt = yb.sh - b.sh
+    eps_o = eps[0] + eps[1]                    # opened values (1 joint round)
+    dlt_o = dlt[0] + dlt[1]
+    n = _numel(shape)
+    comm.record("beaver_mul", rounds=1, nbytes=2 * 2 * ring.elem_bytes * n,
+                numel=n, flops=4 * n, tag="bw")
+    z = c.sh + eps_o * b.sh + dlt_o * a.sh
+    z = z.at[0].add(eps_o * dlt_o)
+    out = AShare(z, ring)
+    return trunc(out, key=jax.random.fold_in(key, 7)) if do_trunc else out
+
+
+def square(x: AShare, key: jax.Array) -> AShare:
+    return mul(x, x, key)
+
+
+def matmul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True) -> AShare:
+    """Secure batched matmul via a Beaver matrix triple. One opening round.
+
+    Bytes on the wire: |eps| + |delta| per party = (numel(x)+numel(y)) elems
+    — crucially *not* numel(x)*cols bytes: the triple reuse is what makes
+    matmul bandwidth-, not latency-, dominated.
+    """
+    ring = x.ring
+    a, b, c = beaver.matmul_triple(key, x.shape, y.shape, ring)
+    eps = x.sh - a.sh
+    dlt = y.sh - b.sh
+    eps_o = eps[0] + eps[1]
+    dlt_o = dlt[0] + dlt[1]
+    n = _numel(x.shape) + _numel(y.shape)
+    m, k = x.shape[-2], x.shape[-1]
+    n_out = y.shape[-1]
+    batch = _numel(x.shape[:-2])
+    comm.record("beaver_matmul", rounds=1, nbytes=2 * ring.elem_bytes * n,
+                numel=n, flops=2 * batch * m * k * n_out, tag="bw")
+    # party-local: z_p = c_p + eps@b_p + a_p@dlt ; party0 adds eps@dlt
+    eb = jnp.matmul(jnp.stack([eps_o, eps_o]), b.sh, preferred_element_type=ring.dtype)
+    ad = jnp.matmul(a.sh, jnp.stack([dlt_o, dlt_o]), preferred_element_type=ring.dtype)
+    z = c.sh + eb + ad
+    ed = jnp.matmul(eps_o, dlt_o, preferred_element_type=ring.dtype)
+    z = z.at[0].add(ed)
+    out = AShare(z, ring)
+    return trunc(out, key=jax.random.fold_in(key, 11)) if do_trunc else out
+
+
+def dot_last(x: AShare, y: AShare, key: jax.Array) -> AShare:
+    """Inner product along the last axis (entropy dot products etc.)."""
+    z = mul(x, y, key, do_trunc=False)
+    s = sum_(z, axis=-1)
+    return trunc(s, key=jax.random.fold_in(key, 13))

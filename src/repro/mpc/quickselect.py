@@ -1,0 +1,78 @@
+"""QuickSelect top-k over encrypted scores (paper §4.1).
+
+Finds the *indices* of the k highest entropy values with O(n) expected
+pairwise secure comparisons. Each comparison reveals only its binary
+outcome (the paper's stated leakage: the rank order information needed
+for selection). The data-dependent recursion runs on the host — this is
+the selection coordinator, which in deployment drives MPC ops over the
+wire; values never leave share form.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.mpc.sharing import AShare
+from repro.mpc import compare, comm
+
+
+def _cmp_batch(scores: AShare, idx_a: np.ndarray, pivot: int) -> np.ndarray:
+    """Reveal bits [score[i] < score[pivot]] for a batch of indices.
+
+    Batched into ONE message flight: the IO scheduler coalesces
+    latency-bound comparisons (paper §4.4), so rounds are per *batch*,
+    not per element. Bytes remain per-element.
+    """
+    a = scores[np.asarray(idx_a)]
+    b = scores[np.asarray([pivot] * len(idx_a))]
+    return np.asarray(compare.reveal_lt(a, b))
+
+
+def top_k_indices(scores: AShare, k: int, seed: int = 0) -> np.ndarray:
+    """Indices of the k largest encrypted scores."""
+    n = scores.shape[0]
+    if k >= n:
+        return np.arange(n)
+    rng = np.random.default_rng(seed)
+    idx = np.arange(n)
+    lo_rank = 0                     # we select the k LARGEST
+    target = k
+    out: list[np.ndarray] = []
+    # iterative quickselect partitioning on "greater-than-pivot"
+    while True:
+        if len(idx) == 0:
+            break
+        if target <= 0:
+            break
+        if len(idx) <= target:
+            out.append(idx)
+            break
+        pivot_pos = int(rng.integers(len(idx)))
+        pivot = int(idx[pivot_pos])
+        rest = np.delete(idx, pivot_pos)
+        less = _cmp_batch(scores, rest, pivot)      # rest[i] < pivot
+        greater = rest[~less]
+        smaller = rest[less]
+        n_hi = len(greater) + 1                      # pivot included
+        if n_hi == target:
+            out.append(np.concatenate([greater, [pivot]]))
+            break
+        if n_hi < target:
+            out.append(np.concatenate([greater, [pivot]]))
+            target -= n_hi
+            idx = smaller
+        else:
+            idx = greater
+    return np.sort(np.concatenate(out)) if out else np.array([], dtype=int)
+
+
+def expected_comparisons(n: int, k: int) -> float:
+    """Analytic expected #comparisons (~2n for k<<n; <=4n worst typical)."""
+    return 2.0 * n
+
+
+def quickselect_cost(n: int) -> tuple[int, int]:
+    """(rounds, bytes) under coalescing: O(log n) batched flights."""
+    flights = int(np.ceil(np.log2(max(n, 2)))) + 4
+    return flights * compare.CMP_ROUNDS, int(expected_comparisons(n, 0)) * compare.CMP_BYTES

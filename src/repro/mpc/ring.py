@@ -1,0 +1,63 @@
+"""Fixed-point ring specifications for the MPC substrate.
+
+Values x in R are encoded as round(x * 2**frac_bits) in Z_{2**bits}, stored
+in two's-complement signed integers (XLA integer arithmetic is modular, so
+jnp +/-/* implement ring arithmetic directly).
+
+Two presets:
+  RING64  int64, 16 fractional bits — CrypTen's ring; used as the CPU
+          correctness oracle (requires jax.enable_x64 scope).
+  RING32  int32, 12 fractional bits — the TPU-native ring (MXU has no
+          int64 path). Products of values |x·y| < 2**6 truncate locally
+          with wrap probability < 2**-2 per element, so RING32 uses
+          dealer-assisted truncation (SecureML-style) which is exact up
+          to ±1 LSB. See ops.trunc.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSpec:
+    name: str
+    dtype: jnp.dtype
+    bits: int
+    frac_bits: int
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def elem_bytes(self) -> int:
+        return self.bits // 8
+
+    def encode(self, x: jax.Array) -> jax.Array:
+        """float -> ring element."""
+        return jnp.round(jnp.asarray(x, jnp.float64 if self.bits == 64 else jnp.float32)
+                         * self.scale).astype(self.dtype)
+
+    def decode(self, r: jax.Array) -> jax.Array:
+        """ring element -> float."""
+        ftype = jnp.float64 if self.bits == 64 else jnp.float32
+        return r.astype(ftype) / self.scale
+
+    def rand(self, key: jax.Array, shape) -> jax.Array:
+        """Uniform random ring element (a fresh additive mask)."""
+        if self.bits == 64:
+            lo = jax.random.randint(key, shape, 0, 1 << 32, dtype=jnp.uint32)
+            k2 = jax.random.fold_in(key, 1)
+            hi = jax.random.randint(k2, shape, 0, 1 << 32, dtype=jnp.uint32)
+            return (hi.astype(jnp.uint64) << 32 | lo.astype(jnp.uint64)).astype(self.dtype)
+        bits = jax.random.bits(key, shape, dtype=jnp.uint32)
+        return bits.astype(self.dtype)
+
+
+RING64 = RingSpec("ring64", jnp.int64, 64, 16)
+RING32 = RingSpec("ring32", jnp.int32, 32, 12)

@@ -1,0 +1,96 @@
+"""Additive 2PC secret shares.
+
+AShare stacks both parties' shares on a leading axis of size 2:
+  sh[0] = party-0 share, sh[1] = party-1 share,  value = sh[0] + sh[1] (ring)
+
+This layout is deliberate: on the multi-pod mesh the party axis is sharded
+over the "pod" mesh axis, so party-0's share physically lives on pod 0 and
+every `open` is an inter-pod collective (psum over "pod"). On a single pod
+the two shares are co-located ("simulation mode"). Either way the
+arithmetic is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.mpc.ring import RingSpec, RING64
+from repro.mpc import comm
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AShare:
+    sh: jax.Array                 # (2, *shape) ring ints
+    ring: RingSpec                # static
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        return (self.sh,), self.ring
+
+    @classmethod
+    def tree_unflatten(cls, ring, children):
+        return cls(children[0], ring)
+
+    # -- convenience ----------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.sh.shape[1:])
+
+    @property
+    def ndim(self) -> int:
+        return self.sh.ndim - 1
+
+    def __getitem__(self, idx) -> "AShare":
+        return AShare(self.sh[(slice(None),) + (idx if isinstance(idx, tuple) else (idx,))],
+                      self.ring)
+
+    def reshape(self, *shape) -> "AShare":
+        return AShare(self.sh.reshape((2,) + tuple(shape)), self.ring)
+
+    def astuple(self) -> tuple[jax.Array, jax.Array]:
+        return self.sh[0], self.sh[1]
+
+
+def share(key: jax.Array, x: jax.Array, ring: RingSpec = RING64) -> AShare:
+    """Encode x in the ring and split into two uniform additive shares."""
+    enc = ring.encode(x)
+    r = ring.rand(key, enc.shape)
+    return AShare(jnp.stack([r, enc - r]), ring)
+
+
+def share_encoded(key: jax.Array, enc: jax.Array, ring: RingSpec = RING64) -> AShare:
+    r = ring.rand(key, enc.shape)
+    return AShare(jnp.stack([r, enc - r]), ring)
+
+
+def open_(x: AShare, op: str = "open") -> jax.Array:
+    """Reconstruct the ring element (each party sends its share: 1 round)."""
+    comm.record(op, rounds=1, nbytes=2 * x.ring.elem_bytes * _numel(x),
+                numel=_numel(x), tag="bw")
+    return x.sh[0] + x.sh[1]
+
+
+def reveal(x: AShare) -> jax.Array:
+    """Open and decode to float."""
+    return x.ring.decode(open_(x))
+
+
+def zeros_like(x: AShare) -> AShare:
+    return AShare(jnp.zeros_like(x.sh), x.ring)
+
+
+def from_public(v: jax.Array, ring: RingSpec = RING64) -> AShare:
+    """A public constant as a (trivial) share: party 0 holds it all."""
+    enc = ring.encode(v)
+    return AShare(jnp.stack([enc, jnp.zeros_like(enc)]), ring)
+
+
+def _numel(x: AShare) -> int:
+    n = 1
+    for d in x.shape:
+        n *= int(d)
+    return n

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (
+    AdamWConfig, init_opt_state, adamw_update, cosine_schedule,
+)
+from repro.optim.compress import topk_compress_update, int8_allreduce_sim

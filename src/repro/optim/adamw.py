@@ -1,0 +1,65 @@
+"""AdamW with global-norm clipping + cosine schedule (pure pytree fns).
+
+State is a pytree mirroring params (m, v in fp32) so param_specs sharding
+applies to it verbatim — the optimizer shards exactly like the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.clip(prog, 0, 1)))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, 0.1 + 0.9 * cos)
+
+
+def init_opt_state(params):
+    return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                     state["m"], grads)
+    v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                     state["v"], grads)
+    t = step.astype(jnp.float32)
+    lr = cosine_schedule(cfg, t)
+
+    def upd(p, m_, v_):
+        mh = m_ / (1 - cfg.b1 ** t)
+        vh = v_ / (1 - cfg.b2 ** t)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, {"m": m, "v": v, "step": step}, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (
+    ShardRules, rules_scope, current_rules, shard, param_specs, batch_spec,
+)

@@ -1,0 +1,189 @@
+"""Logical-axis sharding rules.
+
+Models annotate activations with *logical* names (batch / seq / model /
+expert / vocab); a ShardRules context maps them onto mesh axes. Outside a
+rules scope every annotation is a no-op, so smoke tests and the CPU path
+never touch device state.
+
+Policy (DP x TP, pod = extra DP dim or MPC party axis):
+  batch   -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+  model   -> "model" (attention heads, ffn hidden, vocab, experts)
+  seq     -> None by default; the SP hillclimb maps it to "model" for
+             norm/ffn regions (see EXPERIMENTS.md §Perf)
+
+Uneven shards (e.g. 14 heads on 16-way model axis, vocab 49155) are legal
+under GSPMD; rules prefer even dims but never fail on uneven ones.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardRules:
+    mesh: Mesh
+    mpc_pod_axis: bool = False     # pod axis reserved for MPC parties
+    seq_axis: str | None = None    # set to "model" to enable SP
+    fsdp: bool = True              # ZeRO-3: shard params over "data" too
+    fsdp_layer_dim: bool = False   # ZeRO over the layer-STACK dim instead
+    # of a feature dim: same memory saving, but the gathered slice never
+    # conflicts with a contraction dim -> no GSPMD resharding (CP/A2A)
+
+    @property
+    def batch_axes(self):
+        names = self.mesh.axis_names
+        if "pod" in names and not self.mpc_pod_axis:
+            return ("pod", "data")
+        return ("data",) if "data" in names else (names[0],)
+
+    def resolve(self, logical: str | None):
+        if logical is None:
+            return None
+        if logical == "batch":
+            ax = self.batch_axes
+            return ax if len(ax) > 1 else ax[0]
+        if logical == "model" or logical == "expert" or logical == "vocab":
+            return "model" if "model" in self.mesh.axis_names else None
+        if logical == "seq":
+            return self.seq_axis
+        if logical == "pod":
+            return "pod" if "pod" in self.mesh.axis_names else None
+        if logical == "fsdp":
+            # intra-pod ZeRO-3 axis: layer-wise param all-gathers stay on
+            # ICI; pods keep full replicas (DCN carries only grad reduce)
+            return "data" if self.fsdp and "data" in self.mesh.axis_names \
+                else None
+        return None
+
+    def spec(self, *logical) -> P:
+        return P(*(self.resolve(l) for l in logical))
+
+    def sharding(self, *logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+_state = threading.local()
+
+
+def current_rules() -> ShardRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def rules_scope(rules: ShardRules):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard(x, *logical):
+    """Annotate an activation with logical axes (no-op without rules).
+    Axes that don't divide the dim are dropped (never an error)."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = fit_spec(r, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def batch_spec(rules: ShardRules, ndim: int) -> NamedSharding:
+    """Sharding for a (B, ...) input batch tensor."""
+    return rules.sharding(*(["batch"] + [None] * (ndim - 1)))
+
+
+def axis_size(rules: ShardRules, resolved) -> int:
+    if resolved is None:
+        return 1
+    if isinstance(resolved, tuple):
+        n = 1
+        for a in resolved:
+            n *= rules.mesh.shape[a]
+        return n
+    return rules.mesh.shape[resolved]
+
+
+def fit_spec(rules: ShardRules, shape, logical_axes) -> P:
+    """Resolve logical axes, dropping any that don't divide the dim or
+    that would reuse a mesh axis already claimed by an earlier dim
+    (e.g. SP maps seq->model, so vocab->model must yield)."""
+    out = []
+    used: set = set()
+    for dim, logical in zip(shape, logical_axes):
+        ax = rules.resolve(logical)
+        names = (set(ax) if isinstance(ax, tuple) else {ax}) - {None}
+        if ax is not None and not (names & used) and \
+                dim % axis_size(rules, ax) == 0 and \
+                dim >= axis_size(rules, ax):
+            out.append(ax)
+            used |= names
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding by pytree path
+# ---------------------------------------------------------------------------
+
+def _spec_for_path(path: str, leaf, rules: ShardRules) -> P:
+    nd = leaf.ndim
+    shape = leaf.shape
+
+    def pad(logical):                   # right-pad logical axes to ndim
+        return fit_spec(rules, shape, [None] * (nd - len(logical)) + logical)
+
+    def first_fit(*candidates):
+        """First candidate spec that actually shards something."""
+        for cand in candidates:
+            spec = pad(cand)
+            if any(s is not None for s in spec):
+                return spec
+        return P(*([None] * nd))
+
+    if "unembed" in path:               # (d, V): V on TP axis so the head
+        return first_fit(["fsdp", "model"], [None, "model"], ["model", None])
+    if "embed" in path:                 # (V, d): V on TP axis — critical for
+        # tied heads: embed.T then contracts d (fsdp) x V (model) without
+        # materializing full-vocab logits (no 40 GB all-gather)
+        return first_fit(["model", "fsdp"], ["model", None], [None, "model"])
+    if "router" in path:
+        return P(*([None] * nd))
+    if "moe" in path and ("wi" in path or "wo" in path):
+        # (L, E, d, f): EP over experts + ZeRO over d; else TP over f/d
+        ep = fit_spec(rules, shape, [None, "expert", "fsdp", None]
+                      if "wi" in path else [None, "expert", None, "fsdp"])
+        if ep[1] is not None:
+            return ep
+        return first_fit([None, None, "fsdp", "model"]) if "wi" in path \
+            else first_fit([None, None, "model", "fsdp"])
+    if any(k in path for k in ("wq", "wk", "wv", "w_in", "wi", "w_gate_br",
+                               "w_a", "w_x")):
+        # output features on TP axis, input features on ZeRO axis
+        if rules.fsdp_layer_dim and nd >= 3:
+            return first_fit(["fsdp"] + [None] * (nd - 3) + [None, "model"],
+                             [None, "model"], ["model", None])
+        return first_fit(["fsdp", "model"], [None, "model"], ["model", None])
+    if any(k in path for k in ("wo", "w_out")):
+        if rules.fsdp_layer_dim and nd >= 3:
+            return first_fit(["fsdp"] + [None] * (nd - 3) + ["model", None],
+                             ["model", None], [None, "model"])
+        return first_fit(["model", "fsdp"], ["model", None], [None, "model"])
+    if any(k in path for k in ("bq", "bk", "bv", "conv_", "b_a", "b_x")):
+        return pad(["model"])
+    return P(*([None] * nd))            # norms, scalars: replicate
+
+
+def param_specs(params, rules: ShardRules):
+    """Pytree of NamedSharding matching `params`."""
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(p, "key", p)) for p in path_tuple)
+        return NamedSharding(rules.mesh, _spec_for_path(path, leaf, rules))
+    return jax.tree_util.tree_map_with_path(one, params)

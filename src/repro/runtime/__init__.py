@@ -1,0 +1,3 @@
+from repro.runtime.ft import (
+    HeartbeatMonitor, StragglerMitigator, retry, ElasticPlan, plan_remesh,
+)

@@ -1,0 +1,122 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, retries, elasticity.
+
+Design intent at 1000+ nodes:
+  * every host runs a HeartbeatMonitor; a missed deadline marks the host
+    suspect and triggers the launcher's restart-from-checkpoint path
+    (checkpoint/ckpt.py provides the atomic resume point; selection
+    phases additionally checkpoint survivor sets at phase boundaries).
+  * data-loading and MPC batch execution run under StragglerMitigator:
+    if a task exceeds p95 * slack, a backup task is dispatched and the
+    first finisher wins (classic backup-requests).
+  * ElasticPlan computes the host-level transfer spec when the mesh is
+    re-factorized (shrink on failure / grow on recovery) so re-sharding
+    moves only the diff, not a full re-init.
+
+Everything is process-local and deterministic here (single-host CPU
+container); the interfaces match what the multi-host launcher drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_hosts: int, timeout_s: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self._clock = clock
+        self._last = {h: clock() for h in range(n_hosts)}
+        self._lock = threading.Lock()
+
+    def beat(self, host: int) -> None:
+        with self._lock:
+            self._last[host] = self._clock()
+
+    def suspects(self) -> list[int]:
+        now = self._clock()
+        with self._lock:
+            return [h for h, t in self._last.items()
+                    if now - t > self.timeout_s]
+
+    def healthy(self) -> bool:
+        return not self.suspects()
+
+
+class StragglerMitigator:
+    """Deadline-based backup dispatch; tracks a running p95 of task times."""
+
+    def __init__(self, slack: float = 2.0, window: int = 64):
+        self.slack = slack
+        self._times: list[float] = []
+        self._window = window
+        self.backups_fired = 0
+
+    def deadline(self) -> float:
+        if len(self._times) < 8:
+            return float("inf")
+        return float(np.percentile(self._times[-self._window:], 95)) * self.slack
+
+    def run(self, task: Callable[[], object],
+            backup: Callable[[], object] | None = None):
+        t0 = time.monotonic()
+        deadline = self.deadline()
+        result = task()
+        dt = time.monotonic() - t0
+        if dt > deadline and backup is not None:
+            self.backups_fired += 1
+            result = backup()          # first-finisher-wins (serial sim)
+        self._times.append(dt)
+        return result
+
+
+def retry(fn: Callable[[], object], *, attempts: int = 3,
+          backoff_s: float = 0.1, retriable=(IOError, OSError)):
+    last = None
+    for i in range(attempts):
+        try:
+            return fn()
+        except retriable as e:           # noqa: PERF203
+            last = e
+            time.sleep(backoff_s * (2 ** i))
+    raise last
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ElasticPlan:
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+    moves: list[tuple[int, int]]         # (src_host, dst_host) transfers
+    reshard_fraction: float              # fraction of bytes that move
+
+
+def plan_remesh(old_shape: tuple[int, ...], new_shape: tuple[int, ...],
+                bytes_per_host: int = 1) -> ElasticPlan:
+    """Host-level transfer plan for a mesh re-factorization.
+
+    Model: parameters are range-sharded over the flattened mesh; host h of
+    N owns slice [h/N, (h+1)/N). On re-factorization to M hosts, dst d
+    needs bytes overlapping [d/M, (d+1)/M) — moves are the off-diagonal
+    overlaps (contiguous-range reshard, the standard scalable scheme).
+    """
+    n = int(np.prod(old_shape))
+    m = int(np.prod(new_shape))
+    moves: list[tuple[int, int]] = []
+    moved = 0.0
+    for d in range(m):
+        lo, hi = d / m, (d + 1) / m
+        for s in range(n):
+            slo, shi = s / n, (s + 1) / n
+            ov = max(0.0, min(hi, shi) - max(lo, slo))
+            if ov > 1e-12 and s != d:
+                moves.append((s, d))
+                moved += ov
+    return ElasticPlan(old_shape, new_shape, moves, moved)

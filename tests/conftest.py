@@ -1,0 +1,21 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (the 512-device mesh belongs to dryrun.py
+# only, which is its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)
+
+
+@pytest.fixture
+def x64():
+    with jax.enable_x64(True):
+        yield
