@@ -1,4 +1,5 @@
-"""Shared benchmark plumbing: timing + `name,us_per_call,derived` CSV."""
+"""Shared benchmark plumbing: timing + `name,us_per_call,derived` CSV,
+plus the tiny executor-calibration harness fig7/table4 both drive."""
 from __future__ import annotations
 
 import time
@@ -20,3 +21,43 @@ class timed:
     @property
     def us(self) -> float:
         return (time.time() - self.t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# tiny executor-calibration harness (shared by fig7 / table4)
+# ---------------------------------------------------------------------------
+
+def tiny_exec_setup(seed: int, *, seq: int = 8, n_classes: int = 2):
+    """CPU-scale (cfg, spec, pp) for driving the wave executor — the
+    schedule, not the model size, is what these benchmarks exercise."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs.paper_targets import TINY_TARGET
+    from repro.core import proxy as proxy_mod
+    from repro.core.proxy import ProxySpec
+
+    cfg = dataclasses.replace(TINY_TARGET, vocab_size=64, n_layers=1,
+                              d_model=32, n_heads=2, n_kv_heads=2,
+                              d_head=16, d_ff=64)
+    spec = ProxySpec(1, 2, 4)
+    pp = proxy_mod.random_proxy(jax.random.key(seed), cfg, spec,
+                                seq_len=seq, n_classes=n_classes)
+    return cfg, spec, pp
+
+
+def assert_mirror(report, cfg, spec, *, batch: int, seq: int,
+                  n_classes: int) -> None:
+    """The executed per-batch op stream must equal the analytic mirror
+    (mpc/costs.proxy_exec_cost) to exact integer equality, and the phase
+    ledger must equal the makespan model's inputs."""
+    from repro.mpc import costs
+
+    assert report.agrees()
+    pb = report.per_batch
+    ana = costs.proxy_exec_cost(batch, seq, cfg.d_model, spec.n_heads,
+                                cfg.n_kv_heads, cfg.d_head, spec.mlp_dim,
+                                n_classes, spec.n_layers)
+    assert (pb.rounds, pb.lat_rounds, pb.nbytes, pb.flops) == \
+        (ana.rounds, ana.lat_rounds, ana.nbytes, ana.flops)

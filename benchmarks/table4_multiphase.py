@@ -3,6 +3,11 @@
 CPU-scale accuracy for schedules 16 / (2,16) / (2,8,16) (paper's main
 rows) + the modeled delay of each at paper scale. Paper: multi-phase
 cuts delay 33-61% and holds or improves accuracy.
+
+The paper-scale delays are analytic, but the pricing is calibrated: a
+CPU-scale phase is RUN through the wave executor first and its measured
+per-batch op stream must equal the analytic mirror exactly — the same
+formulas then evaluate the paper geometry.
 """
 from __future__ import annotations
 
@@ -12,9 +17,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
+from benchmarks.common import assert_mirror, emit, timed, tiny_exec_setup
 from repro.configs.paper_targets import TINY_TARGET
-from repro.core import iosched, target as tgt
+from repro.core import executor as executor_mod, iosched, target as tgt
 from repro.core.proxy import ProxySpec
 from repro.core.selection import SelectionConfig, run_selection
 from repro.data.tasks import make_classification_task
@@ -46,6 +51,20 @@ def modeled_delay(phases: list[ProxySpec], n_pool: int = 42_000) -> float:
     return total / 3600
 
 
+def _exec_calibration(t) -> None:
+    """Run one CPU-scale phase through the executor; its measured stream
+    must match the analytic cost formulas to exact integer equality."""
+    cfg, spec, pp = tiny_exec_setup(4)
+    tokens = np.random.default_rng(4).integers(0, cfg.vocab_size, (32, 8))
+    ex = executor_mod.WaveExecutor(executor_mod.ExecConfig(wave=4, batch=8))
+    ex.score_phase(jax.random.key(41), pp, cfg, tokens, spec)
+    rep = ex.reports[-1]
+    assert_mirror(rep, cfg, spec, batch=8, seq=8, n_classes=2)
+    emit("table4.exec_calibration", t.us,
+         {"ledger_agrees": True, "rounds": rep.per_batch.rounds,
+          "nbytes": rep.per_batch.nbytes})
+
+
 def run() -> dict:
     task = make_classification_task(9, n_pool=500, n_test=300, seq=12,
                                     vocab=256, n_classes=4)
@@ -56,6 +75,7 @@ def run() -> dict:
     params0 = tgt.init_classifier(key, cfg, task.n_classes)
     out = {}
     with timed() as t:
+        _exec_calibration(t)
         for name, phases in SCHEDULES.items():
             sel = SelectionConfig(phases=phases, budget_frac=0.25,
                                   boot_frac=0.06, exvivo_steps=150,

@@ -13,9 +13,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-import jax  # noqa: E402
 
 from repro.launch.select import run  # noqa: E402
+from repro.mpc.ring import x64_scope  # noqa: E402
 
 
 def main() -> None:
@@ -24,7 +24,7 @@ def main() -> None:
     ap.add_argument("--pool", type=int, default=600)
     args = ap.parse_args()
     if args.mode == "mpc":
-        with jax.enable_x64(True):
+        with x64_scope():
             out = run(0, args.pool, 0.2, "mpc", finetune_steps=150)
     else:
         out = run(0, args.pool, 0.2, "clear", finetune_steps=150)

@@ -1,0 +1,227 @@
+"""Wave-pipelined MPC executor — the §4.4 schedule, executable.
+
+`core/iosched.py` prices the paper's parallel multiphase schedule; this
+module RUNS it. The Stage-2 sieve's candidate batches are grouped into
+waves of W:
+
+  COALESCE   the share-level proxy forward is `vmap`ped across the wave,
+             so every latency-bound flight (comparisons inside the
+             low-dim MLP ReLUs) is ONE stacked message for W batches —
+             rounds are paid per wave, bytes per batch. Bandwidth-bound
+             Beaver openings remain one flight per batch (their wire
+             time, not their RTTs, is the cost; see comm.record).
+  OVERLAP    waves are double-buffered: wave i+1 is dispatched before
+             blocking on wave i, so batch i's wire/collective time hides
+             behind batch i+1's local compute (JAX async dispatch on one
+             host; async inter-pod collectives on the TPU mesh).
+
+Accounting is part of the execution contract: every flight lands in the
+ambient Ledger through comm.wave_scope, and the phase ledger must satisfy
+`iosched.ledger_agrees` — the same integers the analytic makespan prices.
+The per-batch reference ledger comes from an abstract `jax.eval_shape`
+probe of the identical op stream (zero FLOPs spent), which in turn is
+pinned record-for-record to `mpc/costs.proxy_exec_cost`.
+
+On a pod mesh the wave dimension is a logical sharding axis ("wave" ->
+the data axis; parallel/sharding.py), so W concurrent batches land on
+separate devices and the stacked flights become per-device collectives.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import iosched
+from repro.core import proxy as proxy_mod
+from repro.core.proxy import ProxySpec
+from repro.mpc import comm
+from repro.mpc.comm import Ledger, NetProfile
+from repro.mpc.ring import RING64, RingSpec, x64_scope
+from repro.mpc.sharing import AShare, share
+from repro.parallel import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Runtime knobs for one executor — mirrors iosched.SchedConfig so a
+    measured phase can be priced by the identical schedule."""
+    wave: int = 8                 # batches coalesced per flight
+    coalesce: bool = True
+    overlap: bool = True
+    batch: int = 64               # candidates per batch
+    flops_per_s: float = 10e12
+    ring: RingSpec = RING64
+
+    def sched(self) -> iosched.SchedConfig:
+        return iosched.SchedConfig(coalesce=self.coalesce,
+                                   overlap=self.overlap,
+                                   wave=max(1, self.wave),
+                                   flops_per_s=self.flops_per_s)
+
+
+@dataclasses.dataclass
+class PhaseReport:
+    """What one executed sieve phase put on the wire."""
+    ledger: Ledger                # realized flights, whole phase
+    per_batch: Ledger             # one batch's op stream (probe)
+    n_batches: int
+    n_waves: int
+    wall_s: float
+    sched: iosched.SchedConfig
+
+    def agrees(self) -> bool:
+        """Realized flights == the makespan model's inputs, exactly."""
+        return iosched.ledger_agrees(self.ledger, self.per_batch,
+                                     self.n_batches, self.sched)
+
+    def makespan(self, net: NetProfile) -> float:
+        """Modeled end-to-end delay of this phase's measured op stream."""
+        return iosched.makespan(self.per_batch, self.n_batches, net,
+                                self.sched)
+
+
+class WaveExecutor:
+    """Runs the Stage-2 multiphase sieve through the §4.4 schedule."""
+
+    def __init__(self, cfg: ExecConfig):
+        self.cfg = cfg
+        self.reports: list[PhaseReport] = []
+
+    # -- per-batch op-stream probe --------------------------------------
+    def _probe(self, pp_sh, arch_cfg: ArchConfig, spec: ProxySpec,
+               batch_shape, key) -> Ledger:
+        """Ledger of ONE batch, measured by abstract tracing: the Python
+        protocol runs (so every comm.record fires with real shapes) but
+        no array math executes."""
+        ring = self.cfg.ring
+
+        def fwd(sh, k):
+            return proxy_mod.proxy_entropy_mpc(
+                pp_sh, arch_cfg, AShare(sh, ring), spec, k).sh
+
+        with comm.ledger_scope() as led:
+            jax.eval_shape(fwd,
+                           jax.ShapeDtypeStruct((2,) + batch_shape,
+                                                ring.dtype), key)
+        return led
+
+    # -- the schedule ----------------------------------------------------
+    def score_phase(self, key, pp, arch_cfg: ArchConfig, tokens,
+                    spec: ProxySpec) -> AShare:
+        """Encrypted entropy for every candidate, executed wave-by-wave.
+
+        Identical numerics across all four (coalesce, overlap) variants:
+        per-batch PRNG keys and share masks are assigned once, so the
+        schedule changes only WHEN flights happen, never their contents.
+        """
+        cfg = self.cfg
+        ctx = x64_scope() if cfg.ring.bits >= 64 else contextlib.nullcontext()
+        with ctx:
+            return self._score_phase(key, pp, arch_cfg, tokens, spec)
+
+    def _score_phase(self, key, pp, arch_cfg: ArchConfig, tokens,
+                     spec: ProxySpec) -> AShare:
+        cfg = self.cfg
+        ring = cfg.ring
+        B, W = cfg.batch, max(1, cfg.wave)
+        n = int(tokens.shape[0])
+        seq = int(tokens.shape[1])
+        n_batches = -(-n // B)
+        n_waves = -(-n_batches // W)
+        tok = np.asarray(tokens)
+        full = n_batches * B
+        if full > n:                                   # wrap-pad the tail,
+            reps = -(-full // n)                       # tiling if B > n
+            tok = np.concatenate([tok] * reps)[:full]
+
+        pp_sh = proxy_mod.share_proxy(jax.random.fold_in(key, 1), pp, ring)
+        batch_keys = jax.random.split(jax.random.fold_in(key, 2), n_batches)
+        per_batch = self._probe(pp_sh, arch_cfg, spec,
+                                (B, seq, arch_cfg.d_model), batch_keys[0])
+
+        outer = comm.get_ledger()
+        phase_led = Ledger()
+        scale = jnp.asarray(arch_cfg.d_model ** 0.5, jnp.float32)
+        results: list[jax.Array] = []
+        pending: jax.Array | None = None
+        t0 = time.time()
+        for wi in range(n_waves):
+            b0, b1 = wi * W, min((wi + 1) * W, n_batches)
+            lanes = b1 - b0
+            wave_tok = jnp.asarray(tok[b0 * B:b1 * B]).reshape(lanes, B, seq)
+            x = jnp.take(pp["embed"], wave_tok, axis=0) * scale
+            x_sh = share(jax.random.fold_in(key, 100 + wi),
+                         x.astype(jnp.float32), ring)
+            # party axis -> pod, wave axis -> data devices on a pod mesh
+            sh = sharding.shard(x_sh.sh, "pod", "wave", "batch", None, None)
+            keys = batch_keys[b0:b1]
+
+            with comm.ledger_scope() as wave_led:
+                if cfg.coalesce:
+                    with comm.wave_scope(lanes):
+                        ent = jax.vmap(
+                            lambda s, k: proxy_mod.proxy_entropy_mpc(
+                                pp_sh, arch_cfg, AShare(s, ring), spec,
+                                k).sh,
+                            in_axes=(1, 0), out_axes=1)(sh, keys)
+                else:
+                    ent = jnp.stack(
+                        [proxy_mod.proxy_entropy_mpc(
+                            pp_sh, arch_cfg, AShare(sh[:, li], ring), spec,
+                            keys[li]).sh for li in range(lanes)], axis=1)
+            phase_led.records.extend(wave_led.records)
+            if outer is not None:
+                outer.records.extend(wave_led.records)
+
+            ent = ent.reshape(2, lanes * B)
+            # double buffer: block on wave i-1 only after dispatching i,
+            # so its wire time overlaps this wave's local compute
+            if pending is not None:
+                jax.block_until_ready(pending)
+                pending = None
+            if self.cfg.overlap:
+                pending = ent
+            else:
+                jax.block_until_ready(ent)
+            results.append(ent)
+        if pending is not None:
+            jax.block_until_ready(pending)
+
+        out = jnp.concatenate(results, axis=1)[:, :n]
+        self.reports.append(PhaseReport(
+            ledger=phase_led, per_batch=per_batch, n_batches=n_batches,
+            n_waves=n_waves, wall_s=time.time() - t0, sched=self.cfg.sched()))
+        return AShare(out, ring)
+
+
+def run_variants(key, pp, arch_cfg: ArchConfig, tokens, spec: ProxySpec,
+                 *, batch: int, wave: int,
+                 flops_per_s: float = 10e12) -> dict[str, "PhaseReport"]:
+    """Fig-7's four (coalesce, overlap) points, executed on one pool.
+
+    Returns name -> PhaseReport; every variant is checked for exact
+    ledger agreement with the makespan inputs, and all variants produce
+    bitwise-identical scores (the schedule moves flights, not values).
+    """
+    reports = {}
+    ref = None
+    for name, (co, ov) in iosched.FIG7_VARIANTS.items():
+        ex = WaveExecutor(ExecConfig(wave=wave, coalesce=co, overlap=ov,
+                                     batch=batch, flops_per_s=flops_per_s))
+        ent = ex.score_phase(key, pp, arch_cfg, tokens, spec)
+        rep = ex.reports[-1]
+        if not rep.agrees():
+            raise AssertionError(
+                f"executor ledger for {name} diverges from makespan inputs")
+        if ref is None:
+            ref = np.asarray(ent.sh)
+        elif not np.array_equal(ref, np.asarray(ent.sh)):
+            raise AssertionError(f"variant {name} changed scores")
+        reports[name] = rep
+    return reports

@@ -21,6 +21,11 @@ profile, schedules the TPU deployment (launch/select.py), where overlap
 is realized with double-buffered inter-pod collectives (kernels aside,
 XLA async collectives hide the share-exchange behind the Beaver-local
 matmuls).
+
+The schedule is EXECUTABLE, not just priced: core/executor.py runs the
+Stage-2 sieve through it (vmapped waves + double-buffered dispatch) and
+its recorded flight ledger must reproduce this module's inputs exactly —
+`stream_totals` states the contract, `ledger_agrees` checks it.
 """
 from __future__ import annotations
 
@@ -40,23 +45,53 @@ class SchedConfig:
 
 def batch_times(led: Ledger, net: NetProfile, sched: SchedConfig):
     """(latency_time, wire_time, compute_time) for ONE batch's ledger."""
-    lat_rounds = sum(r.rounds for r in led.records if r.tag == "lat")
-    bw_rounds = sum(r.rounds for r in led.records if r.tag == "bw")
+    lat_rounds = led.lat_rounds
+    bw_rounds = led.bw_rounds
     nbytes = led.nbytes
     compute = led.flops / sched.flops_per_s
     return lat_rounds, bw_rounds, nbytes, compute
+
+
+def stream_totals(per_batch: Ledger, n_batches: int,
+                  sched: SchedConfig) -> dict[str, int]:
+    """Integer totals of the op stream the schedule emits for n_batches —
+    exactly what `makespan` prices, and exactly what the wave executor's
+    phase ledger must add up to (see `ledger_agrees`).
+
+    Coalescing stacks latency-bound flights wave-wide (rounds once per
+    wave); bandwidth-bound openings stay one flight per batch; bytes and
+    flops are schedule-invariant.
+    """
+    wave = max(1, sched.wave)            # wave<=0 degenerates to serial
+    waves = max(1, -(-n_batches // wave))
+    lat_pb = per_batch.lat_rounds
+    lat_total = waves * lat_pb if sched.coalesce else n_batches * lat_pb
+    return {
+        "lat_rounds": lat_total,
+        "bw_rounds": n_batches * per_batch.bw_rounds,
+        "nbytes": n_batches * per_batch.nbytes,
+        "flops": n_batches * per_batch.flops,
+    }
+
+
+def ledger_agrees(stream: Ledger, per_batch: Ledger, n_batches: int,
+                  sched: SchedConfig) -> bool:
+    """Exact (integer) agreement between a realized executor ledger and
+    the makespan model's inputs for the same per-batch op stream."""
+    want = stream_totals(per_batch, n_batches, sched)
+    return (stream.lat_rounds == want["lat_rounds"]
+            and stream.bw_rounds == want["bw_rounds"]
+            and stream.nbytes == want["nbytes"]
+            and stream.flops == want["flops"])
 
 
 def makespan(per_batch: Ledger, n_batches: int, net: NetProfile,
              sched: SchedConfig) -> float:
     """End-to-end delay of n_batches identical batch ledgers."""
     lat_rounds, bw_rounds, nbytes, compute = batch_times(per_batch, net, sched)
-    if sched.coalesce:
-        waves = max(1, -(-n_batches // sched.wave))
-        latency_total = (waves * lat_rounds + n_batches * bw_rounds) * net.latency_s
-    else:
-        latency_total = n_batches * (lat_rounds + bw_rounds) * net.latency_s
-    wire_total = n_batches * nbytes / net.bandwidth_Bps
+    t = stream_totals(per_batch, n_batches, sched)
+    latency_total = (t["lat_rounds"] + t["bw_rounds"]) * net.latency_s
+    wire_total = t["nbytes"] / net.bandwidth_Bps
     compute_total = n_batches * compute
     if sched.overlap:
         # two-stage pipeline: the dominant resource runs continuously, the
@@ -69,16 +104,19 @@ def makespan(per_batch: Ledger, n_batches: int, net: NetProfile,
     return latency_total + wire_total + compute_total
 
 
+# Fig 7's ablation points: variant name -> (coalesce, overlap). The single
+# source of truth for both the analytic sweep below and the executed sweep
+# (core/executor.run_variants).
+FIG7_VARIANTS = {"serial": (False, False), "+coalesce": (True, False),
+                 "+overlap": (False, True), "ours": (True, True)}
+
+
 def fig7_variants(per_batch: Ledger, n_batches: int, net: NetProfile,
                   flops_per_s: float = 10e12) -> dict[str, float]:
     """The paper's ablation points: PMT (no IO sched) vs Ours (full)."""
-    base = SchedConfig(coalesce=False, overlap=False, flops_per_s=flops_per_s)
-    co = SchedConfig(coalesce=True, overlap=False, flops_per_s=flops_per_s)
-    ov = SchedConfig(coalesce=False, overlap=True, flops_per_s=flops_per_s)
-    full = SchedConfig(coalesce=True, overlap=True, flops_per_s=flops_per_s)
     return {
-        "serial": makespan(per_batch, n_batches, net, base),
-        "+coalesce": makespan(per_batch, n_batches, net, co),
-        "+overlap": makespan(per_batch, n_batches, net, ov),
-        "ours": makespan(per_batch, n_batches, net, full),
+        name: makespan(per_batch, n_batches, net,
+                       SchedConfig(coalesce=co, overlap=ov,
+                                   flops_per_s=flops_per_s))
+        for name, (co, ov) in FIG7_VARIANTS.items()
     }

@@ -240,6 +240,40 @@ def invivo_finetune(key, pp, cfg: ArchConfig, tokens, labels,
     return pp
 
 
+def random_proxy(key, cfg: ArchConfig, spec: ProxySpec, seq_len: int,
+                 n_classes: int):
+    """Random-weight proxy, structurally identical to build_proxy output.
+
+    Skips stats collection and ex-vivo training — for harnesses that
+    exercise the *protocol* (wave executor, cost-ledger tests, fig7)
+    where the MLPs' fidelity is irrelevant but the op stream must be the
+    real one. Weights are scaled small so fixed-point entropies stay in
+    the ring's comfortable range.
+    """
+    dh, w = cfg.d_head, spec.n_heads
+    wk = min(w, cfg.n_kv_heads)
+    L = spec.n_layers
+    ks = jax.random.split(key, 6 + 2 * L + 1)
+    nrm = lambda k, shape, s: jax.random.normal(k, shape) * s  # noqa: E731
+    return {
+        "embed": nrm(ks[0], (cfg.vocab_size, cfg.d_model), 0.02),
+        "cls_head": nrm(ks[1], (cfg.d_model, n_classes), 0.2),
+        "attn": {
+            "wq": nrm(ks[2], (L, cfg.d_model, w * dh), 0.08),
+            "wk": nrm(ks[3], (L, cfg.d_model, wk * dh), 0.08),
+            "wv": nrm(ks[4], (L, cfg.d_model, wk * dh), 0.08),
+            "wo": nrm(ks[5], (L, w * dh, cfg.d_model), 0.08),
+        },
+        "ln_scale": jnp.ones((L, cfg.d_model)),
+        "ln_bias": jnp.zeros((L, cfg.d_model)),
+        "mlp_sm": [approx.init_mlp(ks[6 + 2 * i], seq_len, spec.mlp_dim,
+                                   seq_len) for i in range(L)],
+        "mlp_ln": [approx.init_mlp(ks[7 + 2 * i], 1, spec.mlp_dim, 1)
+                   for i in range(L)],
+        "mlp_se": approx.init_mlp(ks[-1], n_classes, spec.mlp_dim, 1),
+    }
+
+
 # ---------------------------------------------------------------------------
 # MPC execution
 # ---------------------------------------------------------------------------

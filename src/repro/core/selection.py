@@ -11,7 +11,10 @@ Two execution modes share the same control flow:
   mode="clear"  float proxies (fast; used for efficacy experiments and
                 as the numerical reference)
   mode="mpc"    share-level proxies over the RING64 oracle ring with the
-                ambient cost Ledger recording every wire interaction
+                ambient cost Ledger recording every wire interaction,
+                scheduled by the wave executor (core/executor.py): W
+                batches coalesced per latency flight, waves
+                double-buffered so wire time hides behind compute
 
 Phase boundaries checkpoint the surviving index set — a natural
 fault-tolerance barrier (runtime/ft.py restores an interrupted
@@ -29,10 +32,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import proxy as proxy_mod, target as target_mod
+from repro.core.executor import ExecConfig, PhaseReport, WaveExecutor
 from repro.core.proxy import ProxySpec
 from repro.mpc import quickselect
-from repro.mpc.sharing import share, AShare
-from repro.mpc.ring import RING64
+from repro.mpc.sharing import AShare
+from repro.mpc.ring import x64_scope
 
 
 @dataclasses.dataclass
@@ -47,6 +51,9 @@ class SelectionConfig:
     mode: str = "clear"               # or "mpc"
     checkpoint_dir: str | None = None
     variant: frozenset = frozenset({"sm", "ln", "se"})  # Table 2/3 ablations
+    # mode="mpc" runs through the wave executor; (wave, coalesce, overlap)
+    # are the §4.4 schedule — Fig 7's four variants as runtime flags
+    executor: ExecConfig = dataclasses.field(default_factory=ExecConfig)
 
 
 @dataclasses.dataclass
@@ -55,6 +62,7 @@ class SelectionResult:
     boot_idx: np.ndarray
     phase_survivors: list[np.ndarray]
     appraisal_entropy: float
+    exec_reports: list[PhaseReport] = dataclasses.field(default_factory=list)
 
 
 def two_phase_default(seq_len_heads: int = 12) -> list[ProxySpec]:
@@ -84,20 +92,6 @@ def _score_clear(pp, cfg, tokens, spec,
     for i in range(0, tokens.shape[0], 256):
         out.append(np.asarray(fn(tokens[i:i + 256])))
     return np.concatenate(out)
-
-
-def _score_mpc(key, pp, cfg, tokens, spec, batch: int) -> AShare:
-    """Returns encrypted entropy shares for every candidate."""
-    pp_sh = proxy_mod.share_proxy(jax.random.fold_in(key, 1), pp)
-    ents = []
-    for i in range(0, tokens.shape[0], batch):
-        tok = tokens[i:i + batch]
-        x = jnp.take(pp["embed"], tok, axis=0) * (cfg.d_model ** 0.5)
-        key, kx, kf = jax.random.split(key, 3)
-        x_sh = share(kx, x.astype(jnp.float32))
-        ents.append(proxy_mod.proxy_entropy_mpc(pp_sh, cfg, x_sh, spec, kf))
-    sh = jnp.concatenate([e.sh for e in ents], axis=1)
-    return AShare(sh, ents[0].ring)
 
 
 def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
@@ -137,18 +131,23 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
     surviving = np.setdiff1d(np.arange(n), boot_idx)
     keeps = _phase_keep(len(surviving), budget - n_boot, sel.phases)
     survivors_log = []
+    exec_reports: list[PhaseReport] = []
     appraisal = 0.0
     for pi, (ph, pp, keep) in enumerate(zip(sel.phases, proxies, keeps)):
         tok = pool_tokens[surviving]
         if sel.mode == "mpc":
             key, ks, kq = jax.random.split(key, 3)
-            ent_sh = _score_mpc(ks, pp, cfg, tok, ph, sel.score_batch)
-            top_local = quickselect.top_k_indices(ent_sh, keep,
-                                                  seed=1234 + pi)
-            appraisal = float(jnp.mean(
-                (ent_sh[np.asarray(top_local)].sh[0]
-                 + ent_sh[np.asarray(top_local)].sh[1]).astype(jnp.float64)
-                / ent_sh.ring.scale))
+            execu = WaveExecutor(dataclasses.replace(
+                sel.executor, batch=min(sel.score_batch, len(surviving))))
+            ent_sh = execu.score_phase(ks, pp, cfg, tok, ph)
+            exec_reports.extend(execu.reports)
+            with x64_scope():      # quickselect compares int64 shares
+                top_local = quickselect.top_k_indices(ent_sh, keep,
+                                                      seed=1234 + pi)
+                appraisal = float(jnp.mean(
+                    (ent_sh[np.asarray(top_local)].sh[0]
+                     + ent_sh[np.asarray(top_local)].sh[1]).astype(jnp.float64)
+                    / ent_sh.ring.scale))
         else:
             ents = _score_clear(pp, cfg, tok, ph, sel.variant)
             top_local = np.argsort(ents)[-keep:]
@@ -158,7 +157,8 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
         _checkpoint_phase(sel, pi, surviving)
 
     selected = np.sort(np.concatenate([boot_idx, surviving]))
-    return SelectionResult(selected, boot_idx, survivors_log, appraisal)
+    return SelectionResult(selected, boot_idx, survivors_log, appraisal,
+                           exec_reports)
 
 
 def _checkpoint_phase(sel: SelectionConfig, phase: int, surviving) -> None:

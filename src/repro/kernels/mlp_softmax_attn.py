@@ -1,4 +1,4 @@
-"""Fused MLP-softmax attention — the paper's hot spot, TPU-native.
+r"""Fused MLP-softmax attention — the paper's hot spot, TPU-native.
 
 SelectFormer replaces softmax(scores) with a 2-layer MLP along the KV
 axis: probs = relu(S @ W1 + b1) @ W2 + b2. We exploit associativity:

@@ -10,6 +10,11 @@ driver, pointed at the pod mesh and a real corpus, is the deployment
 entry point. Delay numbers come from the calibrated analytic cost model
 (mpc/costs.py) scheduled by core/iosched.py — identical formulas to the
 executable share-level path, evaluated at the paper's geometry.
+
+--mode mpc runs Stage 2 through the wave executor (core/executor.py);
+--wave/--no-coalesce/--no-overlap select among Fig 7's four schedule
+variants at runtime, and the output includes each phase's realized
+flight ledger plus its exact agreement with the makespan model.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.configs.paper_targets import TINY_TARGET
 from repro.core import target as tgt, iosched
+from repro.core.executor import ExecConfig
 from repro.core.proxy import ProxySpec
 from repro.core.selection import SelectionConfig, run_selection
 from repro.data.tasks import make_classification_task
@@ -67,7 +73,9 @@ def paper_scale_delay(n_pool: int, budget_frac: float, *, seq: int = 128,
 
 
 def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
-        mode: str = "clear", finetune_steps: int = 250) -> dict:
+        mode: str = "clear", finetune_steps: int = 250, *,
+        wave: int = 8, coalesce: bool = True, overlap: bool = True,
+        score_batch: int = 64) -> dict:
     task = make_classification_task(seed, n_pool=n_pool, n_test=400,
                                     seq=16, vocab=256, n_classes=4)
     cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
@@ -78,12 +86,29 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         phases=[ProxySpec(1, 2, 2, 0.4), ProxySpec(2, 4, 8, 1.0)],
         budget_frac=budget, boot_frac=0.05, mode=mode,
         exvivo_steps=150, invivo_steps=80, finetune_steps=100,
-        checkpoint_dir="/tmp/selectformer_phases")
+        score_batch=score_batch,
+        checkpoint_dir="/tmp/selectformer_phases",
+        executor=ExecConfig(wave=wave, coalesce=coalesce, overlap=overlap))
     t0 = time.time()
     res = run_selection(key, params0, cfg, task.pool_tokens, sel,
                         n_classes=task.n_classes,
                         boot_labels_fn=lambda i: task.pool_labels[i])
     sel_time = time.time() - t0
+
+    # realized §4.4 schedule: per-phase flight ledgers, checked against
+    # the analytic makespan's inputs (exact integer agreement)
+    executed = None
+    if mode == "mpc":
+        executed = {"phases": [], "ledger_agrees": True}
+        for rep in res.exec_reports:
+            executed["ledger_agrees"] &= rep.agrees()
+            executed["phases"].append({
+                "n_batches": rep.n_batches, "n_waves": rep.n_waves,
+                "lat_rounds": rep.ledger.lat_rounds,
+                "bw_rounds": rep.ledger.bw_rounds,
+                "nbytes": rep.ledger.nbytes,
+                "makespan_wan_s": rep.makespan(WAN),
+                "wall_s": rep.wall_s})
 
     def finetune_and_eval(idx, tag):
         p, _ = tgt.finetune(jax.random.fold_in(key, 7), params0, cfg,
@@ -104,6 +129,7 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
             "appraisal_entropy": res.appraisal_entropy,
             "selection_wall_s": sel_time,
             "paper_scale_delay": delays,
+            "executed": executed,
             "n_selected": int(len(res.selected))}
 
 
@@ -113,8 +139,23 @@ def main() -> None:
     ap.add_argument("--pool", type=int, default=800)
     ap.add_argument("--budget", type=float, default=0.2)
     ap.add_argument("--mode", choices=["clear", "mpc"], default="clear")
+    ap.add_argument("--wave", type=int, default=8,
+                    help="batches coalesced per MPC flight (mode=mpc)")
+    ap.add_argument("--score-batch", type=int, default=64)
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="disable latency-flight coalescing (fig7 'serial')")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable comm/compute double buffering")
     args = ap.parse_args()
-    out = run(args.seed, args.pool, args.budget, args.mode)
+    out = run(args.seed, args.pool, args.budget, args.mode,
+              wave=args.wave, coalesce=not args.no_coalesce,
+              overlap=not args.no_overlap, score_batch=args.score_batch)
+    if out["executed"] is not None:
+        ex = out["executed"]
+        ph = ex["phases"]
+        print(f"[select] executed {len(ph)} MPC phases, ledger_agrees="
+              f"{ex['ledger_agrees']}; per-phase makespan(WAN) "
+              + ", ".join(f"{p['makespan_wan_s']:.1f}s" for p in ph))
     print(f"[select] ours={out['acc_ours']:.3f} random={out['acc_random']:.3f} "
           f"(+{out['gain']:.3f}); modeled WAN delay "
           f"{out['paper_scale_delay']['wan']['ours_hours']:.1f}h vs oracle "

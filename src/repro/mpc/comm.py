@@ -45,6 +45,7 @@ class CostRecord:
     numel: int = 0
     flops: int = 0       # local per-party compute, for the overlap model
     tag: str = ""        # scheduler class: "bw" (bandwidth-bound) | "lat"
+    wave: int = 1        # batches serviced by this flight (executor waves)
 
 
 class Ledger:
@@ -68,6 +69,18 @@ class Ledger:
     @property
     def flops(self) -> int:
         return sum(r.flops for r in self.records)
+
+    # ---- scheduler views (tagged flight classes, paper §4.4) --------
+    def rounds_tagged(self, tag: str) -> int:
+        return sum(r.rounds for r in self.records if r.tag == tag)
+
+    @property
+    def lat_rounds(self) -> int:
+        return self.rounds_tagged("lat")
+
+    @property
+    def bw_rounds(self) -> int:
+        return self.rounds_tagged("bw")
 
     def serial_time(self, net: NetProfile, flops_per_s: float = 10e12) -> float:
         return net.time(self.rounds, self.nbytes, self.flops / flops_per_s)
@@ -100,11 +113,43 @@ def get_ledger() -> Ledger | None:
     return getattr(_state, "ledger", None)
 
 
+def get_wave() -> int:
+    return getattr(_state, "wave", 1)
+
+
 def record(op: str, rounds: int, nbytes: int, numel: int = 0,
            flops: int = 0, tag: str = "bw") -> None:
+    """Record one wire interaction into the ambient Ledger.
+
+    Inside a wave_scope(W) the op services W coalesced batches in a
+    single trace (the executor vmaps the wave), so the structural shapes
+    seen here are per-batch: bytes/numel/flops scale by W. Rounds follow
+    the paper's §4.4 split — latency-bound flights ("lat") are stacked
+    into ONE message per wave (rounds paid once), bandwidth-bound Beaver
+    openings ("bw") stay one flight per batch: their wire time is what
+    the overlap stage hides, and serializing them costs no extra RTTs
+    on a saturated link.
+    """
     led = get_ledger()
-    if led is not None:
-        led.add(CostRecord(op, rounds, nbytes, numel, flops, tag))
+    if led is None:
+        return
+    w = get_wave()
+    if w > 1 and tag != "lat":
+        rounds = rounds * w
+    led.add(CostRecord(op, rounds, nbytes * w, numel * w, flops * w, tag,
+                       wave=w))
+
+
+@contextlib.contextmanager
+def wave_scope(wave: int) -> Iterator[None]:
+    """Mark that every op recorded inside services `wave` coalesced
+    batches in one flight (the executor's vmapped wave trace)."""
+    prev = get_wave()
+    _state.wave = wave
+    try:
+        yield
+    finally:
+        _state.wave = prev
 
 
 @contextlib.contextmanager

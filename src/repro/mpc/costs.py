@@ -228,6 +228,50 @@ def proxy_model_cost(g: BlockGeom, layers: int, classes: int,
     return led
 
 
+def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
+                    kv_heads: int, d_head: int, mlp_hidden: int,
+                    classes: int, n_layers: int,
+                    op: str = "exec") -> Ledger:
+    """EXACT mirror of core/proxy.proxy_entropy_mpc's RING64 op stream.
+
+    Record-for-record prediction of what one batch of the executable
+    share-level proxy forward puts on the wire — the contract the wave
+    executor's probe ledger is tested against (tests/test_executor.py)
+    and the per-batch input fig7 feeds to iosched.makespan. Unlike
+    `proxy_model_cost` (paper-geometry pricing with fused QKV), this
+    follows the executed path: separate q/k/v openings, two LayerNorm
+    affine multiplies, GQA head grouping, local (record-free) RING64
+    truncation. Biases add no wire cost, so the formulas hold with or
+    without them.
+    """
+    w, wk = heads, min(kv_heads, heads)
+    t = bsz * seq
+    layer = merge(
+        # MLP-LayerNorm: numerator exact (var multiply), rsqrt emulated,
+        # then normalize-and-affine multiplies against shared gamma
+        mul_cost(t * d_model, f"{op}.ln.var"),
+        mlp_cost(t, 1, mlp_hidden, 1, f"{op}.mlp_ln"),
+        mul_cost(t * d_model, f"{op}.ln.normmul"),
+        mul_cost(t * d_model, f"{op}.ln.affine"),
+        # pruned attention: per-projection Beaver matmuls
+        matmul_cost(1, t, d_model, w * d_head, f"{op}.q"),
+        matmul_cost(1, t, d_model, wk * d_head, f"{op}.k"),
+        matmul_cost(1, t, d_model, wk * d_head, f"{op}.v"),
+        matmul_cost(bsz * w, seq, d_head, seq, f"{op}.scores"),
+        mlp_cost(bsz * w * seq, seq, mlp_hidden, seq, f"{op}.mlp_sm"),
+        matmul_cost(bsz * w, seq, seq, d_head, f"{op}.av"),
+        matmul_cost(1, t, w * d_head, d_model, f"{op}.out"),
+    )
+    led = Ledger()
+    for _ in range(n_layers):
+        led.records.extend(layer.records)
+    led.records.extend(matmul_cost(1, bsz, d_model, classes,
+                                   f"{op}.head").records)
+    led.records.extend(mlp_cost(bsz, classes, mlp_hidden, 1,
+                                f"{op}.mlp_se").records)
+    return led
+
+
 def mpcformer_block_cost(g: BlockGeom) -> Ledger:
     """MPCFormer baseline block: "2Quad" softmax (exp->(x+c)^2, recip stays),
     quad GeLU, keeps FFN and full dims — no dimension reduction."""

@@ -28,6 +28,22 @@ def _numel(shape) -> int:
     return n
 
 
+def _open_flight(op: str, tensors, ring: RingSpec, *, numel: int,
+                 flops: int = 0, tag: str = "bw"):
+    """Open masked share tensors in ONE simultaneous message flight.
+
+    All tensors of a flight ride the same round trip (each party sends
+    its shares of every tensor at once), so the flight costs 1 round and
+    2 * elem_bytes * total-elements on the wire. This is the unit the
+    wave executor schedules: under comm.wave_scope the flight's bytes
+    scale with the wave while latency-bound flights keep their rounds.
+    """
+    wire_elems = sum(_numel(t.shape[1:]) for t in tensors)
+    comm.record(op, rounds=1, nbytes=2 * ring.elem_bytes * wire_elems,
+                numel=numel, flops=flops, tag=tag)
+    return tuple(t[0] + t[1] for t in tensors)
+
+
 # ---------------------------------------------------------------------------
 # local (round-free) ops
 # ---------------------------------------------------------------------------
@@ -137,11 +153,9 @@ def mul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True) -> AShar
     a, b, c = beaver.mul_triple(key, shape, ring)
     eps = xb.sh - a.sh
     dlt = yb.sh - b.sh
-    eps_o = eps[0] + eps[1]                    # opened values (1 joint round)
-    dlt_o = dlt[0] + dlt[1]
     n = _numel(shape)
-    comm.record("beaver_mul", rounds=1, nbytes=2 * 2 * ring.elem_bytes * n,
-                numel=n, flops=4 * n, tag="bw")
+    eps_o, dlt_o = _open_flight("beaver_mul", (eps, dlt), ring,
+                                numel=n, flops=4 * n)
     z = c.sh + eps_o * b.sh + dlt_o * a.sh
     z = z.at[0].add(eps_o * dlt_o)
     out = AShare(z, ring)
@@ -163,14 +177,12 @@ def matmul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True) -> AS
     a, b, c = beaver.matmul_triple(key, x.shape, y.shape, ring)
     eps = x.sh - a.sh
     dlt = y.sh - b.sh
-    eps_o = eps[0] + eps[1]
-    dlt_o = dlt[0] + dlt[1]
     n = _numel(x.shape) + _numel(y.shape)
     m, k = x.shape[-2], x.shape[-1]
     n_out = y.shape[-1]
     batch = _numel(x.shape[:-2])
-    comm.record("beaver_matmul", rounds=1, nbytes=2 * ring.elem_bytes * n,
-                numel=n, flops=2 * batch * m * k * n_out, tag="bw")
+    eps_o, dlt_o = _open_flight("beaver_matmul", (eps, dlt), ring, numel=n,
+                                flops=2 * batch * m * k * n_out)
     # party-local: z_p = c_p + eps@b_p + a_p@dlt ; party0 adds eps@dlt
     eb = jnp.matmul(jnp.stack([eps_o, eps_o]), b.sh, preferred_element_type=ring.dtype)
     ad = jnp.matmul(a.sh, jnp.stack([dlt_o, dlt_o]), preferred_element_type=ring.dtype)

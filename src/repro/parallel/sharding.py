@@ -10,6 +10,8 @@ Policy (DP x TP, pod = extra DP dim or MPC party axis):
   model   -> "model" (attention heads, ffn hidden, vocab, experts)
   seq     -> None by default; the SP hillclimb maps it to "model" for
              norm/ffn regions (see EXPERIMENTS.md §Perf)
+  wave    -> "data": the MPC wave executor's stacked-batch dim, so W
+             coalesced batches shard across a pod's devices
 
 Uneven shards (e.g. 14 heads on 16-way model axis, vocab 49155) are legal
 under GSPMD; rules prefer even dims but never fail on uneven ones.
@@ -51,6 +53,11 @@ class ShardRules:
             return "model" if "model" in self.mesh.axis_names else None
         if logical == "seq":
             return self.seq_axis
+        if logical == "wave":
+            # the MPC executor's wave dim: W coalesced batches spread
+            # across the data axis so a pod mesh runs them on separate
+            # devices and wave flights become per-device collectives
+            return "data" if "data" in self.mesh.axis_names else None
         if logical == "pod":
             return "pod" if "pod" in self.mesh.axis_names else None
         if logical == "fsdp":

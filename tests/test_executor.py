@@ -1,0 +1,218 @@
+"""Wave executor: the §4.4 schedule realized, not just priced.
+
+Three contracts:
+  1. LEDGER AGREEMENT — the executor's recorded flights for a phase are
+     exactly (integer equality) the inputs iosched.makespan prices, and
+     the measured per-batch op stream matches mpc/costs.proxy_exec_cost
+     record-for-record.
+  2. SCHEDULE INVARIANCE — the four (coalesce, overlap) variants move
+     flights around but never change a single share: scores are bitwise
+     identical, so wave execution selects the same survivors as the
+     serial path.
+  3. PARITY — wave-MPC scores track the clear float path (and selection
+     survivors agree between mode="clear" and mode="mpc").
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper_targets import TINY_TARGET
+from repro.core import iosched
+from repro.core import proxy as proxy_mod
+from repro.core.executor import ExecConfig, WaveExecutor
+from repro.core.proxy import ProxySpec
+from repro.mpc import comm, costs, quickselect
+from repro.mpc.comm import WAN, Ledger, ledger_scope
+from repro.mpc.ring import x64_scope
+
+CFG = dataclasses.replace(TINY_TARGET, vocab_size=64, n_layers=1,
+                          d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
+                          d_ff=64)
+SPEC = ProxySpec(1, 2, 4)
+SEQ, BATCH, WAVE, CLASSES = 8, 8, 4, 3
+POOL = 48                        # 6 batches -> 2 waves of (4, 2)
+K = jax.random.key(0)
+
+VARIANTS = iosched.FIG7_VARIANTS
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return np.random.default_rng(0).integers(0, CFG.vocab_size, (POOL, SEQ))
+
+
+@pytest.fixture(scope="module")
+def pp():
+    return proxy_mod.random_proxy(K, CFG, SPEC, seq_len=SEQ,
+                                  n_classes=CLASSES)
+
+
+@pytest.fixture(scope="module")
+def executed(pp, pool):
+    """All four schedule variants run on the same pool with the same
+    per-batch keys -> {name: (scores_sh, PhaseReport)}."""
+    out = {}
+    for name, (co, ov) in VARIANTS.items():
+        ex = WaveExecutor(ExecConfig(wave=WAVE, coalesce=co, overlap=ov,
+                                     batch=BATCH))
+        ent = ex.score_phase(jax.random.fold_in(K, 1), pp, CFG, pool, SPEC)
+        out[name] = (ent, ex.reports[-1])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# wave flight accounting primitives
+# ---------------------------------------------------------------------------
+
+class TestWaveScope:
+    def test_lat_rounds_paid_once_bw_per_batch(self):
+        with ledger_scope() as led:
+            with comm.wave_scope(4):
+                comm.record("cmp", rounds=8, nbytes=432, numel=1, tag="lat")
+                comm.record("open", rounds=1, nbytes=100, numel=10,
+                            flops=5, tag="bw")
+        cmp_rec, open_rec = led.records
+        assert (cmp_rec.rounds, cmp_rec.nbytes, cmp_rec.wave) == (8, 4 * 432, 4)
+        assert (open_rec.rounds, open_rec.nbytes, open_rec.flops) == \
+            (4, 400, 20)
+
+    def test_scope_restores(self):
+        with comm.wave_scope(4):
+            assert comm.get_wave() == 4
+        assert comm.get_wave() == 1
+
+
+# ---------------------------------------------------------------------------
+# 1. ledger agreement
+# ---------------------------------------------------------------------------
+
+class TestLedgerAgreement:
+    def test_per_batch_probe_matches_analytic_exactly(self, executed):
+        pb = executed["ours"][1].per_batch
+        ana = costs.proxy_exec_cost(BATCH, SEQ, CFG.d_model, SPEC.n_heads,
+                                    CFG.n_kv_heads, CFG.d_head,
+                                    SPEC.mlp_dim, CLASSES, SPEC.n_layers)
+        assert len(pb.records) == len(ana.records)
+        for got, want in zip(pb.records, ana.records):
+            assert (got.rounds, got.nbytes, got.numel, got.flops, got.tag) \
+                == (want.rounds, want.nbytes, want.numel, want.flops,
+                    want.tag), (got, want)
+
+    def test_all_variants_agree_with_makespan_inputs(self, executed):
+        for name, (_, rep) in executed.items():
+            assert rep.agrees(), name
+
+    def test_coalesce_strips_exactly_the_wave_lat_rounds(self, executed):
+        pb = executed["ours"][1].per_batch
+        n_b = executed["ours"][1].n_batches
+        n_w = executed["ours"][1].n_waves
+        assert executed["ours"][1].ledger.lat_rounds == n_w * pb.lat_rounds
+        assert executed["serial"][1].ledger.lat_rounds == n_b * pb.lat_rounds
+        # bytes and bw rounds are schedule-invariant
+        for name, (_, rep) in executed.items():
+            assert rep.ledger.nbytes == n_b * pb.nbytes, name
+            assert rep.ledger.bw_rounds == n_b * pb.bw_rounds, name
+
+    def test_disagreement_detected(self, executed):
+        """ledger_agrees is a real check: a dropped flight must fail it."""
+        rep = executed["ours"][1]
+        broken = Ledger()
+        broken.records = rep.ledger.records[:-1]
+        assert not iosched.ledger_agrees(broken, rep.per_batch,
+                                         rep.n_batches, rep.sched)
+
+    def test_makespan_ordering_realized(self, executed):
+        mk = {n: rep.makespan(WAN) for n, (_, rep) in executed.items()}
+        assert mk["serial"] >= mk["+coalesce"] >= mk["ours"]
+        assert mk["serial"] >= mk["+overlap"] >= mk["ours"]
+
+
+# ---------------------------------------------------------------------------
+# 2. schedule invariance / serial equivalence
+# ---------------------------------------------------------------------------
+
+class TestEquivalence:
+    def test_variants_bitwise_identical_scores(self, executed):
+        ref = np.asarray(executed["serial"][0].sh)
+        for name, (ent, _) in executed.items():
+            assert np.array_equal(ref, np.asarray(ent.sh)), name
+
+    def test_wave_selects_same_survivors_as_serial(self, executed):
+        with x64_scope():
+            picks = {name: quickselect.top_k_indices(ent, 16, seed=3)
+                     for name, (ent, _) in executed.items()}
+        for name, idx in picks.items():
+            assert np.array_equal(idx, picks["serial"]), name
+
+    def test_wave_matches_clear_proxy(self, executed, pp, pool):
+        """Parity of the executed wave path against the float reference."""
+        clear = np.asarray(proxy_mod.proxy_entropy_clear(
+            pp, CFG, jnp.asarray(pool), SPEC))
+        ent, _ = executed["ours"]
+        with x64_scope():
+            got = np.asarray((ent.sh[0] + ent.sh[1]).astype(jnp.float64)
+                             / ent.ring.scale)
+        assert np.abs(got - clear).max() < 1e-3
+        k = 16
+        top_c = set(np.argsort(clear)[-k:].tolist())
+        top_m = set(np.argsort(got)[-k:].tolist())
+        assert len(top_c & top_m) >= k - 1
+
+
+# ---------------------------------------------------------------------------
+# 3. end-to-end: selection drives the executor
+# ---------------------------------------------------------------------------
+
+class TestSelectionIntegration:
+    def test_clear_vs_mpc_same_survivors(self):
+        from repro.core.selection import SelectionConfig, run_selection
+        from repro.core import target as tgt
+        from repro.data.tasks import make_classification_task
+        task = make_classification_task(5, n_pool=96, n_test=50, seq=8,
+                                        vocab=64, n_classes=3)
+        cfg = dataclasses.replace(CFG, vocab_size=task.vocab)
+        params = tgt.init_classifier(K, cfg, task.n_classes)
+        results = {}
+        for mode in ("clear", "mpc"):
+            sel = SelectionConfig(
+                phases=[ProxySpec(1, 2, 2, 1.0)], budget_frac=0.3,
+                boot_frac=0.1, mode=mode, score_batch=16,
+                exvivo_steps=60, invivo_steps=20, finetune_steps=30,
+                executor=ExecConfig(wave=3))
+            results[mode] = run_selection(
+                K, params, cfg, task.pool_tokens, sel,
+                n_classes=task.n_classes,
+                boot_labels_fn=lambda i: task.pool_labels[i])
+        clear_sel = set(results["clear"].selected.tolist())
+        mpc_sel = set(results["mpc"].selected.tolist())
+        overlap = len(clear_sel & mpc_sel) / len(clear_sel)
+        assert overlap >= 0.9, (overlap, clear_sel ^ mpc_sel)
+        # the mpc run must carry executor evidence and it must check out
+        reps = results["mpc"].exec_reports
+        assert len(reps) == 1
+        assert reps[0].agrees()
+
+    def test_exec_config_sched_mirror(self):
+        ec = ExecConfig(wave=5, coalesce=False, overlap=True)
+        sc = ec.sched()
+        assert (sc.wave, sc.coalesce, sc.overlap) == (5, False, True)
+
+
+# ---------------------------------------------------------------------------
+# wave sharding axis
+# ---------------------------------------------------------------------------
+
+class TestWaveSharding:
+    def test_wave_resolves_to_data_axis(self):
+        import jax as _jax
+        from jax.sharding import Mesh
+        from repro.parallel.sharding import ShardRules, fit_spec
+        mesh = Mesh(np.array(_jax.devices()[:1]).reshape(1), ("data",))
+        rules = ShardRules(mesh)
+        assert rules.resolve("wave") == "data"
+        # wave claims the data axis first; batch yields rather than reuse
+        spec = fit_spec(rules, (4, 8), ["wave", "batch"])
+        assert tuple(spec) == ("data", None)

@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import iosched
 from repro.core.iosched import SchedConfig, fig7_variants, makespan
 from repro.mpc import costs
-from repro.mpc.comm import WAN, POD_DCN, Ledger, CostRecord
+from repro.mpc.comm import WAN, POD_DCN, Ledger, CostRecord, NetProfile
 
 
 def _per_batch():
@@ -53,6 +53,96 @@ class TestMakespan:
         led = _per_batch()
         sc = SchedConfig(wave=wave)
         assert makespan(led, n + 1, WAN, sc) >= makespan(led, n, WAN, sc)
+
+
+def _rand_ledger(lat_rounds: int, bw_flights: int, kbytes: int,
+                 gflops: int) -> Ledger:
+    led = Ledger()
+    if lat_rounds:
+        led.add(CostRecord("cmp", rounds=lat_rounds,
+                           nbytes=432 * lat_rounds, tag="lat"))
+    led.add(CostRecord("mm", rounds=max(bw_flights, 1),
+                       nbytes=kbytes * 1024, flops=gflops * 10 ** 9,
+                       tag="bw"))
+    return led
+
+
+ALL_VARIANTS = [(False, False), (True, False), (False, True), (True, True)]
+
+
+class TestMakespanProperties:
+    """Schedule-model invariants across ALL four (coalesce, overlap)
+    variants: bounded below by each resource, above by the serial sum,
+    and monotone in the network parameters.
+
+    Monotonicity in rtt/bandwidth is exact except at the overlap model's
+    comm-bound/compute-bound boundary, where the pipeline-fill term
+    switches between one batch of comm and one batch of compute — the
+    assertions allow exactly that one-batch slack.
+    """
+
+    def _check_bounds(self, led, n, wave):
+        serial = SchedConfig(coalesce=False, overlap=False, wave=wave)
+        serial_sum = makespan(led, n, WAN, serial)
+        for co, ov in ALL_VARIANTS:
+            sc = SchedConfig(coalesce=co, overlap=ov, wave=wave)
+            t = makespan(led, n, WAN, sc)
+            tot = iosched.stream_totals(led, n, sc)
+            comm_total = ((tot["lat_rounds"] + tot["bw_rounds"])
+                          * WAN.latency_s
+                          + tot["nbytes"] / WAN.bandwidth_Bps)
+            compute_total = tot["flops"] / sc.flops_per_s
+            assert t <= serial_sum + 1e-9, (co, ov)
+            assert t >= max(comm_total, compute_total) - 1e-9, (co, ov)
+
+    @given(st.integers(0, 64), st.integers(1, 8), st.integers(1, 10 ** 5),
+           st.integers(0, 10 ** 4), st.integers(1, 300), st.integers(1, 32))
+    @settings(max_examples=50, deadline=None)
+    def test_bounds(self, lat, bwf, kb, gf, n, wave):
+        self._check_bounds(_rand_ledger(lat, bwf, kb, gf), n, wave)
+
+    @pytest.mark.parametrize("lat,bwf,kb,gf,n,wave", [
+        (8, 2, 1000, 0, 64, 8),       # latency-dominated
+        (0, 4, 10 ** 5, 1, 100, 4),   # bandwidth-dominated
+        (16, 1, 10, 10 ** 4, 32, 16),  # compute-dominated
+        (64, 8, 10 ** 5, 10 ** 3, 1, 1),  # single batch
+    ])
+    def test_bounds_concrete(self, lat, bwf, kb, gf, n, wave):
+        """Deterministic spot checks (run even without hypothesis)."""
+        self._check_bounds(_rand_ledger(lat, bwf, kb, gf), n, wave)
+
+    def _slack(self, led, net, sc):
+        """One batch's serial time — the fill-term discontinuity bound."""
+        return (led.rounds * net.latency_s + led.nbytes / net.bandwidth_Bps
+                + led.flops / sc.flops_per_s)
+
+    @given(st.integers(0, 64), st.integers(1, 10 ** 5), st.integers(0, 10 ** 3),
+           st.integers(1, 200),
+           st.floats(1e-4, 0.5), st.floats(1e-4, 0.5))
+    @settings(max_examples=50, deadline=None)
+    def test_monotone_in_rtt(self, lat, kb, gf, n, r1, r2):
+        led = _rand_ledger(lat, 1, kb, gf)
+        lo = NetProfile("lo", WAN.bandwidth_Bps, min(r1, r2))
+        hi = NetProfile("hi", WAN.bandwidth_Bps, max(r1, r2))
+        for co, ov in ALL_VARIANTS:
+            sc = SchedConfig(coalesce=co, overlap=ov)
+            slack = self._slack(led, hi, sc) if ov else 0.0
+            assert makespan(led, n, hi, sc) >= \
+                makespan(led, n, lo, sc) - slack - 1e-9, (co, ov)
+
+    @given(st.integers(0, 64), st.integers(1, 10 ** 5), st.integers(0, 10 ** 3),
+           st.integers(1, 200),
+           st.floats(1e6, 1e11), st.floats(1e6, 1e11))
+    @settings(max_examples=50, deadline=None)
+    def test_monotone_in_bandwidth(self, lat, kb, gf, n, b1, b2):
+        led = _rand_ledger(lat, 1, kb, gf)
+        slow = NetProfile("slow", min(b1, b2), WAN.latency_s)
+        fast = NetProfile("fast", max(b1, b2), WAN.latency_s)
+        for co, ov in ALL_VARIANTS:
+            sc = SchedConfig(coalesce=co, overlap=ov)
+            slack = self._slack(led, slow, sc) if ov else 0.0
+            assert makespan(led, n, fast, sc) <= \
+                makespan(led, n, slow, sc) + slack + 1e-9, (co, ov)
 
 
 class TestCostModel:

@@ -126,9 +126,6 @@ def test_secure_matmul_exact(m, k, n):
 
 def test_secure_matmul_implements_beaver():
     """Kernel combine + reconstruction == plain ring matmul x@y."""
-    import jax as _jax
-    with _jax.enable_x64(True):
-        pass
     rng = np.random.default_rng(0)
     m, kdim, n = 8, 16, 8
     x = rng.integers(-2 ** 10, 2 ** 10, (m, kdim)).astype(np.int32)

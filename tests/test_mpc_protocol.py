@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 from repro.mpc import RING64, ops, nonlinear, compare, quickselect
 from repro.mpc.sharing import share, reveal, open_, from_public
 from repro.mpc.comm import ledger_scope, WAN
-from repro.mpc.ring import RING32
+from repro.mpc.ring import RING32, x64_scope
 from repro.mpc import beaver
 
 pytestmark = pytest.mark.usefixtures("x64")
@@ -61,7 +61,7 @@ class TestLinearOps:
         n = min(len(xs), len(ys))
         x = jnp.array(xs[:n], jnp.float64)
         y = jnp.array(ys[:n], jnp.float64)
-        with jax.enable_x64(True):
+        with x64_scope():
             z = reveal(ops.add(share(_k(4), x), share(_k(5), y)))
         assert np.allclose(z, x + y, atol=TOL)
 
@@ -71,7 +71,7 @@ class TestLinearOps:
         n = min(len(xs), len(ys))
         x = jnp.array(xs[:n], jnp.float64)
         y = jnp.array(ys[:n], jnp.float64)
-        with jax.enable_x64(True):
+        with x64_scope():
             z = reveal(ops.mul(share(_k(6), x), share(_k(7), y), _k(8)))
         # mul error ~ |x| * trunc_lsb: scale tolerance with magnitude
         tol = TOL * (1 + np.abs(x * y).max())
@@ -171,7 +171,7 @@ class TestCompare:
         k = max(1, n * kfrac // 10)
         rng = np.random.default_rng(n * 10 + kfrac)
         scores = jnp.asarray(rng.normal(size=n))
-        with jax.enable_x64(True):
+        with x64_scope():
             ss = share(_k(47), scores)
             got = quickselect.top_k_indices(ss, k, seed=0)
         want = np.sort(np.argsort(np.asarray(scores))[-k:])

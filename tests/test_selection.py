@@ -65,7 +65,7 @@ class TestApproxMLPs:
     def test_entropy_mlp_preserves_ranking(self):
         """What selection needs: the MLP's output must RANK like entropy."""
         stats = GaussStats(jnp.zeros(4), jnp.full((4,), 2.0))
-        p = approx.fit_entropy_mlp(K, stats, 4, 16, steps=1500)
+        p = approx.fit_entropy_mlp(K, stats, 4, 16, steps=4000)
         x = stats.sample(jax.random.fold_in(K, 3), 128)
         got = approx.mlp_apply(p, x)[:, 0]
         want = approx.op_softmax_entropy(x)[:, 0]

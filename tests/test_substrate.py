@@ -155,12 +155,12 @@ class TestOptim:
         g = {"w": jax.random.normal(K, (128,))}
         e = init_error_state(g)
         acc = jnp.zeros((128,))
-        for i in range(30):
+        for i in range(50):
             sparse, e = topk_compress_update(g, e, ratio=0.1)
             acc = acc + sparse["w"]
-        # error feedback: accumulated transmitted mass approaches 30*g
-        rel = float(jnp.linalg.norm(acc - 30 * g["w"]) /
-                    jnp.linalg.norm(30 * g["w"]))
+        # error feedback: accumulated transmitted mass approaches 50*g
+        rel = float(jnp.linalg.norm(acc - 50 * g["w"]) /
+                    jnp.linalg.norm(50 * g["w"]))
         assert rel < 0.15
 
     def test_int8_quant_bounded_error(self):
