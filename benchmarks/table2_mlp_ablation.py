@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -17,6 +16,7 @@ from repro.core import target as tgt
 from repro.core.proxy import ProxySpec
 from repro.core.selection import SelectionConfig, run_selection
 from repro.data.tasks import make_classification_task
+from repro.engine import ClearEngine
 from repro.mpc import costs
 
 VARIANTS = {
@@ -41,7 +41,8 @@ def run() -> dict:
             sel = SelectionConfig(phases=[ProxySpec(2, 4, 8, 1.0)],
                                   budget_frac=0.25, boot_frac=0.06,
                                   exvivo_steps=120, invivo_steps=50,
-                                  finetune_steps=60, variant=variant)
+                                  finetune_steps=60, variant=variant,
+                                  engine=ClearEngine())
             res = run_selection(key, params0, cfg, task.pool_tokens, sel,
                                 n_classes=task.n_classes,
                                 boot_labels_fn=lambda i: task.pool_labels[i])

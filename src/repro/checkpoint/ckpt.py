@@ -49,7 +49,7 @@ def _from_storable(a: np.ndarray, logical: str) -> np.ndarray:
 def save_checkpoint(ckpt_dir: str, step: int, tree, *, host: int = 0,
                     keep: int = 3) -> str:
     leaves, treedef_str = _flatten(tree)
-    stored = [_to_storable(np.asarray(l)) for l in leaves]
+    stored = [_to_storable(np.asarray(leaf)) for leaf in leaves]
     arrays = {f"leaf_{i}": a for i, (a, _) in enumerate(stored)}
     logical = [d for _, d in stored]
     step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")

@@ -164,5 +164,6 @@ def load_arch(arch_id: str, smoke: bool = False) -> ArchConfig:
 def cell_is_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
     """Whether (arch, shape) is a runnable cell; else reason for the skip."""
     if shape.name == "long_500k" and not cfg.subquadratic:
-        return False, "full-attention arch: 500k dense KV decode skipped (DESIGN.md §4)"
+        return False, ("full-attention arch: 500k dense KV decode skipped "
+                       "(DESIGN.md §4)")
     return True, ""

@@ -14,20 +14,21 @@ bootstrap sample, synthesize inputs from that Gaussian, regress onto the
 true operator outputs. In-vivo: the inserted MLPs are co-tuned with the
 proxy end-to-end (proxy.py).
 
-Both execution paths are provided: `mlp_apply` (clear, used inside proxy
-training) and `mlp_apply_mpc` (share-level: 2 Beaver matmuls + low-dim
-ReLU — this is where the MPC savings come from).
+Both execution paths live in the engine layer (the substrate-dispatch
+API): `engine/clear.mlp_apply` and `engine/mpc.mlp_apply_mpc` — the
+share-level path is 2 Beaver matmuls + low-dim ReLU, which is where the
+MPC savings come from.  They are re-exported here under their historic
+names; this module owns *fitting* (ex-vivo Gaussian-synthesis training).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.mpc import ops as mops, compare
-from repro.mpc.sharing import AShare
+from repro.engine.clear import mlp_apply, softmax_entropy
+from repro.engine.mpc import mlp_apply_mpc  # noqa: F401  back-compat
 
 
 def init_mlp(key, d_in: int, hidden: int, d_out: int):
@@ -38,31 +39,6 @@ def init_mlp(key, d_in: int, hidden: int, d_out: int):
             "b1": jnp.zeros((hidden,)),
             "w2": jax.random.normal(k2, (hidden, d_out)) * s2,
             "b2": jnp.zeros((d_out,))}
-
-
-def mlp_apply(p, x):
-    h = jax.nn.relu(x @ p["w1"] + p["b1"])
-    return h @ p["w2"] + p["b2"]
-
-
-def mlp_apply_mpc(p_sh: dict, x: AShare, key) -> AShare:
-    """Share-level MLP: weights are model-owner-private shares.
-
-    Cost: 2 Beaver matmuls (1 round each, bytes ~ rows*(d_in + d_out))
-    + ReLU over `hidden` elements only — the dimension reduction.
-    """
-    import jax.numpy as _jnp
-
-    def _badd(h: AShare, b: AShare) -> AShare:
-        bb = _jnp.broadcast_to(b.sh[:, None, :], h.sh.shape)
-        return mops.add(h, AShare(bb, h.ring))
-
-    k1, k2, k3 = jax.random.split(key, 3)
-    h = mops.matmul(x, p_sh["w1"], k1)
-    h = _badd(h, p_sh["b1"])
-    h = compare.relu(h, k2)
-    out = mops.matmul(h, p_sh["w2"], k3)
-    return _badd(out, p_sh["b2"])
 
 
 # ---------------------------------------------------------------------------
@@ -78,8 +54,7 @@ def op_rsqrt(v, eps: float = 1e-5):
 
 
 def op_softmax_entropy(logits):
-    p = jax.nn.softmax(logits, axis=-1)
-    return -jnp.sum(p * jnp.log(p + 1e-9), axis=-1, keepdims=True)
+    return softmax_entropy(logits)
 
 
 # ---------------------------------------------------------------------------

@@ -18,9 +18,13 @@ waves of W:
 Accounting is part of the execution contract: every flight lands in the
 ambient Ledger through comm.wave_scope, and the phase ledger must satisfy
 `iosched.ledger_agrees` — the same integers the analytic makespan prices.
-The per-batch reference ledger comes from an abstract `jax.eval_shape`
-probe of the identical op stream (zero FLOPs spent), which in turn is
-pinned record-for-record to `mpc/costs.proxy_exec_cost`.
+The per-batch reference ledger comes from `engine.TraceEngine` — the
+abstract `jax.eval_shape` probe of the identical op stream (zero FLOPs
+spent) — which in turn is pinned record-for-record to
+`mpc/costs.proxy_exec_cost`.  The forward itself is the unified
+engine-generic one (`engine/forward.py`) interpreted by an `MPCEngine`
+over this executor's ring; RING64 and RING32/dealer-trunc run the same
+code path.
 
 On a pod mesh the wave dimension is a logical sharding axis ("wave" ->
 the data axis; parallel/sharding.py), so W concurrent batches land on
@@ -40,6 +44,8 @@ from repro.configs.base import ArchConfig
 from repro.core import iosched
 from repro.core import proxy as proxy_mod
 from repro.core.proxy import ProxySpec
+from repro.engine import MPCEngine, TraceEngine, proxy_entropy
+from repro.engine.base import FULL_VARIANT
 from repro.mpc import comm
 from repro.mpc.comm import Ledger, NetProfile
 from repro.mpc.ring import RING64, RingSpec, x64_scope
@@ -93,27 +99,9 @@ class WaveExecutor:
         self.cfg = cfg
         self.reports: list[PhaseReport] = []
 
-    # -- per-batch op-stream probe --------------------------------------
-    def _probe(self, pp_sh, arch_cfg: ArchConfig, spec: ProxySpec,
-               batch_shape, key) -> Ledger:
-        """Ledger of ONE batch, measured by abstract tracing: the Python
-        protocol runs (so every comm.record fires with real shapes) but
-        no array math executes."""
-        ring = self.cfg.ring
-
-        def fwd(sh, k):
-            return proxy_mod.proxy_entropy_mpc(
-                pp_sh, arch_cfg, AShare(sh, ring), spec, k).sh
-
-        with comm.ledger_scope() as led:
-            jax.eval_shape(fwd,
-                           jax.ShapeDtypeStruct((2,) + batch_shape,
-                                                ring.dtype), key)
-        return led
-
     # -- the schedule ----------------------------------------------------
     def score_phase(self, key, pp, arch_cfg: ArchConfig, tokens,
-                    spec: ProxySpec) -> AShare:
+                    spec: ProxySpec, variant=FULL_VARIANT) -> AShare:
         """Encrypted entropy for every candidate, executed wave-by-wave.
 
         Identical numerics across all four (coalesce, overlap) variants:
@@ -123,10 +111,10 @@ class WaveExecutor:
         cfg = self.cfg
         ctx = x64_scope() if cfg.ring.bits >= 64 else contextlib.nullcontext()
         with ctx:
-            return self._score_phase(key, pp, arch_cfg, tokens, spec)
+            return self._score_phase(key, pp, arch_cfg, tokens, spec, variant)
 
     def _score_phase(self, key, pp, arch_cfg: ArchConfig, tokens,
-                     spec: ProxySpec) -> AShare:
+                     spec: ProxySpec, variant=FULL_VARIANT) -> AShare:
         cfg = self.cfg
         ring = cfg.ring
         B, W = cfg.batch, max(1, cfg.wave)
@@ -142,8 +130,14 @@ class WaveExecutor:
 
         pp_sh = proxy_mod.share_proxy(jax.random.fold_in(key, 1), pp, ring)
         batch_keys = jax.random.split(jax.random.fold_in(key, 2), n_batches)
-        per_batch = self._probe(pp_sh, arch_cfg, spec,
-                                (B, seq, arch_cfg.d_model), batch_keys[0])
+        # per-batch op-stream reference: the zero-FLOP eval_shape probe
+        per_batch = TraceEngine(ring, variant).probe(
+            pp_sh, arch_cfg, spec, (B, seq, arch_cfg.d_model), batch_keys[0])
+
+        def fwd(sh, k):
+            eng = MPCEngine(ring=ring).with_key(k)
+            return proxy_entropy(eng, pp_sh, arch_cfg, AShare(sh, ring),
+                                 spec, variant).sh
 
         outer = comm.get_ledger()
         phase_led = Ledger()
@@ -165,16 +159,11 @@ class WaveExecutor:
             with comm.ledger_scope() as wave_led:
                 if cfg.coalesce:
                     with comm.wave_scope(lanes):
-                        ent = jax.vmap(
-                            lambda s, k: proxy_mod.proxy_entropy_mpc(
-                                pp_sh, arch_cfg, AShare(s, ring), spec,
-                                k).sh,
-                            in_axes=(1, 0), out_axes=1)(sh, keys)
+                        ent = jax.vmap(fwd, in_axes=(1, 0), out_axes=1)(
+                            sh, keys)
                 else:
-                    ent = jnp.stack(
-                        [proxy_mod.proxy_entropy_mpc(
-                            pp_sh, arch_cfg, AShare(sh[:, li], ring), spec,
-                            keys[li]).sh for li in range(lanes)], axis=1)
+                    ent = jnp.stack([fwd(sh[:, li], keys[li])
+                                     for li in range(lanes)], axis=1)
             phase_led.records.extend(wave_led.records)
             if outer is not None:
                 outer.records.extend(wave_led.records)

@@ -12,11 +12,12 @@ Generation pipeline (all clear, model-owner side):
   5. in-vivo finetune the proxy end-to-end on bootstrap (CE on logits),
      then refit MLP_se on the updated logits distribution
 
-Execution paths:
-  proxy_entropy_clear  float path (drives in-vivo training + efficacy
-                       experiments at scale)
-  proxy_entropy_mpc    share-level path (the real protocol; drives the
-                       delay model and the Crypten-parity tests)
+Execution: the proxy forward exists ONCE, engine-generic, in
+`engine/forward.py` — `proxy_entropy(engine, pp, cfg, x, spec, variant)`
+runs it over clear floats (ClearEngine), additive shares (MPCEngine), or
+the eval_shape cost probe (TraceEngine).  The historic entry points
+`proxy_entropy_clear` / `proxy_entropy_mpc` remain below as thin
+deprecated shims; new code should construct an engine.
 """
 from __future__ import annotations
 
@@ -28,9 +29,12 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import approx, target
 from repro.core.approx import GaussStats
+from repro.engine import forward as engine_forward
+from repro.engine.base import FULL_VARIANT
+from repro.engine.clear import ClearEngine
+from repro.engine.mpc import MPCEngine
 from repro.models import common
-from repro.mpc import ops as mops, compare
-from repro.mpc.sharing import AShare, share, from_public
+from repro.mpc.sharing import AShare, share
 from repro.mpc.ring import RingSpec, RING64
 
 
@@ -73,6 +77,8 @@ def collect_stats(params, cfg: ArchConfig, tokens, spec: ProxySpec,
         k = (h @ ap["wk"][:, :min(w, cfg.n_kv_heads) * dh]
              ).reshape(b, s, min(w, cfg.n_kv_heads), dh)
         qg = q.reshape(b, s, k.shape[2], -1, dh)
+        # NOT a proxy forward (that lives solely in engine/forward.py):
+        # this probes M_g's attention-score distribution to fit MLP_sm
         scores = jnp.einsum("bqkgd,bjkd->bkgqj", qg, k) * dh ** -0.5
         sm_stats.append(GaussStats.estimate(scores.reshape(-1, s)[:max_rows]))
         # advance x through the *full* M_g layer (with FFN) for fidelity
@@ -127,80 +133,22 @@ def build_proxy(key, params_g, cfg: ArchConfig, stats, spec: ProxySpec,
 
 
 # ---------------------------------------------------------------------------
-# clear execution
+# execution shims (deprecated — construct an engine instead)
 # ---------------------------------------------------------------------------
-
-FULL_VARIANT = frozenset({"sm", "ln", "se"})
-
-
-def _proxy_layer_clear(x, pp, li, cfg: ArchConfig, spec: ProxySpec,
-                       variant=FULL_VARIANT):
-    """variant: which nonlinearities use MLP emulators. Members of
-    {"sm","ln","se"}; absent -> exact op (Table 2's NoAttnSM/NoAttnLN).
-    "quad_sm" replaces softmax by MPCFormer's 2Quad; "poly_sm" by Bolt's
-    polynomial exp (Table 3 baselines)."""
-    dh = cfg.d_head
-    w = spec.n_heads
-    wk = min(w, cfg.n_kv_heads)
-    b, s, d = x.shape
-    # MLP-LayerNorm: numerator exact, reciprocal-sqrt emulated
-    mu = jnp.mean(x, -1, keepdims=True)
-    xc = x - mu
-    var = jnp.mean(xc * xc, -1, keepdims=True)
-    if "ln" in variant:
-        inv = approx.mlp_apply(jax.tree.map(lambda a: a[li],
-                                            _stk(pp["mlp_ln"])),
-                               var.reshape(-1, 1)).reshape(b, s, 1)
-    else:
-        inv = jax.lax.rsqrt(var + 1e-5)
-    h = xc * inv * pp["ln_scale"][li] + pp["ln_bias"][li]
-    ap = pp["attn"]
-    q = h @ ap["wq"][li] + (ap["bq"][li] if "bq" in ap else 0.0)
-    k = h @ ap["wk"][li] + (ap["bk"][li] if "bk" in ap else 0.0)
-    v = h @ ap["wv"][li] + (ap["bv"][li] if "bv" in ap else 0.0)
-    q = q.reshape(b, s, wk, -1, dh)
-    k = k.reshape(b, s, wk, dh)
-    v = v.reshape(b, s, wk, dh)
-    scores = jnp.einsum("bqkgd,bjkd->bkgqj", q, k) * dh ** -0.5
-    if "sm" in variant:
-        probs = approx.mlp_apply(jax.tree.map(lambda a: a[li],
-                                              _stk(pp["mlp_sm"])),
-                                 scores.reshape(-1, s)).reshape(scores.shape)
-    elif "quad_sm" in variant:       # MPCFormer 2Quad
-        e = (scores + 5.0) ** 2
-        probs = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-6)
-    elif "poly_sm" in variant:       # Bolt-style polynomial exp
-        t = jnp.clip(scores - scores.max(-1, keepdims=True), -8, 0)
-        e = 1 + t + t * t / 2 + t ** 3 / 6 + t ** 4 / 24
-        e = jnp.maximum(e, 0.0)
-        probs = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-6)
-    else:
-        probs = jax.nn.softmax(scores, axis=-1)
-    o = jnp.einsum("bkgqj,bjkd->bqkgd", probs, v).reshape(b, s, w * dh)
-    return x + o @ ap["wo"][li]
-
-
-def _stk(mlps):
-    return jax.tree.map(lambda *a: jnp.stack(a), *mlps) if isinstance(mlps, list) \
-        else mlps
 
 
 def proxy_logits_clear(pp, cfg: ArchConfig, tokens, spec: ProxySpec,
                        variant=FULL_VARIANT):
-    x = jnp.take(pp["embed"], tokens, axis=0).astype(jnp.float32)
-    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
-    for li in range(spec.n_layers):
-        x = _proxy_layer_clear(x, pp, li, cfg, spec, variant)
-    pooled = jnp.mean(x, axis=1)
-    return pooled @ pp["cls_head"]
+    """Deprecated shim: `engine.proxy_logits(ClearEngine(), ...)`."""
+    return engine_forward.proxy_logits(ClearEngine(), pp, cfg, tokens,
+                                       spec, variant)
 
 
 def proxy_entropy_clear(pp, cfg: ArchConfig, tokens, spec: ProxySpec,
                         variant=FULL_VARIANT):
-    logits = proxy_logits_clear(pp, cfg, tokens, spec, variant)
-    if "se" in variant:
-        return approx.mlp_apply(pp["mlp_se"], logits)[:, 0]
-    return approx.op_softmax_entropy(logits)[:, 0]
+    """Deprecated shim: `engine.proxy_entropy(ClearEngine(), ...)`."""
+    return engine_forward.proxy_entropy(ClearEngine(), pp, cfg, tokens,
+                                        spec, variant)
 
 
 def invivo_finetune(key, pp, cfg: ArchConfig, tokens, labels,
@@ -210,9 +158,10 @@ def invivo_finetune(key, pp, cfg: ArchConfig, tokens, labels,
     mlp_se = pp.pop("mlp_se")
     m = jax.tree.map(jnp.zeros_like, pp)
     v = jax.tree.map(jnp.zeros_like, pp)
+    eng = ClearEngine()
 
     def loss_fn(pp, tok, lab):
-        logits = proxy_logits_clear(pp, cfg, tok, spec)
+        logits = engine_forward.proxy_logits(eng, pp, cfg, tok, spec)
         return common.cross_entropy(logits[:, None], lab[:, None])
 
     @jax.jit
@@ -232,7 +181,7 @@ def invivo_finetune(key, pp, cfg: ArchConfig, tokens, labels,
         idx = jax.random.randint(k, (min(batch, n),), 0, n)
         pp, m, v, _ = step(pp, m, v, tokens[idx], labels[idx], jnp.float32(i))
     # refit the entropy head on the tuned proxy's logit distribution
-    logits = proxy_logits_clear(pp, cfg, tokens, spec)
+    logits = engine_forward.proxy_logits(eng, pp, cfg, tokens, spec)
     stats = GaussStats.estimate(logits)
     key, k = jax.random.split(key)
     pp["mlp_se"] = approx.fit_entropy_mlp(k, stats, logits.shape[-1],
@@ -287,81 +236,15 @@ def share_proxy(key, pp, ring: RingSpec = RING64):
 
 
 def proxy_entropy_mpc(pp_sh, cfg: ArchConfig, x_emb: AShare,
-                      spec: ProxySpec, key) -> AShare:
-    """Share-level proxy forward -> encrypted entropy per example.
+                      spec: ProxySpec, key,
+                      variant=FULL_VARIANT) -> AShare:
+    """Deprecated shim: `engine.proxy_entropy(MPCEngine(ring).with_key(k),
+    ...)`.  Runs the SAME forward as the clear path over shares.
 
     x_emb: shared embedded inputs (B, S, d) — the data owner shares
     one-hot rows, the embedding matmul is folded into share generation
     (equivalently a Beaver matmul; its cost is accounted by costs.py).
     """
-    dh = cfg.d_head
-    w = spec.n_heads
-    wk = min(w, cfg.n_kv_heads)
-    bsz, s, d = x_emb.shape
-    x = x_emb
-    for li in range(spec.n_layers):
-        key, k0, k1, k2, k3, k4, k5, k6, k7, k8 = jax.random.split(key, 10)
-        # LayerNorm numerator exact on MPC
-        mu = mops.mean(x, axis=-1, key=k0)
-        xc = mops.sub(x, AShare(jnp.broadcast_to(mu.sh[..., None], x.sh.shape),
-                                x.ring))
-        var = mops.mean(mops.mul(xc, xc, k1), axis=-1, key=k2)
-        mlp_ln = jax.tree.map(lambda a: a[li], _stk(pp_sh["mlp_ln"]))
-        inv = approx.mlp_apply_mpc(mlp_ln, var.reshape(bsz * s, 1), k3)
-        inv_b = AShare(jnp.broadcast_to(
-            inv.sh.reshape(2, bsz, s, 1), xc.sh.shape), x.ring)
-        h = mops.mul(xc, inv_b, k4)
-        gamma = AShare(jnp.broadcast_to(
-            pp_sh["ln_scale"].sh[:, li][:, None, None], h.sh.shape), h.ring)
-        h = mops.mul(h, gamma, k5)
-        beta = AShare(jnp.broadcast_to(
-            pp_sh["ln_bias"].sh[:, li][:, None, None], h.sh.shape), h.ring)
-        h = mops.add(h, beta)
-        # pruned attention
-        ap = pp_sh["attn"]
-        h2 = h.reshape(bsz * s, d)
-        q = mops.matmul(h2, _sl(ap["wq"], li), k6)
-        kk = mops.matmul(h2, _sl(ap["wk"], li), jax.random.fold_in(k6, 1))
-        vv = mops.matmul(h2, _sl(ap["wv"], li), jax.random.fold_in(k6, 2))
-        if "bq" in ap:
-            q = mops.add(q, _bcast(_sl(ap["bq"], li), q.shape))
-            kk = mops.add(kk, _bcast(_sl(ap["bk"], li), kk.shape))
-            vv = mops.add(vv, _bcast(_sl(ap["bv"], li), vv.shape))
-        # scores per (batch, kv-head, group): fold heads into batch dims
-        q4 = AShare(q.sh.reshape(2, bsz, s, w, dh), q.ring)
-        k4_ = AShare(kk.sh.reshape(2, bsz, s, wk, dh), q.ring)
-        v4 = AShare(vv.sh.reshape(2, bsz, s, wk, dh), q.ring)
-        g = w // wk
-        qT = AShare(jnp.moveaxis(q4.sh.reshape(2, bsz, s, wk, g, dh), 2, 4),
-                    q.ring)                                        # b wk g s dh
-        kT = AShare(jnp.swapaxes(jnp.moveaxis(k4_.sh, 3, 2), -1, -2), q.ring)
-        kT_b = AShare(jnp.broadcast_to(kT.sh[:, :, :, None],
-                                       (2, bsz, wk, g, dh, s)), q.ring)
-        scores = mops.matmul(qT, kT_b, k7)
-        scores = mops.mul_public(scores, dh ** -0.5,
-                                 key=jax.random.fold_in(k7, 3))
-        mlp_sm = jax.tree.map(lambda a: a[li], _stk(pp_sh["mlp_sm"]))
-        probs = approx.mlp_apply_mpc(mlp_sm, scores.reshape(bsz * wk * g * s, s),
-                                     k8)
-        probs = probs.reshape(bsz, wk, g, s, s)
-        vT = AShare(jnp.moveaxis(v4.sh, 3, 2), q.ring)             # b wk s dh
-        vT_b = AShare(jnp.broadcast_to(vT.sh[:, :, :, None],
-                                       (2, bsz, wk, g, s, dh)), q.ring)
-        o = mops.matmul(probs, vT_b, jax.random.fold_in(k8, 5))
-        o_sh = jnp.moveaxis(o.sh, 4, 2).reshape(2, bsz, s, w * dh)
-        o2 = AShare(o_sh.reshape(2, bsz * s, w * dh), q.ring)
-        out = mops.matmul(o2, _sl(ap["wo"], li), jax.random.fold_in(k8, 6))
-        x = mops.add(x, out.reshape(bsz, s, d))
-    key, k9, k10, k11 = jax.random.split(key, 4)
-    pooled = mops.mean(x, axis=1, key=k9)
-    logits = mops.matmul(pooled, pp_sh["cls_head"], k10)
-    ent = approx.mlp_apply_mpc(pp_sh["mlp_se"], logits, k11)
-    return ent.reshape(bsz)
-
-
-def _sl(x: AShare, i: int) -> AShare:
-    return AShare(x.sh[:, i], x.ring)
-
-
-def _bcast(x: AShare, shape) -> AShare:
-    return AShare(jnp.broadcast_to(x.sh, (2,) + tuple(shape)), x.ring)
+    eng = MPCEngine(ring=x_emb.ring).with_key(key)
+    return engine_forward.proxy_entropy(eng, pp_sh, cfg, x_emb, spec,
+                                        variant)

@@ -73,8 +73,8 @@ def grid_search(n_pool: int, budget_frac: float = 0.2, *, heads: int = 12,
     sel_opts = (0.3, 0.5)
     cands: list[tuple[ProxySpec, ...]] = []
     for d in dims:
-        for l in layer_opts:
-            cands.append((ProxySpec(l, heads if l > 1 else 1, d, 1.0),))
+        for nl in layer_opts:
+            cands.append((ProxySpec(nl, heads if nl > 1 else 1, d, 1.0),))
     if max_phases >= 2:
         for d1, d2 in itertools.product((2, 4), dims):
             if d2 < d1:

@@ -7,22 +7,28 @@ Stage 2 (MPC):   N-phase progressive sieve. Phase i scores surviving
                  comparisons (only comparison bits revealed).
 Stage 3 (clear): transaction; optional appraisal = mean entropy of S_N.
 
-Two execution modes share the same control flow:
-  mode="clear"  float proxies (fast; used for efficacy experiments and
+All execution substrates share the same control flow through the
+tensor-engine API (src/repro/engine/):
+  ClearEngine   float proxies (fast; used for efficacy experiments and
                 as the numerical reference)
-  mode="mpc"    share-level proxies over the RING64 oracle ring with the
-                ambient cost Ledger recording every wire interaction,
-                scheduled by the wave executor (core/executor.py): W
-                batches coalesced per latency flight, waves
-                double-buffered so wire time hides behind compute
+  MPCEngine     share-level proxies over a RingSpec (RING64 oracle or
+                RING32/dealer-trunc) with the ambient cost Ledger
+                recording every wire interaction, scheduled by the wave
+                executor (core/executor.py): W batches coalesced per
+                latency flight, waves double-buffered so wire time
+                hides behind compute
+`SelectionConfig.engine` takes an engine instance; the legacy `mode`
+strings "clear"/"mpc" still resolve for back-compat.
 
 Phase boundaries checkpoint the surviving index set — a natural
-fault-tolerance barrier (runtime/ft.py restores an interrupted
-selection from the last completed phase).
+fault-tolerance barrier: when `checkpoint_dir` already holds phase
+checkpoints for the same run (fingerprinted by pool/bootstrap), a
+re-run resumes after the last completed phase instead of re-scoring.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 
@@ -34,6 +40,8 @@ from repro.configs.base import ArchConfig
 from repro.core import proxy as proxy_mod, target as target_mod
 from repro.core.executor import ExecConfig, PhaseReport, WaveExecutor
 from repro.core.proxy import ProxySpec
+from repro.engine import forward as engine_forward
+from repro.engine.base import FULL_VARIANT, TensorEngine, resolve_engine
 from repro.mpc import quickselect
 from repro.mpc.sharing import AShare
 from repro.mpc.ring import x64_scope
@@ -48,12 +56,22 @@ class SelectionConfig:
     exvivo_steps: int = 300
     invivo_steps: int = 150
     finetune_steps: int = 200
-    mode: str = "clear"               # or "mpc"
+    mode: str = "clear"               # legacy: "clear" | "mpc"
+    engine: TensorEngine | str | None = None   # preferred over `mode`
     checkpoint_dir: str | None = None
-    variant: frozenset = frozenset({"sm", "ln", "se"})  # Table 2/3 ablations
-    # mode="mpc" runs through the wave executor; (wave, coalesce, overlap)
-    # are the §4.4 schedule — Fig 7's four variants as runtime flags
+    resume: bool = True               # consult phase checkpoints on start
+    variant: frozenset = FULL_VARIANT  # Table 2/3 ablations
+    # the MPC engine runs through the wave executor; (wave, coalesce,
+    # overlap) are the §4.4 schedule — Fig 7's four variants as flags
     executor: ExecConfig = dataclasses.field(default_factory=ExecConfig)
+
+    def __post_init__(self):
+        self.engine = resolve_engine(self.engine if self.engine is not None
+                                     else self.mode, ring=self.executor.ring)
+        self.mode = self.engine.kind
+        if self.mode == "mpc" and self.executor.ring is not self.engine.ring:
+            self.executor = dataclasses.replace(self.executor,
+                                                ring=self.engine.ring)
 
 
 @dataclasses.dataclass
@@ -63,6 +81,7 @@ class SelectionResult:
     phase_survivors: list[np.ndarray]
     appraisal_entropy: float
     exec_reports: list[PhaseReport] = dataclasses.field(default_factory=list)
+    resumed_phases: int = 0           # phases restored from checkpoints
 
 
 def two_phase_default(seq_len_heads: int = 12) -> list[ProxySpec]:
@@ -84,10 +103,10 @@ def _phase_keep(n_pool: int, budget: int, phases: list[ProxySpec]) -> list[int]:
     return keeps
 
 
-def _score_clear(pp, cfg, tokens, spec,
-                 variant=frozenset({"sm", "ln", "se"})) -> np.ndarray:
-    fn = jax.jit(lambda t: proxy_mod.proxy_entropy_clear(pp, cfg, t, spec,
-                                                         variant))
+def _score_clear(engine, pp, cfg, tokens, spec,
+                 variant=FULL_VARIANT) -> np.ndarray:
+    fn = jax.jit(lambda t: engine_forward.proxy_entropy(engine, pp, cfg, t,
+                                                        spec, variant))
     out = []
     for i in range(0, tokens.shape[0], 256):
         out.append(np.asarray(fn(tokens[i:i + 256])))
@@ -109,15 +128,37 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
     boot_tokens = pool_tokens[boot_idx]
     boot_labels = boot_labels_fn(boot_idx)
 
+    # ---- restart support: resume after the last completed phase ---------
+    fp = None
+    resume_from = 0
+    completed: dict[int, dict] = {}
+    if sel.checkpoint_dir:        # fp hashes target weights — skip if unused
+        fp = _run_fingerprint(sel, n, budget, boot_idx, target_params,
+                              pool_tokens)
+        if sel.resume:
+            for d in _load_phase_checkpoints(sel.checkpoint_dir):
+                if d.get("fp") == fp and d["phase"] < len(sel.phases):
+                    completed[d["phase"]] = d
+            # only a contiguous prefix is resumable (a later-phase file
+            # may survive while an earlier one was overwritten)
+            while resume_from in completed:
+                resume_from += 1
+    resumed_appraisal = (completed[resume_from - 1].get("appraisal", 0.0)
+                         if resume_from else 0.0)
+
     # ---- proxy generation (model-owner side, clear) ---------------------
     max_l = max(ph.n_layers for ph in sel.phases)
     key, kg, kf = jax.random.split(key, 3)
-    m_g = proxy_mod.extract_backbone(target_params, max_l)
-    m_g, _ = target_mod.finetune(kf, m_g, cfg, boot_tokens, boot_labels,
-                                 steps=sel.finetune_steps, n_layers=max_l)
+    if resume_from < len(sel.phases):
+        m_g = proxy_mod.extract_backbone(target_params, max_l)
+        m_g, _ = target_mod.finetune(kf, m_g, cfg, boot_tokens, boot_labels,
+                                     steps=sel.finetune_steps, n_layers=max_l)
     proxies = []
-    for ph in sel.phases:
-        key, ks, kb, ki = jax.random.split(key, 4)
+    for pi, ph in enumerate(sel.phases):
+        key, kb, ki = jax.random.split(key, 3)
+        if pi < resume_from:          # phase already checkpointed: no proxy
+            proxies.append(None)
+            continue
         stats = proxy_mod.collect_stats(m_g, cfg, boot_tokens[:256], ph)
         pp = proxy_mod.build_proxy(kb, m_g, cfg, stats, ph,
                                    seq_len=pool_tokens.shape[1],
@@ -132,14 +173,19 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
     keeps = _phase_keep(len(surviving), budget - n_boot, sel.phases)
     survivors_log = []
     exec_reports: list[PhaseReport] = []
-    appraisal = 0.0
+    appraisal = resumed_appraisal
     for pi, (ph, pp, keep) in enumerate(zip(sel.phases, proxies, keeps)):
+        key, ks = jax.random.split(key)
+        if pi < resume_from:
+            surviving = np.asarray(completed[pi]["surviving"], dtype=int)
+            survivors_log.append(surviving.copy())
+            continue
         tok = pool_tokens[surviving]
         if sel.mode == "mpc":
-            key, ks, kq = jax.random.split(key, 3)
             execu = WaveExecutor(dataclasses.replace(
                 sel.executor, batch=min(sel.score_batch, len(surviving))))
-            ent_sh = execu.score_phase(ks, pp, cfg, tok, ph)
+            ent_sh = execu.score_phase(ks, pp, cfg, tok, ph,
+                                       variant=sel.variant)
             exec_reports.extend(execu.reports)
             with x64_scope():      # quickselect compares int64 shares
                 top_local = quickselect.top_k_indices(ent_sh, keep,
@@ -149,26 +195,70 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
                      + ent_sh[np.asarray(top_local)].sh[1]).astype(jnp.float64)
                     / ent_sh.ring.scale))
         else:
-            ents = _score_clear(pp, cfg, tok, ph, sel.variant)
+            ents = _score_clear(sel.engine, pp, cfg, tok, ph, sel.variant)
             top_local = np.argsort(ents)[-keep:]
             appraisal = float(np.mean(ents[top_local]))
         surviving = np.sort(surviving[top_local])
         survivors_log.append(surviving.copy())
-        _checkpoint_phase(sel, pi, surviving)
+        _checkpoint_phase(sel, pi, surviving, fp, appraisal)
 
     selected = np.sort(np.concatenate([boot_idx, surviving]))
     return SelectionResult(selected, boot_idx, survivors_log, appraisal,
-                           exec_reports)
+                           exec_reports, resumed_phases=resume_from)
 
 
-def _checkpoint_phase(sel: SelectionConfig, phase: int, surviving) -> None:
+def _run_fingerprint(sel: SelectionConfig, n_pool: int, budget: int,
+                     boot_idx, target_params, pool_tokens) -> str:
+    """Identifies one logical selection run: a checkpoint resumes only a
+    re-run with the same pool (contents, not just size), budget,
+    bootstrap draw, target weights, AND config (engine/ring, variant,
+    phase schedule, proxy-training budgets, §4.4 schedule flags) —
+    never a neighbouring experiment sharing the dir. Without the config
+    terms, a `--mode mpc` run would silently adopt a clear run's
+    survivors and skip the very execution it was asked to measure;
+    without the weights/pool digests, a retrained target or regenerated
+    pool would inherit survivor indices scored against different
+    data."""
+    ex = sel.executor
+    cfg_desc = (sel.mode,
+                getattr(sel.engine, "ring", None) and sel.engine.ring.name,
+                tuple(sorted(sel.variant)),
+                tuple((p.n_layers, p.n_heads, p.mlp_dim, p.selectivity)
+                      for p in sel.phases),
+                (sel.exvivo_steps, sel.invivo_steps, sel.finetune_steps,
+                 sel.boot_frac),
+                (ex.wave, ex.coalesce, ex.overlap, ex.batch,
+                 sel.score_batch) if sel.mode == "mpc" else None)
+    h = hashlib.sha1(np.asarray(boot_idx, dtype=np.int64).tobytes())
+    h.update(np.asarray([n_pool, budget], dtype=np.int64).tobytes())
+    h.update(repr(cfg_desc).encode())
+    for leaf in jax.tree.leaves(target_params):
+        h.update(np.asarray(leaf).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(pool_tokens)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _load_phase_checkpoints(ckpt_dir: str) -> list[dict]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for f in sorted(os.listdir(ckpt_dir)):
+        if f.startswith("phase_") and f.endswith(".json"):
+            with open(os.path.join(ckpt_dir, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def _checkpoint_phase(sel: SelectionConfig, phase: int, surviving,
+                      fp: str, appraisal: float) -> None:
     if not sel.checkpoint_dir:
         return
     os.makedirs(sel.checkpoint_dir, exist_ok=True)
     path = os.path.join(sel.checkpoint_dir, f"phase_{phase}.json")
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump({"phase": phase, "surviving": surviving.tolist()}, f)
+        json.dump({"phase": phase, "surviving": surviving.tolist(),
+                   "fp": fp, "appraisal": appraisal}, f)
     os.replace(tmp, path)
 
 
@@ -185,14 +275,16 @@ def appraise_threshold(ent_sh: AShare, idx, threshold: float, key) -> bool:
 
 
 def resume_phase(sel: SelectionConfig) -> tuple[int, np.ndarray] | None:
-    """Restart support: latest completed phase's survivor set."""
-    if not sel.checkpoint_dir or not os.path.isdir(sel.checkpoint_dir):
+    """Restart support: latest completed phase's survivor set.
+
+    `run_selection` consults the same checkpoints itself (guarded by the
+    run fingerprint) and skips completed phases — this helper is the
+    introspection surface for drivers and tests.
+    """
+    if not sel.checkpoint_dir:
         return None
     best = None
-    for f in os.listdir(sel.checkpoint_dir):
-        if f.startswith("phase_") and f.endswith(".json"):
-            with open(os.path.join(sel.checkpoint_dir, f)) as fh:
-                d = json.load(fh)
-            if best is None or d["phase"] > best[0]:
-                best = (d["phase"], np.asarray(d["surviving"]))
+    for d in _load_phase_checkpoints(sel.checkpoint_dir):
+        if best is None or d["phase"] > best[0]:
+            best = (d["phase"], np.asarray(d["surviving"]))
     return best

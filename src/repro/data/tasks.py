@@ -54,7 +54,7 @@ def make_classification_task(seed: int, *, n_pool: int = 2000,
     priors = w / w.sum()
 
     pool_labels = rng.choice(n_classes, size=n_pool, p=priors)
-    pool_tokens = np.concatenate([sample(int(l), 1) for l in pool_labels])
+    pool_tokens = np.concatenate([sample(int(y), 1) for y in pool_labels])
     # redundant slab: near-duplicates of one majority example
     n_red = int(redundancy * n_pool)
     if n_red:
@@ -67,7 +67,7 @@ def make_classification_task(seed: int, *, n_pool: int = 2000,
         pool_labels[idx] = 0
 
     test_labels = rng.integers(0, n_classes, size=n_test)   # balanced test
-    test_tokens = np.concatenate([sample(int(l), 1) for l in test_labels])
+    test_tokens = np.concatenate([sample(int(y), 1) for y in test_labels])
     return ClassTask(pool_tokens, pool_labels.astype(np.int32),
                      test_tokens, test_labels.astype(np.int32),
                      n_classes, vocab)

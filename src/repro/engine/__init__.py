@@ -1,0 +1,21 @@
+"""Unified tensor-engine API: one proxy forward, many execution
+substrates (clear floats / MPC shares / eval_shape cost tracing).
+
+    from repro.engine import ClearEngine, MPCEngine, proxy_entropy
+    ent = proxy_entropy(ClearEngine(), pp, cfg, tokens, spec)
+    ent_sh = proxy_entropy(MPCEngine(ring).with_key(k), pp_sh, cfg,
+                           x_shared, spec)
+
+See engine/base.py for the protocol and README "Engine API" for how to
+add a backend.
+"""
+from repro.engine.base import (FULL_VARIANT, VARIANTS, TensorEngine,
+                               resolve_engine, resolve_variant)
+from repro.engine.clear import ClearEngine
+from repro.engine.forward import proxy_entropy, proxy_logits
+from repro.engine.mpc import MPCEngine
+from repro.engine.trace import TraceEngine, abstract_shares
+
+__all__ = ["FULL_VARIANT", "VARIANTS", "TensorEngine", "resolve_engine",
+           "resolve_variant", "ClearEngine", "MPCEngine", "TraceEngine",
+           "abstract_shares", "proxy_entropy", "proxy_logits"]

@@ -1,0 +1,115 @@
+"""TensorEngine — one proxy forward, many execution substrates.
+
+The paper's core claim is that the *same* proxy network runs both in the
+clear (in-vivo training, efficacy numbers) and over MPC (the private
+sieve).  This module makes that claim true BY CONSTRUCTION: the proxy
+layer math exists exactly once (`engine/forward.py`), written against the
+`TensorEngine` protocol below, and an engine only interprets the
+primitive ops over its own tensor type:
+
+  ClearEngine   jnp float arrays (engine/clear.py)
+  MPCEngine     additive shares over a RingSpec, PRNG keys threaded
+                internally (engine/mpc.py)
+  TraceEngine   the jax.eval_shape cost probe — runs the MPC op stream
+                abstractly so every comm.record fires with real shapes
+                but zero FLOPs execute (engine/trace.py)
+
+Adding a backend (RING32 dealer-trunc, a future 3-party scheme, a
+cost-tracing variant) is a ~100-line engine implementation, not a
+forward rewrite — the dispatch-layer move MPC frameworks like CrypTen
+make with their tensor stack.
+
+Nonlinearity policy: the Table-2/Table-3 `variant` sets are engine-level
+strategies.  A variant is a frozenset naming which nonlinearities use
+MLP emulators ("sm", "ln", "se"); absent members fall back to the exact
+op on BOTH substrates (secure softmax / NR-rsqrt / secure entropy over
+MPC), and "quad_sm" / "poly_sm" select the MPCFormer-2Quad and
+Bolt-polynomial softmax baselines.
+"""
+from typing import Any, Protocol, runtime_checkable
+
+Tensor = Any          # opaque: jnp array (clear) or AShare (mpc/trace)
+
+FULL_VARIANT = frozenset({"sm", "ln", "se"})
+
+# Named variant sets: Table 2 ablations + Table 3 baseline nonlinearities.
+VARIANTS = {
+    "full": FULL_VARIANT,
+    "no-sm": frozenset({"ln", "se"}),
+    "no-ln": frozenset({"sm", "se"}),
+    "no-se": frozenset({"sm", "ln"}),
+    "quad_sm": frozenset({"quad_sm", "ln", "se"}),      # MPCFormer 2Quad
+    "poly_sm": frozenset({"poly_sm", "ln", "se"}),      # Bolt polynomial
+}
+
+
+@runtime_checkable
+class TensorEngine(Protocol):
+    """The op vocabulary `engine/forward.py` is written against.
+
+    Tensors are opaque; parameters arrive engine-native (float leaves
+    for ClearEngine, AShare leaves from `proxy.share_proxy` for
+    MPCEngine).  Engines that need per-op randomness (Beaver openings,
+    dealer truncation) thread PRNG keys internally — callers never
+    split keys.
+    """
+
+    kind: str                     # "clear" | "mpc" | "trace"
+
+    # -- data entry ------------------------------------------------------
+    def embed(self, pp, x_in, cfg) -> Tensor: ...
+
+    # -- linear algebra --------------------------------------------------
+    def add(self, x: Tensor, y: Tensor) -> Tensor: ...
+    def sub(self, x: Tensor, y: Tensor) -> Tensor: ...
+    def mul(self, x: Tensor, y: Tensor) -> Tensor: ...
+    def mul_public(self, x: Tensor, v) -> Tensor: ...
+    def add_public(self, x: Tensor, v) -> Tensor: ...
+    def matmul(self, x: Tensor, y: Tensor) -> Tensor: ...
+    def mean(self, x: Tensor, axis: int) -> Tensor: ...
+
+    # -- shape ops (local, free on every substrate) ----------------------
+    def shape(self, x: Tensor) -> tuple: ...
+    def reshape(self, x: Tensor, shape) -> Tensor: ...
+    def broadcast(self, x: Tensor, shape) -> Tensor: ...
+    def moveaxis(self, x: Tensor, src: int, dst: int) -> Tensor: ...
+    def swapaxes(self, x: Tensor, a: int, b: int) -> Tensor: ...
+    def index(self, x: Tensor, i: int) -> Tensor: ...
+
+    # -- nonlinearity strategies (variant-dispatched) --------------------
+    def mlp(self, p, x: Tensor) -> Tensor: ...
+    def ln_inv(self, pp, li: int, var: Tensor, variant) -> Tensor: ...
+    def attn_probs(self, pp, li: int, scores: Tensor, variant) -> Tensor: ...
+    def entropy_head(self, pp, logits: Tensor, variant) -> Tensor: ...
+
+
+def resolve_engine(engine, ring=None) -> "TensorEngine":
+    """Engine instance from an instance (pass-through) or a mode string
+    ("clear" / "mpc" / "trace" — the legacy `SelectionConfig.mode`)."""
+    if not isinstance(engine, str):
+        return engine
+    from repro.engine.clear import ClearEngine
+    from repro.engine.mpc import MPCEngine
+    from repro.engine.trace import TraceEngine
+    from repro.mpc.ring import RING64
+    ring = RING64 if ring is None else ring
+    if engine == "clear":
+        return ClearEngine()
+    if engine == "mpc":
+        return MPCEngine(ring=ring)
+    if engine == "trace":
+        return TraceEngine(ring=ring)
+    raise ValueError(f"unknown engine {engine!r} "
+                     "(expected 'clear', 'mpc', 'trace', or an instance)")
+
+
+def resolve_variant(engine, variant) -> frozenset:
+    """Per-call variant > engine default > full MLP emulation; strings
+    name entries of VARIANTS."""
+    if variant is None:
+        variant = getattr(engine, "variant", None)
+    if variant is None:
+        return FULL_VARIANT
+    if isinstance(variant, str):
+        return VARIANTS[variant]
+    return frozenset(variant)

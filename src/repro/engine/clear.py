@@ -1,0 +1,115 @@
+"""ClearEngine — float (jnp) interpretation of the proxy forward.
+
+The numerical reference and the training substrate: in-vivo finetuning
+differentiates straight through it.  Nonlinearity strategies implement
+the Table-2 ablations (exact softmax / rsqrt / entropy when the MLP
+emulator is ablated) and the Table-3 baseline softmaxes (MPCFormer
+2Quad, Bolt-style polynomial exp).
+"""
+import dataclasses
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.forward import _mlp_at
+
+
+def mlp_apply(p, x):
+    """Clear 2-layer emulator MLP (Linear -> ReLU -> Linear).
+
+    Canonical home of the clear apply path (core/approx re-exports it);
+    the share-level twin lives in engine/mpc.mlp_apply_mpc.
+    """
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def softmax_entropy(logits):
+    """Exact fused softmax+entropy (the op MLP_se emulates)."""
+    p = jax.nn.softmax(logits, axis=-1)
+    return -jnp.sum(p * jnp.log(p + 1e-9), axis=-1, keepdims=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClearEngine:
+    """Stateless (hashable, jit-closure friendly) float engine."""
+
+    variant: frozenset | None = None     # default nonlinearity policy
+    kind: ClassVar[str] = "clear"
+
+    # -- data entry ------------------------------------------------------
+    def embed(self, pp, x_in, cfg):
+        if jnp.issubdtype(jnp.asarray(x_in).dtype, jnp.floating):
+            return x_in                  # pre-embedded activations
+        x = jnp.take(pp["embed"], x_in, axis=0).astype(jnp.float32)
+        return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    # -- linear algebra --------------------------------------------------
+    def add(self, x, y):
+        return x + y
+
+    def sub(self, x, y):
+        return x - y
+
+    def mul(self, x, y):
+        return x * y
+
+    def mul_public(self, x, v):
+        return x * v
+
+    def add_public(self, x, v):
+        return x + v
+
+    def matmul(self, x, y):
+        return jnp.matmul(x, y)
+
+    def mean(self, x, axis):
+        return jnp.mean(x, axis=axis)
+
+    # -- shape ops -------------------------------------------------------
+    def shape(self, x):
+        return tuple(x.shape)
+
+    def reshape(self, x, shape):
+        return jnp.reshape(x, shape)
+
+    def broadcast(self, x, shape):
+        return jnp.broadcast_to(x, shape)
+
+    def moveaxis(self, x, src, dst):
+        return jnp.moveaxis(x, src, dst)
+
+    def swapaxes(self, x, a, b):
+        return jnp.swapaxes(x, a, b)
+
+    def index(self, x, i):
+        return x[i]
+
+    # -- nonlinearity strategies -----------------------------------------
+    def mlp(self, p, x):
+        return mlp_apply(p, x)
+
+    def ln_inv(self, pp, li, var, variant):
+        if "ln" in variant:
+            return self.mlp(_mlp_at(pp["mlp_ln"], li), var)
+        return jax.lax.rsqrt(var + 1e-5)
+
+    def attn_probs(self, pp, li, scores, variant):
+        """Rows (N, S) -> attention probabilities (N, S)."""
+        if "sm" in variant:
+            return self.mlp(_mlp_at(pp["mlp_sm"], li), scores)
+        if "quad_sm" in variant:         # MPCFormer 2Quad
+            e = (scores + 5.0) ** 2
+            return e / jnp.maximum(e.sum(-1, keepdims=True), 1e-6)
+        if "poly_sm" in variant:         # Bolt-style polynomial exp
+            t = jnp.clip(scores - scores.max(-1, keepdims=True), -8, 0)
+            e = 1 + t + t * t / 2 + t ** 3 / 6 + t ** 4 / 24
+            e = jnp.maximum(e, 0.0)
+            return e / jnp.maximum(e.sum(-1, keepdims=True), 1e-6)
+        return jax.nn.softmax(scores, axis=-1)
+
+    def entropy_head(self, pp, logits, variant):
+        if "se" in variant:
+            return self.mlp(pp["mlp_se"], logits)[:, 0]
+        return softmax_entropy(logits)[:, 0]

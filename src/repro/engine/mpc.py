@@ -1,0 +1,194 @@
+"""MPCEngine — share-level interpretation of the proxy forward.
+
+Tensors are `AShare`s over a `RingSpec`; RING64 (CrypTen-style local
+truncation) and RING32 (TPU-native, dealer-assisted truncation) share
+this one code path — the ring decides which truncation protocol
+`mpc/ops.trunc` runs and what lands in the cost Ledger.
+
+PRNG keys are threaded internally: the engine is seeded once per
+forward (`with_key`) and derives one key per keyed op site by folding
+an op counter.  The op sequence is fixed by `engine/forward.py`, so the
+derived key stream is deterministic — the wave executor's schedule
+variants (vmapped wave vs per-lane serial) see identical keys and
+therefore produce bitwise-identical shares.
+
+Exact-op variant strategies (softmax / rsqrt / entropy when the MLP
+emulator is ablated, plus the 2Quad and polynomial baseline softmaxes)
+run the real CrypTen-style protocols from `mpc/nonlinear.py` — this is
+what lets Table 3's baselines be *executed* over MPC, not only priced.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.engine.forward import _mlp_at
+from repro.mpc import compare, nonlinear, ops as mops
+from repro.mpc.ring import RING64, RingSpec
+from repro.mpc.sharing import AShare
+
+
+def _ax(axis: int) -> int:
+    """Value axis -> share-array axis (leading party axis of size 2)."""
+    return axis + 1 if axis >= 0 else axis
+
+
+def mlp_apply_mpc(p_sh: dict, x: AShare, key) -> AShare:
+    """Share-level emulator MLP: weights are model-owner-private shares.
+
+    Cost: 2 Beaver matmuls (1 round each, bytes ~ rows*(d_in + d_out))
+    + ReLU over `hidden` elements only — the dimension reduction the
+    paper's MPC savings come from.  Canonical home of the share-level
+    apply path (core/approx re-exports it); the clear twin lives in
+    engine/clear.mlp_apply.
+    """
+    def _badd(h: AShare, b: AShare) -> AShare:
+        bb = jnp.broadcast_to(b.sh[:, None, :], h.sh.shape)
+        return mops.add(h, AShare(bb, h.ring))
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    h = mops.matmul(x, p_sh["w1"], k1)
+    h = _badd(h, p_sh["b1"])
+    h = compare.relu(h, k2)
+    out = mops.matmul(h, p_sh["w2"], k3)
+    return _badd(out, p_sh["b2"])
+
+
+class MPCEngine:
+    kind = "mpc"
+
+    def __init__(self, ring: RingSpec = RING64, variant=None, key=None):
+        self.ring = ring
+        self.variant = variant
+        self._key = key
+        self._ctr = 0
+
+    def with_key(self, key) -> "MPCEngine":
+        """Fresh engine seeded for one forward (keys derive from here)."""
+        return MPCEngine(self.ring, self.variant, key=key)
+
+    def _k(self):
+        if self._key is None:
+            raise ValueError("MPCEngine needs a PRNG seed: call "
+                             "engine.with_key(key) before the forward")
+        k = jax.random.fold_in(self._key, self._ctr)
+        self._ctr += 1
+        return k
+
+    # -- data entry ------------------------------------------------------
+    def embed(self, pp, x_in, cfg):
+        if not isinstance(x_in, AShare):
+            raise TypeError(
+                "MPCEngine consumes shared embedded inputs (B, S, d): the "
+                "data owner shares one-hot rows and the embedding matmul "
+                "is folded into share generation (see mpc/sharing.share)")
+        return x_in
+
+    # -- linear algebra --------------------------------------------------
+    def add(self, x, y):
+        return mops.add(x, y)
+
+    def sub(self, x, y):
+        return mops.sub(x, y)
+
+    def mul(self, x, y):
+        return mops.mul(x, y, self._k())
+
+    def mul_public(self, x, v):
+        return mops.mul_public(x, v, key=self._k())
+
+    def add_public(self, x, v):
+        return mops.add_public(x, v)
+
+    def matmul(self, x, y):
+        return mops.matmul(x, y, self._k())
+
+    def mean(self, x, axis):
+        return mops.mean(x, axis=axis, key=self._k())
+
+    # -- shape ops (local on shares) -------------------------------------
+    def shape(self, x):
+        return x.shape
+
+    def reshape(self, x, shape):
+        return x.reshape(*shape)
+
+    def broadcast(self, x, shape):
+        # right-align the VALUE dims under the leading party axis: a
+        # (2, n)-share broadcast to value shape (rows, n) must become
+        # (2, 1, n) first, or the party axis would be matched against a
+        # value dim (the attention-bias path hits exactly this)
+        shape = tuple(shape)
+        pad = len(shape) - x.ndim
+        sh = x.sh.reshape((2,) + (1,) * pad + x.shape)
+        return AShare(jnp.broadcast_to(sh, (2,) + shape), x.ring)
+
+    def moveaxis(self, x, src, dst):
+        return AShare(jnp.moveaxis(x.sh, _ax(src), _ax(dst)), x.ring)
+
+    def swapaxes(self, x, a, b):
+        return AShare(jnp.swapaxes(x.sh, _ax(a), _ax(b)), x.ring)
+
+    def index(self, x, i):
+        return AShare(x.sh[:, i], x.ring)
+
+    # -- nonlinearity strategies -----------------------------------------
+    def mlp(self, p, x):
+        return mlp_apply_mpc(p, x, self._k())
+
+    def ln_inv(self, pp, li, var, variant):
+        if "ln" in variant:
+            return self.mlp(_mlp_at(pp["mlp_ln"], li), var)
+        return nonlinear.rsqrt(mops.add_public(var, 1e-5), self._k())
+
+    def attn_probs(self, pp, li, scores, variant):
+        if "sm" in variant:
+            return self.mlp(_mlp_at(pp["mlp_sm"], li), scores)
+        if "quad_sm" in variant:
+            return self._quad_softmax(scores)
+        if "poly_sm" in variant:
+            return self._poly_softmax(scores)
+        return nonlinear.softmax(scores, self._k(), axis=-1)
+
+    def entropy_head(self, pp, logits, variant):
+        b = logits.shape[0]
+        if "se" in variant:
+            return self.mlp(pp["mlp_se"], logits).reshape(b)
+        return nonlinear.entropy_from_logits(logits, self._k())
+
+    # -- Table-3 baseline softmaxes over shares --------------------------
+    def _quad_softmax(self, scores):
+        """MPCFormer 2Quad: (x+5)^2 / sum — square + NR reciprocal."""
+        a = mops.add_public(scores, 5.0)
+        e = mops.mul(a, a, self._k())
+        s = mops.sum_(e, axis=-1, keepdims=True)
+        # clamp mirroring the clear strategy's max(sum, 1e-6): keeps the
+        # NR reciprocal away from a near-zero pole when every score in a
+        # row sits near -5
+        s = mops.add_public(s, 1e-6)
+        r = nonlinear.reciprocal(s, self._k())
+        rb = AShare(jnp.broadcast_to(r.sh, e.sh.shape), e.ring)
+        return mops.mul(e, rb, self._k())
+
+    def _poly_softmax(self, scores):
+        """Bolt-style polynomial exp of clipped, max-shifted scores.
+
+        clip(t, -8, 0) over shares: max(t,-8) = relu(t+8)-8, then
+        min(u,0) = u - relu(u) — two comparisons per element, matching
+        the baseline's real MPC cost profile.
+        """
+        mx = compare.max_(scores, axis=-1, key=self._k())
+        mb = AShare(jnp.broadcast_to(mx.sh, scores.sh.shape), scores.ring)
+        t = mops.sub(scores, mb)
+        lo = mops.add_public(compare.relu(mops.add_public(t, 8.0), self._k()),
+                             -8.0)
+        t = mops.sub(lo, compare.relu(lo, self._k()))
+        # Horner: e = 1 + t(1 + t(1/2 + t(1/6 + t/24)))
+        acc = mops.add_public(mops.mul_public(t, 1.0 / 24.0, key=self._k()),
+                              1.0 / 6.0)
+        acc = mops.add_public(mops.mul(t, acc, self._k()), 0.5)
+        acc = mops.add_public(mops.mul(t, acc, self._k()), 1.0)
+        e = mops.add_public(mops.mul(t, acc, self._k()), 1.0)
+        e = compare.relu(e, self._k())
+        s = mops.sum_(e, axis=-1, keepdims=True)
+        r = nonlinear.reciprocal(s, self._k())
+        rb = AShare(jnp.broadcast_to(r.sh, e.sh.shape), e.ring)
+        return mops.mul(e, rb, self._k())

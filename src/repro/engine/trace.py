@@ -1,0 +1,94 @@
+"""TraceEngine — the zero-FLOP cost probe.
+
+Runs the MPC op stream of the unified forward under `jax.eval_shape`:
+the Python protocol executes (so every `comm.record` fires with real
+static shapes) but no array math does.  This is the probe the wave
+executor used to improvise inline; it also prices *paper-scale*
+geometries without materializing a single weight — `abstract_shares`
+builds a ShapeDtypeStruct proxy pytree, so a BERT-scale per-batch
+Ledger costs microseconds (benchmarks/table3_baselines.py).
+"""
+import contextlib
+
+import jax
+
+from repro.engine.forward import proxy_entropy
+from repro.engine.mpc import MPCEngine
+from repro.mpc import comm
+from repro.mpc.comm import Ledger
+from repro.mpc.ring import RING64, RingSpec, x64_scope
+from repro.mpc.sharing import AShare
+
+
+class TraceEngine:
+    """Probe engine: prices the MPC op stream via `probe()`. It does
+    not execute forwards itself — attempting to use it as a tensor
+    engine fails loudly rather than pretending to hold data."""
+
+    kind = "trace"
+
+    def __init__(self, ring: RingSpec = RING64, variant=None):
+        self.ring = ring
+        self.variant = variant
+
+    def probe(self, pp_sh, cfg, spec, batch_shape, key=None,
+              variant=None) -> Ledger:
+        """Ledger of ONE batch (B, S, d) of the share-level forward.
+
+        `pp_sh` may hold real share arrays or ShapeDtypeStructs — both
+        flow through eval_shape untouched.
+        """
+        ring = self.ring
+        variant = self.variant if variant is None else variant
+        key = jax.random.key(0) if key is None else key
+
+        def fwd(pp, sh, k):
+            eng = MPCEngine(ring=ring, variant=variant).with_key(k)
+            return proxy_entropy(eng, pp, cfg, AShare(sh, ring), spec,
+                                 variant).sh
+
+        ctx = x64_scope() if ring.bits >= 64 else contextlib.nullcontext()
+        with ctx, comm.ledger_scope() as led:
+            jax.eval_shape(fwd, pp_sh,
+                           jax.ShapeDtypeStruct((2,) + tuple(batch_shape),
+                                                ring.dtype), key)
+        return led
+
+    def embed(self, pp, x_in, cfg):
+        raise TypeError(
+            "TraceEngine measures cost streams abstractly — call "
+            "TraceEngine.probe(pp_sh, cfg, spec, batch_shape) instead of "
+            "running a forward through it; use ClearEngine/MPCEngine to "
+            "execute")
+
+
+def abstract_shares(cfg, spec, seq_len: int, n_classes: int,
+                    ring: RingSpec = RING64):
+    """ShapeDtypeStruct pytree shaped like `proxy.share_proxy`'s output
+    (minus the embedding table, which the MPC forward never touches) —
+    lets `TraceEngine.probe` price paper-scale proxies for free."""
+    dh, w = cfg.d_head, spec.n_heads
+    wk = min(w, cfg.n_kv_heads)
+    L, hid = spec.n_layers, spec.mlp_dim
+
+    def sh(*shape):
+        return AShare(jax.ShapeDtypeStruct((2,) + shape, ring.dtype), ring)
+
+    def mlp(d_in, d_out):
+        return {"w1": sh(d_in, hid), "b1": sh(hid),
+                "w2": sh(hid, d_out), "b2": sh(d_out)}
+
+    return {
+        "cls_head": sh(cfg.d_model, n_classes),
+        "attn": {
+            "wq": sh(L, cfg.d_model, w * dh),
+            "wk": sh(L, cfg.d_model, wk * dh),
+            "wv": sh(L, cfg.d_model, wk * dh),
+            "wo": sh(L, w * dh, cfg.d_model),
+        },
+        "ln_scale": sh(L, cfg.d_model),
+        "ln_bias": sh(L, cfg.d_model),
+        "mlp_sm": [mlp(seq_len, seq_len) for _ in range(L)],
+        "mlp_ln": [mlp(1, 1) for _ in range(L)],
+        "mlp_se": mlp(n_classes, 1),
+    }

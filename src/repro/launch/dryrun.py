@@ -122,7 +122,8 @@ def build_cell(cfg, shape: ShapeSpec, rules: ShardRules):
     for a in rules.batch_axes:
         nb *= mesh.shape[a]
     if cfg.family == "moe":
-        tokens = shape.global_batch * max(shape.seq_len if shape.kind == "train" else 1, 1)
+        tokens = shape.global_batch * max(
+            shape.seq_len if shape.kind == "train" else 1, 1)
         groups = nb if tokens % nb == 0 else 1
         cfg = dataclasses.replace(cfg, moe_groups=groups)
 

@@ -11,15 +11,21 @@ entry point. Delay numbers come from the calibrated analytic cost model
 (mpc/costs.py) scheduled by core/iosched.py — identical formulas to the
 executable share-level path, evaluated at the paper's geometry.
 
---mode mpc runs Stage 2 through the wave executor (core/executor.py);
---wave/--no-coalesce/--no-overlap select among Fig 7's four schedule
-variants at runtime, and the output includes each phase's realized
-flight ledger plus its exact agreement with the makespan model.
+--mode mpc runs Stage 2 through the wave executor (core/executor.py)
+with an MPCEngine interpreting the unified proxy forward; --ring 32
+switches the same code path onto the TPU-native RING32/dealer-trunc
+ring. --wave/--no-coalesce/--no-overlap select among Fig 7's four
+schedule variants at runtime, and the output includes each phase's
+realized flight ledger plus its exact agreement with the makespan
+model. Re-runs resume from phase checkpoints (--no-resume disables).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import getpass
+import os
+import tempfile
 import time
 
 import numpy as np
@@ -32,8 +38,10 @@ from repro.core.executor import ExecConfig
 from repro.core.proxy import ProxySpec
 from repro.core.selection import SelectionConfig, run_selection
 from repro.data.tasks import make_classification_task
+from repro.engine import ClearEngine, MPCEngine
 from repro.mpc import costs
 from repro.mpc.comm import WAN, POD_DCN
+from repro.mpc.ring import RING32, RING64
 
 
 def paper_scale_delay(n_pool: int, budget_frac: float, *, seq: int = 128,
@@ -75,19 +83,24 @@ def paper_scale_delay(n_pool: int, budget_frac: float, *, seq: int = 128,
 def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         mode: str = "clear", finetune_steps: int = 250, *,
         wave: int = 8, coalesce: bool = True, overlap: bool = True,
-        score_batch: int = 64) -> dict:
+        score_batch: int = 64, ring_bits: int = 64,
+        resume: bool = True) -> dict:
     task = make_classification_task(seed, n_pool=n_pool, n_test=400,
                                     seq=16, vocab=256, n_classes=4)
     cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
     key = jax.random.key(seed)
     params0 = tgt.init_classifier(key, cfg, task.n_classes)
 
+    ring = RING32 if ring_bits == 32 else RING64
+    engine = MPCEngine(ring=ring) if mode == "mpc" else ClearEngine()
+    ckpt_dir = os.path.join(tempfile.gettempdir(),
+                            f"selectformer_phases_{getpass.getuser()}")
     sel = SelectionConfig(
         phases=[ProxySpec(1, 2, 2, 0.4), ProxySpec(2, 4, 8, 1.0)],
-        budget_frac=budget, boot_frac=0.05, mode=mode,
+        budget_frac=budget, boot_frac=0.05, engine=engine,
         exvivo_steps=150, invivo_steps=80, finetune_steps=100,
         score_batch=score_batch,
-        checkpoint_dir="/tmp/selectformer_phases",
+        checkpoint_dir=ckpt_dir, resume=resume,
         executor=ExecConfig(wave=wave, coalesce=coalesce, overlap=overlap))
     t0 = time.time()
     res = run_selection(key, params0, cfg, task.pool_tokens, sel,
@@ -99,7 +112,12 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
     # the analytic makespan's inputs (exact integer agreement)
     executed = None
     if mode == "mpc":
-        executed = {"phases": [], "ledger_agrees": True}
+        # ledger_agrees: None until at least one phase actually executed
+        # this run — a fully-resumed run must not assert a contract it
+        # never checked
+        executed = {"phases": [],
+                    "ledger_agrees": True if res.exec_reports else None,
+                    "resumed_phases": res.resumed_phases}
         for rep in res.exec_reports:
             executed["ledger_agrees"] &= rep.agrees()
             executed["phases"].append({
@@ -146,16 +164,27 @@ def main() -> None:
                     help="disable latency-flight coalescing (fig7 'serial')")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable comm/compute double buffering")
+    ap.add_argument("--ring", type=int, choices=[64, 32], default=64,
+                    help="MPC ring: 64 (CrypTen oracle) or 32 "
+                         "(TPU dealer-trunc)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore existing phase checkpoints")
     args = ap.parse_args()
     out = run(args.seed, args.pool, args.budget, args.mode,
               wave=args.wave, coalesce=not args.no_coalesce,
-              overlap=not args.no_overlap, score_batch=args.score_batch)
+              overlap=not args.no_overlap, score_batch=args.score_batch,
+              ring_bits=args.ring, resume=not args.no_resume)
     if out["executed"] is not None:
         ex = out["executed"]
         ph = ex["phases"]
-        print(f"[select] executed {len(ph)} MPC phases, ledger_agrees="
-              f"{ex['ledger_agrees']}; per-phase makespan(WAN) "
-              + ", ".join(f"{p['makespan_wan_s']:.1f}s" for p in ph))
+        if ex["resumed_phases"]:
+            print(f"[select] resumed {ex['resumed_phases']} phase(s) from "
+                  "checkpoints — MPC execution skipped for those "
+                  "(re-run with --no-resume to execute everything)")
+        if ph:
+            print(f"[select] executed {len(ph)} MPC phases, ledger_agrees="
+                  f"{ex['ledger_agrees']}; per-phase makespan(WAN) "
+                  + ", ".join(f"{p['makespan_wan_s']:.1f}s" for p in ph))
     print(f"[select] ours={out['acc_ours']:.3f} random={out['acc_random']:.3f} "
           f"(+{out['gain']:.3f}); modeled WAN delay "
           f"{out['paper_scale_delay']['wan']['ours_hours']:.1f}h vs oracle "

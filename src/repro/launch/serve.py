@@ -19,7 +19,7 @@ import numpy as np
 from repro.configs.base import load_arch, ARCH_IDS
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.parallel.sharding import ShardRules, param_specs, rules_scope
+from repro.parallel.sharding import ShardRules, rules_scope
 
 
 @dataclasses.dataclass

@@ -16,17 +16,15 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.checkpoint import AsyncCheckpointer, restore_checkpoint, latest_step
+from repro.checkpoint import AsyncCheckpointer, restore_checkpoint
 from repro.configs.base import load_arch, ARCH_IDS
 from repro.data.pipeline import DataPipeline
 from repro.launch.mesh import make_host_mesh, data_shards
 from repro.models import transformer as T
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
-from repro.parallel.sharding import (ShardRules, param_specs, rules_scope,
-                                     batch_spec)
-from repro.runtime.ft import HeartbeatMonitor, StragglerMitigator, retry
+from repro.parallel.sharding import ShardRules, param_specs, rules_scope
+from repro.runtime.ft import HeartbeatMonitor, StragglerMitigator
 
 
 @dataclasses.dataclass

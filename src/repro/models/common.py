@@ -104,7 +104,8 @@ def mask_fn(kind: str, window: int = 0, prefix_len: int = 0):
     if kind == "local":
         return lambda q, k: (k <= q) & (k > q - window)
     if kind == "bidir":
-        return lambda q, k: jnp.ones(jnp.broadcast_shapes(jnp.shape(q), jnp.shape(k)), bool)
+        return lambda q, k: jnp.ones(
+            jnp.broadcast_shapes(jnp.shape(q), jnp.shape(k)), bool)
     if kind == "prefix":
         return lambda q, k: (k <= q) | (k < prefix_len)
     raise ValueError(kind)

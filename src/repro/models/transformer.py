@@ -15,8 +15,6 @@ Entry points (all pure):
 from __future__ import annotations
 
 import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -55,7 +53,8 @@ def _init_norms(cfg: ArchConfig, n: int, names=("ln1", "ln2")):
     out = {}
     for nm in names:
         base = common.init_norm(cfg.d_model, cfg.norm_type)
-        out[nm] = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), base)
+        out[nm] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), base)
     return out
 
 
@@ -174,8 +173,10 @@ def _attn_mix(x, lp, cfg: ArchConfig, *, mask_kind, positions, window=0,
             dv = cv.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
             new_cache = (ck, cv, cks, cvs)
         else:
-            ck = jax.lax.dynamic_update_index_in_dim(ck, k[:, 0].astype(ck.dtype), slot, axis=1)
-            cv = jax.lax.dynamic_update_index_in_dim(cv, v[:, 0].astype(cv.dtype), slot, axis=1)
+            ck = jax.lax.dynamic_update_index_in_dim(
+                ck, k[:, 0].astype(ck.dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_index_in_dim(
+                cv, v[:, 0].astype(cv.dtype), slot, axis=1)
             dk, dv = ck, cv
             new_cache = (ck, cv)
         if window:
@@ -373,9 +374,11 @@ def _run_hybrid(params, cfg: ArchConfig, x, positions, *, remat=False):
     n_att_pat = pat.count("attn")
     rec, att = params["rec_layers"], params["attn_layers"]
     rec_main = jax.tree.map(
-        lambda a: a[:n_full * n_rec_pat].reshape((n_full, n_rec_pat) + a.shape[1:]), rec)
+        lambda a: a[:n_full * n_rec_pat].reshape(
+            (n_full, n_rec_pat) + a.shape[1:]), rec)
     att_main = jax.tree.map(
-        lambda a: a[:n_full * n_att_pat].reshape((n_full, n_att_pat) + a.shape[1:]), att)
+        lambda a: a[:n_full * n_att_pat].reshape(
+            (n_full, n_att_pat) + a.shape[1:]), att)
 
     def super_block(x, xs):
         rp, ap = xs
@@ -480,7 +483,8 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int):
         kinds = cfg._layer_kinds()
         n_rec, n_att = kinds.count("rec"), kinds.count("attn")
         w = min(cfg.window_size, max_len)
-        return {"conv": jnp.zeros((n_rec, batch, cfg.conv_width - 1, cfg.lru_width), dt),
+        return {"conv": jnp.zeros((n_rec, batch, cfg.conv_width - 1,
+                                   cfg.lru_width), dt),
                 "h": jnp.zeros((n_rec, batch, cfg.lru_width), jnp.float32),
                 "k": jnp.zeros((n_att, batch, w, k, dh), dt),
                 "v": jnp.zeros((n_att, batch, w, k, dh), dt)}

@@ -15,9 +15,7 @@ paper explicitly reveals).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.mpc.ring import RingSpec
 from repro.mpc.sharing import AShare, share_encoded
 from repro.mpc import comm, ops
 

@@ -8,6 +8,12 @@ scheduler consume. Element size defaults to CrypTen's int64 ring (8 B).
 Tag convention ("bw" bandwidth-bound / "lat" latency-bound) feeds the
 paper's §4.4 scheduler: comparisons and low-dim ops are "lat", big-tensor
 Beaver openings are "bw".
+
+Ring parameterization: the primitive helpers take an optional RingSpec.
+RING64 (default) truncates locally — free, no record, CrypTen's choice.
+RING32 (the TPU ring) uses dealer-assisted truncation: every fixed-point
+product pays one extra opening round (`trunc_open`), mirrored here
+record-for-record against `ops.trunc`'s dealer path.
 """
 from __future__ import annotations
 
@@ -17,8 +23,9 @@ import math
 from repro.mpc.comm import Ledger, CostRecord
 from repro.mpc.compare import CMP_ROUNDS, CMP_BYTES
 from repro.mpc.nonlinear import EXP_ITERS, RECIP_ITERS, RSQRT_ITERS, LOG_ITERS
+from repro.mpc.ring import RING64, RingSpec
 
-EB = 8  # ring element bytes (int64)
+EB = 8  # default ring element bytes (int64)
 
 
 def _led(*recs: CostRecord) -> Ledger:
@@ -39,26 +46,41 @@ def merge(*ledgers: Ledger) -> Ledger:
 # primitive costs
 # ---------------------------------------------------------------------------
 
-def open_cost(n: int, op: str = "open") -> Ledger:
-    return _led(CostRecord(op, 1, 2 * EB * n, n, 0, "bw"))
+def open_cost(n: int, op: str = "open", *, ring: RingSpec = RING64) -> Ledger:
+    return _led(CostRecord(op, 1, 2 * ring.elem_bytes * n, n, 0, "bw"))
 
 
-def mul_cost(n: int, op: str = "beaver_mul") -> Ledger:
-    return _led(CostRecord(op, 1, 4 * EB * n, n, 4 * n, "bw"))
+def trunc_cost(n: int, op: str = "trunc_open", *,
+               ring: RingSpec = RING64) -> Ledger:
+    """Fixed-point truncation after a product: free on RING64 (local
+    arithmetic shift), one dealer-pair opening on RING32 (ops.trunc)."""
+    if ring.bits >= 64:
+        return Ledger()
+    return _led(CostRecord(op, 1, 2 * ring.elem_bytes * n, n, 0, "bw"))
 
 
-def matmul_cost(batch: int, m: int, k: int, n: int, op: str = "beaver_matmul") -> Ledger:
-    nbytes = 2 * EB * batch * (m * k + k * n)
-    return _led(CostRecord(op, 1, nbytes, batch * (m * k + k * n),
-                           2 * batch * m * k * n, "bw"))
+def mul_cost(n: int, op: str = "beaver_mul", *,
+             ring: RingSpec = RING64) -> Ledger:
+    return merge(_led(CostRecord(op, 1, 4 * ring.elem_bytes * n, n,
+                                 4 * n, "bw")),
+                 trunc_cost(n, op + ".trunc", ring=ring))
+
+
+def matmul_cost(batch: int, m: int, k: int, n: int,
+                op: str = "beaver_matmul", *,
+                ring: RingSpec = RING64) -> Ledger:
+    nbytes = 2 * ring.elem_bytes * batch * (m * k + k * n)
+    return merge(_led(CostRecord(op, 1, nbytes, batch * (m * k + k * n),
+                                 2 * batch * m * k * n, "bw")),
+                 trunc_cost(batch * m * n, op + ".trunc", ring=ring))
 
 
 def cmp_cost(n: int, op: str = "secure_cmp") -> Ledger:
     return _led(CostRecord(op, CMP_ROUNDS, CMP_BYTES * n, n, 0, "lat"))
 
 
-def relu_cost(n: int, op: str = "relu") -> Ledger:
-    return merge(cmp_cost(n, op + ".cmp"), mul_cost(n, op + ".mul"))
+def relu_cost(n: int, op: str = "relu", *, ring: RingSpec = RING64) -> Ledger:
+    return merge(cmp_cost(n, op + ".cmp"), mul_cost(n, op + ".mul", ring=ring))
 
 
 def exp_cost(n: int, op: str = "exp") -> Ledger:
@@ -134,11 +156,11 @@ def entropy_cost(rows: int, classes: int, op: str = "entropy") -> Ledger:
 # ---------------------------------------------------------------------------
 
 def mlp_cost(rows: int, d_in: int, hidden: int, d_out: int,
-             op: str = "mlp") -> Ledger:
+             op: str = "mlp", *, ring: RingSpec = RING64) -> Ledger:
     """Linear(d_in->h) + ReLU(h) + Linear(h->d_out), private weights."""
-    return merge(matmul_cost(1, rows, d_in, hidden, op + ".fc1"),
-                 relu_cost(rows * hidden, op + ".relu"),
-                 matmul_cost(1, rows, hidden, d_out, op + ".fc2"))
+    return merge(matmul_cost(1, rows, d_in, hidden, op + ".fc1", ring=ring),
+                 relu_cost(rows * hidden, op + ".relu", ring=ring),
+                 matmul_cost(1, rows, hidden, d_out, op + ".fc2", ring=ring))
 
 
 # ---------------------------------------------------------------------------
@@ -222,53 +244,66 @@ def proxy_model_cost(g: BlockGeom, layers: int, classes: int,
     blk = proxy_block_cost(g, mlp_hidden)
     for _ in range(layers):
         led.records.extend(blk.records)
-    led.records.extend(matmul_cost(1, g.batch, g.d_model, classes, "proxy.head").records)
+    led.records.extend(matmul_cost(1, g.batch, g.d_model, classes,
+                                   "proxy.head").records)
     # fused softmax+entropy MLP: classes -> hidden -> 1
-    led.records.extend(mlp_cost(g.batch, classes, mlp_hidden, 1, "proxy.mlp_se").records)
+    led.records.extend(mlp_cost(g.batch, classes, mlp_hidden, 1,
+                                "proxy.mlp_se").records)
     return led
 
 
 def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
                     kv_heads: int, d_head: int, mlp_hidden: int,
                     classes: int, n_layers: int,
-                    op: str = "exec") -> Ledger:
-    """EXACT mirror of core/proxy.proxy_entropy_mpc's RING64 op stream.
+                    op: str = "exec", *, ring: RingSpec = RING64) -> Ledger:
+    """EXACT mirror of the engine forward's share-level op stream.
 
     Record-for-record prediction of what one batch of the executable
-    share-level proxy forward puts on the wire — the contract the wave
-    executor's probe ledger is tested against (tests/test_executor.py)
-    and the per-batch input fig7 feeds to iosched.makespan. Unlike
-    `proxy_model_cost` (paper-geometry pricing with fused QKV), this
-    follows the executed path: separate q/k/v openings, two LayerNorm
-    affine multiplies, GQA head grouping, local (record-free) RING64
-    truncation. Biases add no wire cost, so the formulas hold with or
+    proxy forward (`engine/forward.proxy_entropy` under an MPCEngine)
+    puts on the wire — the contract the wave executor's TraceEngine
+    probe is tested against (tests/test_executor.py) and the per-batch
+    input fig7 feeds to iosched.makespan. Unlike `proxy_model_cost`
+    (paper-geometry pricing with fused QKV), this follows the executed
+    path: separate q/k/v openings, two LayerNorm affine multiplies, GQA
+    head grouping, and ring-dependent truncation — record-free local
+    shifts on RING64, dealer-assisted `trunc_open` rounds on RING32
+    (including the mean/scale `mul_public` truncations that are free on
+    RING64). Biases add no wire cost, so the formulas hold with or
     without them.
     """
     w, wk = heads, min(kv_heads, heads)
     t = bsz * seq
     layer = merge(
-        # MLP-LayerNorm: numerator exact (var multiply), rsqrt emulated,
-        # then normalize-and-affine multiplies against shared gamma
-        mul_cost(t * d_model, f"{op}.ln.var"),
-        mlp_cost(t, 1, mlp_hidden, 1, f"{op}.mlp_ln"),
-        mul_cost(t * d_model, f"{op}.ln.normmul"),
-        mul_cost(t * d_model, f"{op}.ln.affine"),
+        # MLP-LayerNorm: mean (trunc only), numerator exact (var
+        # multiply), rsqrt emulated, then normalize-and-affine
+        # multiplies against shared gamma
+        trunc_cost(t, f"{op}.ln.mu.trunc", ring=ring),
+        mul_cost(t * d_model, f"{op}.ln.var", ring=ring),
+        trunc_cost(t, f"{op}.ln.var_mean.trunc", ring=ring),
+        mlp_cost(t, 1, mlp_hidden, 1, f"{op}.mlp_ln", ring=ring),
+        mul_cost(t * d_model, f"{op}.ln.normmul", ring=ring),
+        mul_cost(t * d_model, f"{op}.ln.affine", ring=ring),
         # pruned attention: per-projection Beaver matmuls
-        matmul_cost(1, t, d_model, w * d_head, f"{op}.q"),
-        matmul_cost(1, t, d_model, wk * d_head, f"{op}.k"),
-        matmul_cost(1, t, d_model, wk * d_head, f"{op}.v"),
-        matmul_cost(bsz * w, seq, d_head, seq, f"{op}.scores"),
-        mlp_cost(bsz * w * seq, seq, mlp_hidden, seq, f"{op}.mlp_sm"),
-        matmul_cost(bsz * w, seq, seq, d_head, f"{op}.av"),
-        matmul_cost(1, t, w * d_head, d_model, f"{op}.out"),
+        matmul_cost(1, t, d_model, w * d_head, f"{op}.q", ring=ring),
+        matmul_cost(1, t, d_model, wk * d_head, f"{op}.k", ring=ring),
+        matmul_cost(1, t, d_model, wk * d_head, f"{op}.v", ring=ring),
+        matmul_cost(bsz * w, seq, d_head, seq, f"{op}.scores", ring=ring),
+        trunc_cost(bsz * w * seq * seq, f"{op}.scores.scale.trunc",
+                   ring=ring),
+        mlp_cost(bsz * w * seq, seq, mlp_hidden, seq, f"{op}.mlp_sm",
+                 ring=ring),
+        matmul_cost(bsz * w, seq, seq, d_head, f"{op}.av", ring=ring),
+        matmul_cost(1, t, w * d_head, d_model, f"{op}.out", ring=ring),
     )
     led = Ledger()
     for _ in range(n_layers):
         led.records.extend(layer.records)
+    led.records.extend(trunc_cost(bsz * d_model, f"{op}.pool.trunc",
+                                  ring=ring).records)
     led.records.extend(matmul_cost(1, bsz, d_model, classes,
-                                   f"{op}.head").records)
+                                   f"{op}.head", ring=ring).records)
     led.records.extend(mlp_cost(bsz, classes, mlp_hidden, 1,
-                                f"{op}.mlp_se").records)
+                                f"{op}.mlp_se", ring=ring).records)
     return led
 
 

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.mpc.ring import RingSpec
-from repro.mpc.sharing import AShare, from_public
+from repro.mpc.sharing import AShare
 from repro.mpc import beaver, comm
 
 

@@ -10,11 +10,9 @@ wire; values never leave share form.
 from __future__ import annotations
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from repro.mpc.sharing import AShare
-from repro.mpc import compare, comm
+from repro.mpc import compare
 
 
 def _cmp_batch(scores: AShare, idx_a: np.ndarray, pivot: int) -> np.ndarray:
@@ -75,4 +73,5 @@ def expected_comparisons(n: int, k: int) -> float:
 def quickselect_cost(n: int) -> tuple[int, int]:
     """(rounds, bytes) under coalescing: O(log n) batched flights."""
     flights = int(np.ceil(np.log2(max(n, 2)))) + 4
-    return flights * compare.CMP_ROUNDS, int(expected_comparisons(n, 0)) * compare.CMP_BYTES
+    return (flights * compare.CMP_ROUNDS,
+            int(expected_comparisons(n, 0)) * compare.CMP_BYTES)

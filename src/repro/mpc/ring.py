@@ -16,11 +16,9 @@ Two presets:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +52,8 @@ class RingSpec:
             lo = jax.random.randint(key, shape, 0, 1 << 32, dtype=jnp.uint32)
             k2 = jax.random.fold_in(key, 1)
             hi = jax.random.randint(k2, shape, 0, 1 << 32, dtype=jnp.uint32)
-            return (hi.astype(jnp.uint64) << 32 | lo.astype(jnp.uint64)).astype(self.dtype)
+            full = hi.astype(jnp.uint64) << 32 | lo.astype(jnp.uint64)
+            return full.astype(self.dtype)
         bits = jax.random.bits(key, shape, dtype=jnp.uint32)
         return bits.astype(self.dtype)
 

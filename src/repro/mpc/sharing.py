@@ -12,7 +12,6 @@ arithmetic is identical.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -45,8 +44,8 @@ class AShare:
         return self.sh.ndim - 1
 
     def __getitem__(self, idx) -> "AShare":
-        return AShare(self.sh[(slice(None),) + (idx if isinstance(idx, tuple) else (idx,))],
-                      self.ring)
+        idx = idx if isinstance(idx, tuple) else (idx,)
+        return AShare(self.sh[(slice(None),) + idx], self.ring)
 
     def reshape(self, *shape) -> "AShare":
         return AShare(self.sh.reshape((2,) + tuple(shape)), self.ring)

@@ -68,7 +68,7 @@ class ShardRules:
         return None
 
     def spec(self, *logical) -> P:
-        return P(*(self.resolve(l) for l in logical))
+        return P(*(self.resolve(ax) for ax in logical))
 
     def sharding(self, *logical) -> NamedSharding:
         return NamedSharding(self.mesh, self.spec(*logical))

@@ -26,7 +26,7 @@ from repro.core.executor import ExecConfig, WaveExecutor
 from repro.core.proxy import ProxySpec
 from repro.mpc import comm, costs, quickselect
 from repro.mpc.comm import WAN, Ledger, ledger_scope
-from repro.mpc.ring import x64_scope
+from repro.mpc.ring import RING32, x64_scope
 
 CFG = dataclasses.replace(TINY_TARGET, vocab_size=64, n_layers=1,
                           d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
@@ -128,6 +128,57 @@ class TestLedgerAgreement:
         mk = {n: rep.makespan(WAN) for n, (_, rep) in executed.items()}
         assert mk["serial"] >= mk["+coalesce"] >= mk["ours"]
         assert mk["serial"] >= mk["+overlap"] >= mk["ours"]
+
+
+# ---------------------------------------------------------------------------
+# 1b. RING32 through the same engine code path (ROADMAP follow-up)
+# ---------------------------------------------------------------------------
+
+
+class TestRing32:
+    @pytest.fixture(scope="class")
+    def ring32_report(self, pp, pool):
+        ex = WaveExecutor(ExecConfig(wave=WAVE, batch=BATCH, ring=RING32))
+        ent = ex.score_phase(jax.random.fold_in(K, 9), pp, CFG, pool, SPEC)
+        return ent, ex.reports[-1]
+
+    def test_ring32_phase_ledger_agrees(self, ring32_report):
+        """The dealer-trunc op stream satisfies the same executable
+        accounting contract as RING64 — one engine, two rings."""
+        ent, rep = ring32_report
+        assert rep.agrees()
+        assert ent.ring is RING32
+        assert np.isfinite(np.asarray(ent.sh)).all()
+
+    def test_ring32_probe_matches_analytic_mirror(self, ring32_report):
+        """costs.proxy_exec_cost(ring=RING32) mirrors the executed
+        stream record-for-record, dealer trunc_open rounds included."""
+        _, rep = ring32_report
+        ana = costs.proxy_exec_cost(BATCH, SEQ, CFG.d_model, SPEC.n_heads,
+                                    CFG.n_kv_heads, CFG.d_head,
+                                    SPEC.mlp_dim, CLASSES, SPEC.n_layers,
+                                    ring=RING32)
+        pb = rep.per_batch
+        assert len(pb.records) == len(ana.records)
+        for got, want in zip(pb.records, ana.records):
+            assert (got.rounds, got.nbytes, got.numel, got.flops, got.tag) \
+                == (want.rounds, want.nbytes, want.numel, want.flops,
+                    want.tag), (got, want)
+
+    def test_ring32_pays_trunc_rounds_but_fewer_bytes(self, ring32_report,
+                                                      executed):
+        """Dealer truncation buys exactness with extra bw rounds; the
+        4-byte ring halves every Beaver opening's wire bytes."""
+        _, rep32 = ring32_report
+        pb64 = executed["ours"][1].per_batch
+        pb32 = rep32.per_batch
+        assert pb32.bw_rounds > pb64.bw_rounds
+        assert pb32.lat_rounds == pb64.lat_rounds
+        beaver64 = sum(r.nbytes for r in pb64.records
+                       if r.op.startswith("beaver"))
+        beaver32 = sum(r.nbytes for r in pb32.records
+                       if r.op.startswith("beaver"))
+        assert beaver32 * 2 == beaver64
 
 
 # ---------------------------------------------------------------------------

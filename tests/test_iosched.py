@@ -1,5 +1,4 @@
 """IO scheduler invariants + cost-model structure (paper §4.4, Fig 2/6/7)."""
-import math
 
 import pytest
 from hypothesis import given, settings, strategies as st

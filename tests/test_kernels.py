@@ -134,11 +134,14 @@ def test_secure_matmul_implements_beaver():
     b = rng.integers(-2 ** 30, 2 ** 30, (kdim, n)).astype(np.int32)
     c = (a.astype(np.int64) @ b.astype(np.int64)).astype(np.int32)  # wraps
     # share everything
-    a_sh = np.stack([rng.integers(-2 ** 31, 2 ** 31, a.shape), np.zeros_like(a)]).astype(np.int32)
+    a_sh = np.stack([rng.integers(-2 ** 31, 2 ** 31, a.shape),
+                     np.zeros_like(a)]).astype(np.int32)
     a_sh[1] = a - a_sh[0]
-    b_sh = np.stack([rng.integers(-2 ** 31, 2 ** 31, b.shape), np.zeros_like(b)]).astype(np.int32)
+    b_sh = np.stack([rng.integers(-2 ** 31, 2 ** 31, b.shape),
+                     np.zeros_like(b)]).astype(np.int32)
     b_sh[1] = b - b_sh[0]
-    c_sh = np.stack([rng.integers(-2 ** 31, 2 ** 31, c.shape), np.zeros_like(c)]).astype(np.int32)
+    c_sh = np.stack([rng.integers(-2 ** 31, 2 ** 31, c.shape),
+                     np.zeros_like(c)]).astype(np.int32)
     c_sh[1] = c - c_sh[0]
     eps = (x - a).astype(np.int32)
     dlt = (y - b).astype(np.int32)

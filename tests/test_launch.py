@@ -3,9 +3,7 @@ dry-run artifact sanity (reads the JSONs the sweep produced)."""
 import glob
 import json
 import os
-import shutil
 
-import jax
 import numpy as np
 import pytest
 

@@ -128,7 +128,8 @@ def test_param_count_sanity():
                  "paligemma_3b"]:
         cfg = load_arch(arch)
         shapes = jax.eval_shape(lambda k: T.init_params(k, cfg), K)
-        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+        actual = sum(int(np.prod(leaf.shape))
+                     for leaf in jax.tree.leaves(shapes))
         est = cfg.param_count()
         assert abs(actual - est) / actual < 0.15, (arch, actual, est)
 

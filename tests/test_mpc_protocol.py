@@ -6,8 +6,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.mpc import RING64, ops, nonlinear, compare, quickselect
-from repro.mpc.sharing import share, reveal, open_, from_public
-from repro.mpc.comm import ledger_scope, WAN
+from repro.mpc.sharing import share, reveal
+from repro.mpc.comm import ledger_scope
 from repro.mpc.ring import RING32, x64_scope
 from repro.mpc import beaver
 

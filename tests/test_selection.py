@@ -155,6 +155,69 @@ class TestSelection:
         assert np.array_equal(np.sort(resumed[1]),
                               np.sort(res.phase_survivors[resumed[0]]))
 
+    def test_resume_skips_completed_phases(self, task, tmp_path,
+                                           monkeypatch):
+        """A re-run with the same key/config resumes from the phase
+        checkpoints: no re-scoring, identical selection, restored
+        appraisal. A different run sharing the dir must NOT resume
+        (fingerprint guard)."""
+        from repro.core import selection as sel_mod
+        params = tgt.init_classifier(K, CFG, task.n_classes)
+        calls = []
+        orig_score = sel_mod._score_clear
+
+        def counting_score(*a, **kw):
+            calls.append(1)
+            return orig_score(*a, **kw)
+
+        monkeypatch.setattr(sel_mod, "_score_clear", counting_score)
+
+        def make_sel():
+            return SelectionConfig(phases=[ProxySpec(1, 2, 2, 0.5),
+                                           ProxySpec(1, 2, 2, 1.0)],
+                                   budget_frac=0.2, boot_frac=0.05,
+                                   exvivo_steps=60, invivo_steps=20,
+                                   finetune_steps=30,
+                                   checkpoint_dir=str(tmp_path / "ck"))
+
+        def go(k):
+            return run_selection(k, params, CFG, task.pool_tokens,
+                                 make_sel(), n_classes=task.n_classes,
+                                 boot_labels_fn=lambda i:
+                                     task.pool_labels[i])
+
+        res1 = go(K)
+        assert len(calls) == 2                      # both phases scored
+        calls.clear()
+        res2 = go(K)
+        assert len(calls) == 0                      # fully resumed
+        assert np.array_equal(res1.selected, res2.selected)
+        assert res2.appraisal_entropy == pytest.approx(
+            res1.appraisal_entropy)
+        assert len(res2.phase_survivors) == len(res1.phase_survivors)
+        # different execution config (variant ablation) sharing the dir
+        # must not adopt the full run's survivors
+        calls.clear()
+        sel_v = make_sel()
+        sel_v.variant = frozenset({"ln", "se"})
+        run_selection(K, params, CFG, task.pool_tokens, sel_v,
+                      n_classes=task.n_classes,
+                      boot_labels_fn=lambda i: task.pool_labels[i])
+        assert len(calls) == 2
+        # different key -> different bootstrap draw -> fingerprints
+        # mismatch -> checkpoints ignored, both phases re-scored
+        calls.clear()
+        go(jax.random.fold_in(K, 123))
+        assert len(calls) == 2
+        # resume=False opts out even for the matching run
+        calls.clear()
+        sel = make_sel()
+        sel.resume = False
+        run_selection(K, params, CFG, task.pool_tokens, sel,
+                      n_classes=task.n_classes,
+                      boot_labels_fn=lambda i: task.pool_labels[i])
+        assert len(calls) == 2
+
     def test_survivors_monotone(self, task):
         params = tgt.init_classifier(K, CFG, task.n_classes)
         sel = SelectionConfig(phases=[ProxySpec(1, 2, 2, 0.5),

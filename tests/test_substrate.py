@@ -1,6 +1,5 @@
 """Substrate tests: checkpoint, fault tolerance, optimizer, data, sharding."""
 import os
-import shutil
 import time
 
 import jax
