@@ -1,0 +1,184 @@
+#!/usr/bin/env python
+"""Round compression benchmark — eager vs fused flight accounting.
+
+Prices the per-batch proxy op stream on both rings with and without the
+flight batcher (mpc/fusion.py) via TraceEngine probes of the one
+engine-generic forward, and models the WAN delay of a selection phase
+over it (serial and §4.4-scheduled makespan). Emits `BENCH_fusion.json`
+— the perf trajectory baseline for the fused MPC path.
+
+`--smoke` additionally EXECUTES a tiny fused phase through the wave
+executor and enforces the acceptance gates (CI tier-1 runs this):
+  * fused RING32 rounds < eager rounds (>= 40% fewer) at identical bytes
+  * fused vs eager output shares bitwise identical
+  * the fused phase ledger satisfies iosched.ledger_agrees
+  * the analytic mirror matches the fused probe record-for-record
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.configs.base import ArchConfig  # noqa: E402
+from repro.core import iosched  # noqa: E402
+from repro.core.proxy import ProxySpec  # noqa: E402
+from repro.engine import TraceEngine, abstract_shares  # noqa: E402
+from repro.mpc import costs  # noqa: E402
+from repro.mpc.comm import WAN  # noqa: E402
+from repro.mpc.ring import RING32, RING64  # noqa: E402
+
+RINGS = {"ring64": RING64, "ring32": RING32}
+
+
+def probe_grid(cfg: ArchConfig, spec: ProxySpec, *, batch: int, seq: int,
+               classes: int, n_batches: int) -> dict:
+    """{ring}_{eager|fused} -> per-batch ledger totals + modeled delay."""
+    out = {}
+    sched = iosched.SchedConfig()
+    for rname, ring in RINGS.items():
+        pp_sh = abstract_shares(cfg, spec, seq, classes, ring)
+        for mode, fused in (("eager", False), ("fused", True)):
+            t0 = time.time()
+            led = TraceEngine(ring).probe(pp_sh, cfg, spec,
+                                          (batch, seq, cfg.d_model),
+                                          fused=fused)
+            out[f"{rname}_{mode}"] = {
+                "rounds": led.rounds,
+                "lat_rounds": led.lat_rounds,
+                "bw_rounds": led.bw_rounds,
+                "nbytes": led.nbytes,
+                "flights": len(led.records),
+                "wan_serial_s": led.serial_time(WAN),
+                "wan_makespan_s": iosched.makespan(led, n_batches, WAN,
+                                                   sched),
+                "probe_ms": (time.time() - t0) * 1e3,
+            }
+    for rname in RINGS:
+        e, f = out[f"{rname}_eager"], out[f"{rname}_fused"]
+        out[f"{rname}_round_reduction"] = 1.0 - f["rounds"] / e["rounds"]
+    return out
+
+
+def smoke_execute() -> dict:
+    """Run a tiny fused RING32 phase for real and enforce the gates."""
+    from benchmarks.common import tiny_exec_setup
+    from repro.core.executor import ExecConfig, WaveExecutor
+
+    seq, classes, pool_n, batch, wave = 8, 2, 24, 8, 2
+    cfg, spec, pp = tiny_exec_setup(0, seq=seq, n_classes=classes)
+    pool = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                             (pool_n, seq))
+    key = jax.random.key(7)
+    out = {}
+    for rname, ring in RINGS.items():
+        scores, reports = {}, {}
+        for mode, fused in (("eager", False), ("fused", True)):
+            ex = WaveExecutor(ExecConfig(wave=wave, batch=batch, ring=ring,
+                                         fuse=fused))
+            ent = ex.score_phase(key, pp, cfg, pool, spec)
+            scores[mode], reports[mode] = np.asarray(ent.sh), ex.reports[-1]
+        assert np.array_equal(scores["eager"], scores["fused"]), \
+            f"{rname}: fusion changed output shares"
+        for mode, rep in reports.items():
+            assert rep.agrees(), f"{rname}/{mode}: ledger_agrees failed"
+        ana = costs.proxy_exec_cost(batch, seq, cfg.d_model, spec.n_heads,
+                                    cfg.n_kv_heads, cfg.d_head, spec.mlp_dim,
+                                    classes, spec.n_layers, ring=ring,
+                                    fused=True)
+        pb = reports["fused"].per_batch
+        assert len(pb.records) == len(ana.records) and all(
+            (g.rounds, g.nbytes, g.numel, g.flops, g.tag)
+            == (w.rounds, w.nbytes, w.numel, w.flops, w.tag)
+            for g, w in zip(pb.records, ana.records)), \
+            f"{rname}: proxy_exec_cost(fused=True) mirror diverged"
+        e = reports["eager"].per_batch
+        red = 1.0 - pb.rounds / e.rounds
+        assert pb.nbytes == e.nbytes, f"{rname}: fusion changed bytes"
+        assert pb.rounds < e.rounds, f"{rname}: no round reduction"
+        if ring is RING32:
+            assert red >= 0.40, \
+                f"ring32 round reduction {red:.2%} below the 40% gate"
+        out[rname] = {"eager_rounds": e.rounds, "fused_rounds": pb.rounds,
+                      "round_reduction": red, "bitwise_identical": True,
+                      "ledger_agrees": True, "mirror_exact": True}
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny geometry + executed acceptance gates (CI)")
+    ap.add_argument("--csv", action="store_true",
+                    help="emit benchmarks.run CSV rows instead of summary")
+    ap.add_argument("--out", default="BENCH_fusion.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        cfg = ArchConfig(name="fusion-smoke", family="dense", n_layers=1,
+                         d_model=32, n_heads=2, n_kv_heads=2, d_head=16,
+                         d_ff=64, vocab_size=64)
+        spec, batch, seq, classes, n_batches = ProxySpec(1, 2, 4), 8, 8, 2, 3
+    else:
+        # paper scale: BERT-base phase-2 proxy <3, 12, 16> over 42K docs
+        cfg = ArchConfig(name="bert-base", family="dense", n_layers=3,
+                         d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+                         d_ff=3072, vocab_size=30522)
+        spec, batch, seq, classes = ProxySpec(3, 12, 16), 4, 512, 2
+        n_batches = -(-42_000 // batch)
+
+    result = {
+        "geometry": {"arch": cfg.name, "proxy": dataclasses.asdict(spec),
+                     "batch": batch, "seq": seq, "classes": classes,
+                     "n_batches": n_batches},
+        "probe": probe_grid(cfg, spec, batch=batch, seq=seq,
+                            classes=classes, n_batches=n_batches),
+    }
+    if args.smoke:
+        result["smoke"] = smoke_execute()
+
+    r32 = result["probe"]["ring32_round_reduction"]
+    if r32 < 0.40:
+        print(f"FAIL: fused RING32 probe reduces rounds by only {r32:.2%}",
+              file=sys.stderr)
+        return 1
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    for k, v in result["probe"].items():
+        if args.csv:
+            from benchmarks.common import emit
+            if isinstance(v, dict):
+                emit(f"fusion.{k}", v["probe_ms"] * 1e3,
+                     {"rounds": v["rounds"], "nbytes": v["nbytes"],
+                      "wan_makespan_s": round(v["wan_makespan_s"], 3)})
+            else:
+                emit(f"fusion.{k}", 0.0, {"reduction": round(v, 4)})
+        elif isinstance(v, dict):
+            print(f"{k}: rounds={v['rounds']} bytes={v['nbytes']} "
+                  f"wan_makespan={v['wan_makespan_s']:.1f}s")
+        else:
+            print(f"{k}: {v:.2%}")
+    if not args.csv:
+        print(f"wrote {args.out}")
+    return 0
+
+
+def run() -> None:
+    """benchmarks.run harness entry: smoke geometry, CSV rows, and the
+    executed acceptance gates (raises on regression)."""
+    if main(["--smoke", "--csv"]) != 0:
+        raise RuntimeError("fused RING32 round reduction below the gate")
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,7 +10,7 @@ import sys
 import traceback
 
 SUITES = ["fig2", "fig5", "fig6", "fig7", "table1", "table2", "table3",
-          "table4", "roofline"]
+          "table4", "roofline", "fusion"]
 
 
 def main() -> None:
@@ -29,6 +29,7 @@ def main() -> None:
             "table3": "benchmarks.table3_baselines",
             "table4": "benchmarks.table4_multiphase",
             "roofline": "benchmarks.roofline",
+            "fusion": "benchmarks.bench_fusion",
         }[name]
         try:
             mod = __import__(mod_name, fromlist=["run"])

@@ -46,7 +46,7 @@ from repro.core import proxy as proxy_mod
 from repro.core.proxy import ProxySpec
 from repro.engine import MPCEngine, TraceEngine, proxy_entropy
 from repro.engine.base import FULL_VARIANT
-from repro.mpc import comm
+from repro.mpc import comm, fusion
 from repro.mpc.comm import Ledger, NetProfile
 from repro.mpc.ring import RING64, RingSpec, x64_scope
 from repro.mpc.sharing import AShare, share
@@ -63,6 +63,11 @@ class ExecConfig:
     batch: int = 64               # candidates per batch
     flops_per_s: float = 10e12
     ring: RingSpec = RING64
+    # round compression (mpc/fusion.py): run each batch's forward under
+    # a flight_scope so independent openings share flights. The
+    # per-batch probe is fused identically, so ledger_agrees still holds
+    # and the schedule prices the compressed stream.
+    fuse: bool = False
 
     def sched(self) -> iosched.SchedConfig:
         return iosched.SchedConfig(coalesce=self.coalesce,
@@ -131,13 +136,16 @@ class WaveExecutor:
         pp_sh = proxy_mod.share_proxy(jax.random.fold_in(key, 1), pp, ring)
         batch_keys = jax.random.split(jax.random.fold_in(key, 2), n_batches)
         # per-batch op-stream reference: the zero-FLOP eval_shape probe
+        # (fused exactly like the executed forwards below)
         per_batch = TraceEngine(ring, variant).probe(
-            pp_sh, arch_cfg, spec, (B, seq, arch_cfg.d_model), batch_keys[0])
+            pp_sh, arch_cfg, spec, (B, seq, arch_cfg.d_model), batch_keys[0],
+            fused=cfg.fuse)
 
         def fwd(sh, k):
             eng = MPCEngine(ring=ring).with_key(k)
-            return proxy_entropy(eng, pp_sh, arch_cfg, AShare(sh, ring),
-                                 spec, variant).sh
+            with fusion.flight_scope(enabled=cfg.fuse):
+                return proxy_entropy(eng, pp_sh, arch_cfg, AShare(sh, ring),
+                                     spec, variant).sh
 
         outer = comm.get_ledger()
         phase_led = Ledger()
@@ -191,18 +199,22 @@ class WaveExecutor:
 
 def run_variants(key, pp, arch_cfg: ArchConfig, tokens, spec: ProxySpec,
                  *, batch: int, wave: int,
-                 flops_per_s: float = 10e12) -> dict[str, "PhaseReport"]:
+                 flops_per_s: float = 10e12,
+                 fuse: bool = False) -> dict[str, "PhaseReport"]:
     """Fig-7's four (coalesce, overlap) points, executed on one pool.
 
     Returns name -> PhaseReport; every variant is checked for exact
     ledger agreement with the makespan inputs, and all variants produce
-    bitwise-identical scores (the schedule moves flights, not values).
+    bitwise-identical scores (the schedule moves flights, not values —
+    and with `fuse=True` the flight batcher compresses rounds without
+    changing a share either).
     """
     reports = {}
     ref = None
     for name, (co, ov) in iosched.FIG7_VARIANTS.items():
         ex = WaveExecutor(ExecConfig(wave=wave, coalesce=co, overlap=ov,
-                                     batch=batch, flops_per_s=flops_per_s))
+                                     batch=batch, flops_per_s=flops_per_s,
+                                     fuse=fuse))
         ent = ex.score_phase(key, pp, arch_cfg, tokens, spec)
         rep = ex.reports[-1]
         if not rep.agrees():

@@ -2,10 +2,16 @@
 
 "The model owner schedules the selection by setting {<l_i, w_i, d_i>}
 for N phases... SelectFormer determines the schedule via offline grid
-search." This module implements that search against the calibrated cost
-model: enumerate 1/2/3-phase schedules from the paper's grid
-(d in {2,4,8,16}, l in {1,3}), price each with the IO-scheduled makespan,
-and return the Pareto set over (modeled delay, proxy capacity score).
+search." This module implements that search against the EXECUTED cost
+stream: each candidate phase is priced by a TraceEngine probe of the
+one engine-generic forward (`engine/forward.py`) — the identical op
+stream the wave executor realizes, round-compressed by the flight
+batcher when `fused` (defaulting to the executor's own `fuse` default,
+so pricing tracks what deployments actually run) — then scheduled by
+the IO makespan model. Searched schedules therefore
+price what will actually fly, not a paper-geometry approximation
+(`costs.proxy_model_cost`, which fuses QKV and ignores ring truncation,
+remains for the analytic figures).
 
 Capacity score is a cheap monotone proxy for expected selection quality:
 sum over phases of log(l*w*d) weighted by the fraction of the pool the
@@ -15,12 +21,14 @@ in LATER phases (which decide the final set) matters most.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 
+from repro.configs.base import ArchConfig
 from repro.core import iosched
 from repro.core.proxy import ProxySpec
-from repro.mpc import costs
-from repro.mpc.comm import NetProfile, WAN
+from repro.mpc.comm import Ledger, NetProfile, WAN
+from repro.mpc.ring import RING64, RingSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,17 +38,44 @@ class ScoredSchedule:
     capacity: float
 
 
+@functools.lru_cache(maxsize=512)
+def _phase_probe(n_layers: int, n_heads: int, mlp_dim: int, *,
+                 d_model: int, heads: int, classes: int, seq: int,
+                 batch: int, ring: RingSpec, fused: bool) -> Ledger:
+    """Per-batch ledger of one phase proxy, probed from the executed
+    forward (weight-free: abstract_shares + eval_shape)."""
+    from repro.engine import TraceEngine, abstract_shares
+
+    dh = d_model // heads
+    cfg = ArchConfig(name="sched-probe", family="dense",
+                     n_layers=max(n_layers, 1), d_model=d_model,
+                     n_heads=heads, n_kv_heads=heads, d_head=dh,
+                     d_ff=0, vocab_size=2)
+    spec = ProxySpec(n_layers, min(n_heads, heads), mlp_dim)
+    pp_sh = abstract_shares(cfg, spec, seq, classes, ring)
+    return TraceEngine(ring).probe(pp_sh, cfg, spec, (batch, seq, d_model),
+                                   fused=fused)
+
+
 def schedule_delay(phases, n_pool: int, budget: int, *, d_model: int = 768,
                    heads: int = 12, classes: int = 2, seq: int = 512,
                    batch: int = 4, net: NetProfile = WAN,
-                   sched: iosched.SchedConfig | None = None) -> float:
+                   sched: iosched.SchedConfig | None = None,
+                   ring: RingSpec = RING64,
+                   fused: bool | None = None) -> float:
+    """`fused=None` prices whatever the executor would run by default
+    (ExecConfig.fuse) — the search must rank schedules by the stream the
+    deployment realizes, and follows that default if it flips."""
+    if fused is None:
+        from repro.core.executor import ExecConfig
+        fused = ExecConfig().fuse
     sched = sched or iosched.SchedConfig()
     remaining = n_pool
     total = 0.0
-    dh = d_model // heads
     for i, ph in enumerate(phases):
-        g = costs.BlockGeom(batch, seq, d_model, min(ph.n_heads, heads), dh, 0)
-        led = costs.proxy_model_cost(g, ph.n_layers, classes, ph.mlp_dim)
+        led = _phase_probe(ph.n_layers, ph.n_heads, ph.mlp_dim,
+                           d_model=d_model, heads=heads, classes=classes,
+                           seq=seq, batch=batch, ring=ring, fused=fused)
         total += iosched.makespan(led, -(-remaining // batch), net, sched)
         remaining = budget if i == len(phases) - 1 else \
             max(budget, int(remaining * ph.selectivity))

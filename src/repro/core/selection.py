@@ -188,8 +188,12 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
                                        variant=sel.variant)
             exec_reports.extend(execu.reports)
             with x64_scope():      # quickselect compares int64 shares
+                # fused runs issue per-wave comparison batches and let
+                # the flight batcher fuse them into one flight/partition
+                qs_wave = sel.executor.wave if sel.executor.fuse else 1
                 top_local = quickselect.top_k_indices(ent_sh, keep,
-                                                      seed=1234 + pi)
+                                                      seed=1234 + pi,
+                                                      wave=qs_wave)
                 appraisal = float(jnp.mean(
                     (ent_sh[np.asarray(top_local)].sh[0]
                      + ent_sh[np.asarray(top_local)].sh[1]).astype(jnp.float64)
@@ -227,7 +231,7 @@ def _run_fingerprint(sel: SelectionConfig, n_pool: int, budget: int,
                       for p in sel.phases),
                 (sel.exvivo_steps, sel.invivo_steps, sel.finetune_steps,
                  sel.boot_frac),
-                (ex.wave, ex.coalesce, ex.overlap, ex.batch,
+                (ex.wave, ex.coalesce, ex.overlap, ex.fuse, ex.batch,
                  sel.score_batch) if sel.mode == "mpc" else None)
     h = hashlib.sha1(np.asarray(boot_idx, dtype=np.int64).tobytes())
     h.update(np.asarray([n_pool, budget], dtype=np.int64).tobytes())

@@ -68,6 +68,14 @@ class TensorEngine(Protocol):
     def matmul(self, x: Tensor, y: Tensor) -> Tensor: ...
     def mean(self, x: Tensor, axis: int) -> Tensor: ...
 
+    # -- round compression ----------------------------------------------
+    def fused(self, label: str):
+        """Context manager marking a group of independent ops whose
+        openings may ride one wire flight (mpc/fusion.py). Substrates
+        without a wire (clear/trace) treat it as a no-op, preserving the
+        single-forward invariant."""
+        ...
+
     # -- shape ops (local, free on every substrate) ----------------------
     def shape(self, x: Tensor) -> tuple: ...
     def reshape(self, x: Tensor, shape) -> Tensor: ...

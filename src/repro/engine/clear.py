@@ -6,6 +6,7 @@ the Table-2 ablations (exact softmax / rsqrt / entropy when the MLP
 emulator is ablated) and the Table-3 baseline softmaxes (MPCFormer
 2Quad, Bolt-style polynomial exp).
 """
+import contextlib
 import dataclasses
 from typing import ClassVar
 
@@ -44,6 +45,10 @@ class ClearEngine:
             return x_in                  # pre-embedded activations
         x = jnp.take(pp["embed"], x_in, axis=0).astype(jnp.float32)
         return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    # -- round compression (no wire: nothing to fuse) --------------------
+    def fused(self, label):
+        return contextlib.nullcontext()
 
     # -- linear algebra --------------------------------------------------
     def add(self, x, y):

@@ -10,7 +10,11 @@ The op order below is load-bearing for the accounting contract: the
 MPC op stream it induces is mirrored record-for-record by
 `mpc/costs.proxy_exec_cost`, and the wave executor's realized flight
 ledger must reproduce that stream exactly (`iosched.ledger_agrees`).
-Reorder ops here and the mirror test tells you immediately.
+Reorder ops here and the mirror test tells you immediately.  The
+`eng.fused(label)` groups are part of that contract too: under a
+`fusion.flight_scope` they bound the fused flights, and the analytic
+mirror places its GroupBegin/GroupEnd markers at the same spots —
+move a group here and `proxy_exec_cost(fused=True)` must move with it.
 """
 import jax
 
@@ -31,22 +35,30 @@ def _proxy_layer(eng, x, pp, li, cfg, spec, variant):
     wk = min(w, cfg.n_kv_heads)
     g = w // wk
     b, s, d = eng.shape(x)
-    # MLP-LayerNorm: numerator exact, reciprocal-sqrt emulated ("ln")
-    mu = eng.mean(x, axis=-1)
-    xc = eng.sub(x, eng.broadcast(eng.reshape(mu, (b, s, 1)), (b, s, d)))
-    var = eng.mean(eng.mul(xc, xc), axis=-1)
+    # MLP-LayerNorm: numerator exact, reciprocal-sqrt emulated ("ln").
+    # The stat openings (mean trunc, variance Beaver open + truncs) form
+    # one fused flight under a flight_scope — `eng.fused` is a no-op on
+    # wireless substrates, so clear/MPC parity is untouched.
+    with eng.fused("ln_stats"):
+        mu = eng.mean(x, axis=-1)
+        xc = eng.sub(x, eng.broadcast(eng.reshape(mu, (b, s, 1)), (b, s, d)))
+        var = eng.mean(eng.mul(xc, xc), axis=-1)
     inv = eng.ln_inv(pp, li, eng.reshape(var, (b * s, 1)), variant)
     h = eng.mul(xc, eng.broadcast(eng.reshape(inv, (b, s, 1)), (b, s, d)))
     gamma = eng.reshape(eng.index(pp["ln_scale"], li), (1, 1, d))
     h = eng.mul(h, eng.broadcast(gamma, (b, s, d)))
     beta = eng.reshape(eng.index(pp["ln_bias"], li), (1, 1, d))
     h = eng.add(h, eng.broadcast(beta, (b, s, d)))
-    # pruned attention: per-projection matmuls, GQA head grouping
+    # pruned attention: per-projection matmuls, GQA head grouping. The
+    # three projections consume the same input and nothing of each other
+    # — the canonical independent group, one (eps, delta) flight for all
+    # three plus their deferred truncations.
     ap = pp["attn"]
     h2 = eng.reshape(h, (b * s, d))
-    q = eng.matmul(h2, eng.index(ap["wq"], li))
-    k = eng.matmul(h2, eng.index(ap["wk"], li))
-    v = eng.matmul(h2, eng.index(ap["wv"], li))
+    with eng.fused("qkv"):
+        q = eng.matmul(h2, eng.index(ap["wq"], li))
+        k = eng.matmul(h2, eng.index(ap["wk"], li))
+        v = eng.matmul(h2, eng.index(ap["wv"], li))
     if "bq" in ap:
         q = eng.add(q, eng.broadcast(eng.index(ap["bq"], li), (b * s, w * dh)))
         k = eng.add(k, eng.broadcast(eng.index(ap["bk"], li),

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine.forward import _mlp_at
-from repro.mpc import compare, nonlinear, ops as mops
+from repro.mpc import compare, fusion, nonlinear, ops as mops
 from repro.mpc.ring import RING64, RingSpec
 from repro.mpc.sharing import AShare
 
@@ -55,15 +55,27 @@ def mlp_apply_mpc(p_sh: dict, x: AShare, key) -> AShare:
 class MPCEngine:
     kind = "mpc"
 
-    def __init__(self, ring: RingSpec = RING64, variant=None, key=None):
+    def __init__(self, ring: RingSpec = RING64, variant=None, key=None,
+                 combine_impl: str = "auto"):
         self.ring = ring
         self.variant = variant
         self._key = key
         self._ctr = 0
+        # Beaver post-open combine for 2-D RING32 matmuls: the fused
+        # Pallas secure_matmul kernel ("auto" = compiled on TPU, jnp
+        # reference elsewhere; "interpret" exercises the kernel body on
+        # CPU). Bitwise-identical wrapping int32 arithmetic either way.
+        self.combine_impl = combine_impl
 
     def with_key(self, key) -> "MPCEngine":
         """Fresh engine seeded for one forward (keys derive from here)."""
-        return MPCEngine(self.ring, self.variant, key=key)
+        return MPCEngine(self.ring, self.variant, key=key,
+                         combine_impl=self.combine_impl)
+
+    def fused(self, label: str):
+        """Mark a group of independent ops: their openings ride one
+        flight under an ambient `fusion.flight_scope` (no-op eagerly)."""
+        return fusion.fused_group(label)
 
     def _k(self):
         if self._key is None:
@@ -99,7 +111,9 @@ class MPCEngine:
         return mops.add_public(x, v)
 
     def matmul(self, x, y):
-        return mops.matmul(x, y, self._k())
+        return mops.matmul(x, y, self._k(),
+                           combine_impl=self.combine_impl
+                           if self.ring.bits == 32 else None)
 
     def mean(self, x, axis):
         return mops.mean(x, axis=axis, key=self._k())
@@ -181,12 +195,18 @@ class MPCEngine:
         lo = mops.add_public(compare.relu(mops.add_public(t, 8.0), self._k()),
                              -8.0)
         t = mops.sub(lo, compare.relu(lo, self._k()))
-        # Horner: e = 1 + t(1 + t(1/2 + t(1/6 + t/24)))
-        acc = mops.add_public(mops.mul_public(t, 1.0 / 24.0, key=self._k()),
-                              1.0 / 6.0)
-        acc = mops.add_public(mops.mul(t, acc, self._k()), 0.5)
-        acc = mops.add_public(mops.mul(t, acc, self._k()), 1.0)
-        e = mops.add_public(mops.mul(t, acc, self._k()), 1.0)
+        # Horner: e = 1 + t(1 + t(1/2 + t(1/6 + t/24))) — one fused
+        # flight: every message is a mask component, the public parts of
+        # the chained openings reconstruct locally (fusion.py legality).
+        # Each step consumes the previous truncated acc, so truncation
+        # stays inline (the batcher defers only its *flight*); holding
+        # PendingShares across ops is the cross-op folding follow-up.
+        with fusion.fused_group("horner"):
+            acc = mops.add_public(mops.mul_public(t, 1.0 / 24.0,
+                                                  key=self._k()), 1.0 / 6.0)
+            acc = mops.add_public(mops.mul(t, acc, self._k()), 0.5)
+            acc = mops.add_public(mops.mul(t, acc, self._k()), 1.0)
+            e = mops.add_public(mops.mul(t, acc, self._k()), 1.0)
         e = compare.relu(e, self._k())
         s = mops.sum_(e, axis=-1, keepdims=True)
         r = nonlinear.reciprocal(s, self._k())

@@ -14,7 +14,7 @@ import jax
 
 from repro.engine.forward import proxy_entropy
 from repro.engine.mpc import MPCEngine
-from repro.mpc import comm
+from repro.mpc import comm, fusion
 from repro.mpc.comm import Ledger
 from repro.mpc.ring import RING64, RingSpec, x64_scope
 from repro.mpc.sharing import AShare
@@ -31,12 +31,19 @@ class TraceEngine:
         self.ring = ring
         self.variant = variant
 
+    def fused(self, label):
+        """No-op: the probe prices through MPCEngine, which batches for
+        itself; TraceEngine used directly has no wire to compress."""
+        return contextlib.nullcontext()
+
     def probe(self, pp_sh, cfg, spec, batch_shape, key=None,
-              variant=None) -> Ledger:
+              variant=None, fused: bool = False) -> Ledger:
         """Ledger of ONE batch (B, S, d) of the share-level forward.
 
         `pp_sh` may hold real share arrays or ShapeDtypeStructs — both
-        flow through eval_shape untouched.
+        flow through eval_shape untouched.  `fused=True` probes the
+        round-compressed stream (the op trace runs under
+        `fusion.flight_scope`, exactly as the executor runs it).
         """
         ring = self.ring
         variant = self.variant if variant is None else variant
@@ -44,8 +51,9 @@ class TraceEngine:
 
         def fwd(pp, sh, k):
             eng = MPCEngine(ring=ring, variant=variant).with_key(k)
-            return proxy_entropy(eng, pp, cfg, AShare(sh, ring), spec,
-                                 variant).sh
+            with fusion.flight_scope(enabled=fused):
+                return proxy_entropy(eng, pp, cfg, AShare(sh, ring), spec,
+                                     variant).sh
 
         ctx = x64_scope() if ring.bits >= 64 else contextlib.nullcontext()
         with ctx, comm.ledger_scope() as led:

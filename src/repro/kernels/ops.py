@@ -75,8 +75,27 @@ def rg_lru_scan(a, b, *, impl="auto", **kw):
     return _lru(a, b, interpret=(m == "interpret"), **kw)
 
 
+def _tileable(dim: int, blk: int) -> bool:
+    """The kernel shrinks each block to min(blk, dim) and requires the
+    result to divide dim exactly."""
+    return dim % min(blk, dim) == 0
+
+
 def secure_matmul(eps, dlt, a_sh, b_sh, c_sh, *, impl="auto", **kw):
+    """Beaver post-open combine, both parties fused (MPC hot path).
+
+    Non-tileable shapes fall back to the jnp reference — same wrapping
+    int32 ring arithmetic, so the result is bitwise-identical and
+    callers (MPCEngine.matmul on RING32) never need a shape guard.
+    """
     m = _mode(impl)
+    if m != "ref":
+        mm, kk = eps.shape
+        nn = dlt.shape[1]
+        blocks = (kw.get("bm", 128), kw.get("bn", 128), kw.get("bk", 128))
+        if not all(_tileable(d, blk)
+                   for d, blk in zip((mm, nn, kk), blocks)):
+            m = "ref"
     if m == "ref":
         return jnp.stack([
             _ref.secure_matmul_combine(eps, dlt, a_sh[0], b_sh[0], c_sh[0], 0),

@@ -15,9 +15,10 @@ executable share-level path, evaluated at the paper's geometry.
 with an MPCEngine interpreting the unified proxy forward; --ring 32
 switches the same code path onto the TPU-native RING32/dealer-trunc
 ring. --wave/--no-coalesce/--no-overlap select among Fig 7's four
-schedule variants at runtime, and the output includes each phase's
-realized flight ledger plus its exact agreement with the makespan
-model. Re-runs resume from phase checkpoints (--no-resume disables).
+schedule variants at runtime, --fuse round-compresses the opening
+flights (mpc/fusion.py), and the output includes each phase's realized
+flight ledger plus its exact agreement with the makespan model.
+Re-runs resume from phase checkpoints (--no-resume disables).
 """
 from __future__ import annotations
 
@@ -83,7 +84,7 @@ def paper_scale_delay(n_pool: int, budget_frac: float, *, seq: int = 128,
 def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         mode: str = "clear", finetune_steps: int = 250, *,
         wave: int = 8, coalesce: bool = True, overlap: bool = True,
-        score_batch: int = 64, ring_bits: int = 64,
+        fuse: bool = False, score_batch: int = 64, ring_bits: int = 64,
         resume: bool = True) -> dict:
     task = make_classification_task(seed, n_pool=n_pool, n_test=400,
                                     seq=16, vocab=256, n_classes=4)
@@ -101,7 +102,8 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         exvivo_steps=150, invivo_steps=80, finetune_steps=100,
         score_batch=score_batch,
         checkpoint_dir=ckpt_dir, resume=resume,
-        executor=ExecConfig(wave=wave, coalesce=coalesce, overlap=overlap))
+        executor=ExecConfig(wave=wave, coalesce=coalesce, overlap=overlap,
+                            fuse=fuse))
     t0 = time.time()
     res = run_selection(key, params0, cfg, task.pool_tokens, sel,
                         n_classes=task.n_classes,
@@ -164,6 +166,9 @@ def main() -> None:
                     help="disable latency-flight coalescing (fig7 'serial')")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable comm/compute double buffering")
+    ap.add_argument("--fuse", action="store_true",
+                    help="round-compress openings into fused flights "
+                         "(mpc/fusion.py flight batcher)")
     ap.add_argument("--ring", type=int, choices=[64, 32], default=64,
                     help="MPC ring: 64 (CrypTen oracle) or 32 "
                          "(TPU dealer-trunc)")
@@ -172,7 +177,8 @@ def main() -> None:
     args = ap.parse_args()
     out = run(args.seed, args.pool, args.budget, args.mode,
               wave=args.wave, coalesce=not args.no_coalesce,
-              overlap=not args.no_overlap, score_batch=args.score_batch,
+              overlap=not args.no_overlap, fuse=args.fuse,
+              score_batch=args.score_batch,
               ring_bits=args.ring, resume=not args.no_resume)
     if out["executed"] is not None:
         ex = out["executed"]

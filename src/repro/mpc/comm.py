@@ -117,6 +117,18 @@ def get_wave() -> int:
     return getattr(_state, "wave", 1)
 
 
+def get_batcher():
+    """Ambient flight batcher (mpc/fusion.py), or None when eager."""
+    return getattr(_state, "batcher", None)
+
+
+def set_batcher(batcher):
+    """Install a flight batcher; returns the previous one (restore it)."""
+    prev = get_batcher()
+    _state.batcher = batcher
+    return prev
+
+
 def record(op: str, rounds: int, nbytes: int, numel: int = 0,
            flops: int = 0, tag: str = "bw") -> None:
     """Record one wire interaction into the ambient Ledger.
@@ -133,6 +145,9 @@ def record(op: str, rounds: int, nbytes: int, numel: int = 0,
     led = get_ledger()
     if led is None:
         return
+    fb = get_batcher()
+    if fb is not None and fb.absorb(op, rounds, nbytes, numel, flops, tag):
+        return                        # deferred: rides a fused flight
     w = get_wave()
     if w > 1 and tag != "lat":
         rounds = rounds * w

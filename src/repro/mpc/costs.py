@@ -255,7 +255,8 @@ def proxy_model_cost(g: BlockGeom, layers: int, classes: int,
 def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
                     kv_heads: int, d_head: int, mlp_hidden: int,
                     classes: int, n_layers: int,
-                    op: str = "exec", *, ring: RingSpec = RING64) -> Ledger:
+                    op: str = "exec", *, ring: RingSpec = RING64,
+                    fused: bool = False) -> Ledger:
     """EXACT mirror of the engine forward's share-level op stream.
 
     Record-for-record prediction of what one batch of the executable
@@ -270,40 +271,57 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
     (including the mean/scale `mul_public` truncations that are free on
     RING64). Biases add no wire cost, so the formulas hold with or
     without them.
+
+    `fused=True` mirrors the round-compressed stream instead: the eager
+    event stream below — with GroupBegin/GroupEnd markers placed exactly
+    where `engine/forward.py` opens its `eng.fused` groups — is replayed
+    through `fusion.compress_events`, i.e. the very FlightBatcher the
+    executed path batches with, so flush semantics cannot drift between
+    model and execution.
     """
+    from repro.mpc import fusion
+
     w, wk = heads, min(kv_heads, heads)
     t = bsz * seq
-    layer = merge(
+    events: list = []
+
+    def ext(led: Ledger) -> None:
+        events.extend(led.records)
+
+    for _ in range(n_layers):
         # MLP-LayerNorm: mean (trunc only), numerator exact (var
         # multiply), rsqrt emulated, then normalize-and-affine
         # multiplies against shared gamma
-        trunc_cost(t, f"{op}.ln.mu.trunc", ring=ring),
-        mul_cost(t * d_model, f"{op}.ln.var", ring=ring),
-        trunc_cost(t, f"{op}.ln.var_mean.trunc", ring=ring),
-        mlp_cost(t, 1, mlp_hidden, 1, f"{op}.mlp_ln", ring=ring),
-        mul_cost(t * d_model, f"{op}.ln.normmul", ring=ring),
-        mul_cost(t * d_model, f"{op}.ln.affine", ring=ring),
+        events.append(fusion.GroupBegin("ln_stats"))
+        ext(trunc_cost(t, f"{op}.ln.mu.trunc", ring=ring))
+        ext(mul_cost(t * d_model, f"{op}.ln.var", ring=ring))
+        ext(trunc_cost(t, f"{op}.ln.var_mean.trunc", ring=ring))
+        events.append(fusion.GROUP_END)
+        ext(mlp_cost(t, 1, mlp_hidden, 1, f"{op}.mlp_ln", ring=ring))
+        ext(mul_cost(t * d_model, f"{op}.ln.normmul", ring=ring))
+        ext(mul_cost(t * d_model, f"{op}.ln.affine", ring=ring))
         # pruned attention: per-projection Beaver matmuls
-        matmul_cost(1, t, d_model, w * d_head, f"{op}.q", ring=ring),
-        matmul_cost(1, t, d_model, wk * d_head, f"{op}.k", ring=ring),
-        matmul_cost(1, t, d_model, wk * d_head, f"{op}.v", ring=ring),
-        matmul_cost(bsz * w, seq, d_head, seq, f"{op}.scores", ring=ring),
-        trunc_cost(bsz * w * seq * seq, f"{op}.scores.scale.trunc",
-                   ring=ring),
-        mlp_cost(bsz * w * seq, seq, mlp_hidden, seq, f"{op}.mlp_sm",
-                 ring=ring),
-        matmul_cost(bsz * w, seq, seq, d_head, f"{op}.av", ring=ring),
-        matmul_cost(1, t, w * d_head, d_model, f"{op}.out", ring=ring),
-    )
+        events.append(fusion.GroupBegin("qkv"))
+        ext(matmul_cost(1, t, d_model, w * d_head, f"{op}.q", ring=ring))
+        ext(matmul_cost(1, t, d_model, wk * d_head, f"{op}.k", ring=ring))
+        ext(matmul_cost(1, t, d_model, wk * d_head, f"{op}.v", ring=ring))
+        events.append(fusion.GROUP_END)
+        ext(matmul_cost(bsz * w, seq, d_head, seq, f"{op}.scores", ring=ring))
+        ext(trunc_cost(bsz * w * seq * seq, f"{op}.scores.scale.trunc",
+                       ring=ring))
+        ext(mlp_cost(bsz * w * seq, seq, mlp_hidden, seq, f"{op}.mlp_sm",
+                     ring=ring))
+        ext(matmul_cost(bsz * w, seq, seq, d_head, f"{op}.av", ring=ring))
+        ext(matmul_cost(1, t, w * d_head, d_model, f"{op}.out", ring=ring))
+    ext(trunc_cost(bsz * d_model, f"{op}.pool.trunc", ring=ring))
+    ext(matmul_cost(1, bsz, d_model, classes, f"{op}.head", ring=ring))
+    ext(mlp_cost(bsz, classes, mlp_hidden, 1, f"{op}.mlp_se", ring=ring))
+    if fused:
+        return fusion.compress_events(events)
     led = Ledger()
-    for _ in range(n_layers):
-        led.records.extend(layer.records)
-    led.records.extend(trunc_cost(bsz * d_model, f"{op}.pool.trunc",
-                                  ring=ring).records)
-    led.records.extend(matmul_cost(1, bsz, d_model, classes,
-                                   f"{op}.head", ring=ring).records)
-    led.records.extend(mlp_cost(bsz, classes, mlp_hidden, 1,
-                                f"{op}.mlp_se", ring=ring).records)
+    led.records.extend(r for r in events
+                       if not isinstance(r, (fusion.GroupBegin,
+                                             fusion.GroupEnd)))
     return led
 
 

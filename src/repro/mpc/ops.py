@@ -8,6 +8,14 @@ Cost accounting notes (all recorded into the ambient Ledger):
   trunc local .............................. 0 rounds (RING64 path)
   trunc dealer-assisted .................... 1 round (RING32/TPU path)
 
+Under an ambient `fusion.flight_scope` every one of these openings is
+deferred into the current fused flight instead of paying its own round
+(mpc/fusion.py); the arithmetic below never changes. `mul`/`matmul`/
+`mul_public` additionally take `lazy=True` to return the untruncated
+product as a `fusion.PendingShare` tagged with its truncation key —
+`force()` applies the identical truncation later, letting a caller hold
+the pending-trunc state across a fused group.
+
 All integer arithmetic relies on XLA's modular two's-complement semantics,
 which *is* ring arithmetic mod 2**bits.
 """
@@ -18,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.mpc.ring import RingSpec
 from repro.mpc.sharing import AShare
-from repro.mpc import beaver, comm
+from repro.mpc import beaver, comm, fusion
 
 
 def _numel(shape) -> int:
@@ -67,10 +75,13 @@ def add_public(x: AShare, v) -> AShare:
     return AShare(x.sh + pub, x.ring)
 
 
-def mul_public(x: AShare, v, *, key: jax.Array | None = None) -> AShare:
+def mul_public(x: AShare, v, *, key: jax.Array | None = None,
+               lazy: bool = False):
     """Multiply by a public float tensor; needs one truncation."""
     enc = x.ring.encode(jnp.asarray(v))
     z = AShare(x.sh * enc, x.ring)
+    if lazy:
+        return fusion.PendingShare(z, key)
     return trunc(z, key=key)
 
 
@@ -144,7 +155,8 @@ def trunc(x: AShare, *, key: jax.Array | None = None) -> AShare:
 # Beaver multiplication / matmul
 # ---------------------------------------------------------------------------
 
-def mul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True) -> AShare:
+def mul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True,
+        lazy: bool = False):
     """Elementwise secure multiply. One opening round for (eps, delta)."""
     ring = x.ring
     shape = jnp.broadcast_shapes(x.shape, y.shape)
@@ -159,19 +171,32 @@ def mul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True) -> AShar
     z = c.sh + eps_o * b.sh + dlt_o * a.sh
     z = z.at[0].add(eps_o * dlt_o)
     out = AShare(z, ring)
-    return trunc(out, key=jax.random.fold_in(key, 7)) if do_trunc else out
+    if not do_trunc:
+        return out
+    tkey = jax.random.fold_in(key, 7)
+    if lazy:
+        return fusion.PendingShare(out, tkey)
+    return trunc(out, key=tkey)
 
 
 def square(x: AShare, key: jax.Array) -> AShare:
     return mul(x, x, key)
 
 
-def matmul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True) -> AShare:
+def matmul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True,
+           lazy: bool = False, combine_impl: str | None = None):
     """Secure batched matmul via a Beaver matrix triple. One opening round.
 
     Bytes on the wire: |eps| + |delta| per party = (numel(x)+numel(y)) elems
     — crucially *not* numel(x)*cols bytes: the triple reuse is what makes
     matmul bandwidth-, not latency-, dominated.
+
+    `combine_impl` routes the post-open combine of 2-D RING32 matmuls
+    through the fused Pallas kernel (`kernels/ops.secure_matmul`): both
+    parties' `z_p = c_p + eps@b_p + a_p@dlt (+ p0: eps@dlt)` in one tiled
+    launch. Exact wrapping int32 arithmetic — bitwise-identical to the
+    inline combine ("auto" compiles on TPU, falls back to the jnp
+    reference elsewhere).
     """
     ring = x.ring
     a, b, c = beaver.matmul_triple(key, x.shape, y.shape, ring)
@@ -184,13 +209,27 @@ def matmul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True) -> AS
     eps_o, dlt_o = _open_flight("beaver_matmul", (eps, dlt), ring, numel=n,
                                 flops=2 * batch * m * k * n_out)
     # party-local: z_p = c_p + eps@b_p + a_p@dlt ; party0 adds eps@dlt
-    eb = jnp.matmul(jnp.stack([eps_o, eps_o]), b.sh, preferred_element_type=ring.dtype)
-    ad = jnp.matmul(a.sh, jnp.stack([dlt_o, dlt_o]), preferred_element_type=ring.dtype)
-    z = c.sh + eb + ad
-    ed = jnp.matmul(eps_o, dlt_o, preferred_element_type=ring.dtype)
-    z = z.at[0].add(ed)
-    out = AShare(z, ring)
-    return trunc(out, key=jax.random.fold_in(key, 11)) if do_trunc else out
+    if combine_impl is not None and ring.bits == 32 \
+            and x.sh.ndim == 3 and y.sh.ndim == 3:
+        from repro.kernels import ops as kops
+        z = kops.secure_matmul(eps_o, dlt_o, a.sh, b.sh, c.sh,
+                               impl=combine_impl)
+        out = AShare(z, ring)
+    else:
+        eb = jnp.matmul(jnp.stack([eps_o, eps_o]), b.sh,
+                        preferred_element_type=ring.dtype)
+        ad = jnp.matmul(a.sh, jnp.stack([dlt_o, dlt_o]),
+                        preferred_element_type=ring.dtype)
+        z = c.sh + eb + ad
+        ed = jnp.matmul(eps_o, dlt_o, preferred_element_type=ring.dtype)
+        z = z.at[0].add(ed)
+        out = AShare(z, ring)
+    if not do_trunc:
+        return out
+    tkey = jax.random.fold_in(key, 11)
+    if lazy:
+        return fusion.PendingShare(out, tkey)
+    return trunc(out, key=tkey)
 
 
 def dot_last(x: AShare, y: AShare, key: jax.Array) -> AShare:

@@ -6,35 +6,62 @@ outcome (the paper's stated leakage: the rank order information needed
 for selection). The data-dependent recursion runs on the host — this is
 the selection coordinator, which in deployment drives MPC ops over the
 wire; values never leave share form.
+
+Wave coalescing: when the scores were produced by the wave executor the
+pool lives in W per-wave device shards, so each partition's comparisons
+are issued as per-wave `reveal_lt` batches. Those batches compare
+against the SAME pivot and are mutually independent, so under
+`fusion.lat_scope` they ride ONE comparison flight — the rounds of a
+partition are paid once, not once per wave (the ROADMAP follow-up to
+the §4.4 coalescing).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.mpc.sharing import AShare
-from repro.mpc import compare
+from repro.mpc import compare, fusion
 
 
-def _cmp_batch(scores: AShare, idx_a: np.ndarray, pivot: int) -> np.ndarray:
+def _cmp_batch(scores: AShare, idx_a: np.ndarray, pivot: int,
+               wave: int = 1) -> np.ndarray:
     """Reveal bits [score[i] < score[pivot]] for a batch of indices.
 
     Batched into ONE message flight: the IO scheduler coalesces
     latency-bound comparisons (paper §4.4), so rounds are per *batch*,
-    not per element. Bytes remain per-element.
+    not per element. Bytes remain per-element. With wave > 1 the batch
+    is issued as per-wave chunks (the executor's data layout) that the
+    flight batcher fuses back into a single flight.
     """
-    a = scores[np.asarray(idx_a)]
-    b = scores[np.asarray([pivot] * len(idx_a))]
-    return np.asarray(compare.reveal_lt(a, b))
+    idx_a = np.asarray(idx_a)
+    if wave <= 1 or len(idx_a) <= 1:
+        a = scores[idx_a]
+        b = scores[np.asarray([pivot] * len(idx_a))]
+        return np.asarray(compare.reveal_lt(a, b))
+    chunks = np.array_split(idx_a, min(wave, len(idx_a)))
+    out = []
+    with fusion.lat_scope("quickselect"):
+        for ch in chunks:
+            a = scores[ch]
+            b = scores[np.asarray([pivot] * len(ch))]
+            out.append(np.asarray(compare.reveal_lt(a, b)))
+    return np.concatenate(out)
 
 
-def top_k_indices(scores: AShare, k: int, seed: int = 0) -> np.ndarray:
-    """Indices of the k largest encrypted scores."""
+def top_k_indices(scores: AShare, k: int, seed: int = 0,
+                  wave: int = 1) -> np.ndarray:
+    """Indices of the k largest encrypted scores.
+
+    `wave` is the executor's wave width: comparisons are issued as
+    per-wave batches and coalesced into one flight per partition (see
+    `_cmp_batch`). The selected set is invariant to `wave` — chunking
+    moves messages, never outcomes.
+    """
     n = scores.shape[0]
     if k >= n:
         return np.arange(n)
     rng = np.random.default_rng(seed)
     idx = np.arange(n)
-    lo_rank = 0                     # we select the k LARGEST
     target = k
     out: list[np.ndarray] = []
     # iterative quickselect partitioning on "greater-than-pivot"
@@ -49,7 +76,7 @@ def top_k_indices(scores: AShare, k: int, seed: int = 0) -> np.ndarray:
         pivot_pos = int(rng.integers(len(idx)))
         pivot = int(idx[pivot_pos])
         rest = np.delete(idx, pivot_pos)
-        less = _cmp_batch(scores, rest, pivot)      # rest[i] < pivot
+        less = _cmp_batch(scores, rest, pivot, wave)  # rest[i] < pivot
         greater = rest[~less]
         smaller = rest[less]
         n_hi = len(greater) + 1                      # pivot included
@@ -70,8 +97,16 @@ def expected_comparisons(n: int, k: int) -> float:
     return 2.0 * n
 
 
-def quickselect_cost(n: int) -> tuple[int, int]:
-    """(rounds, bytes) under coalescing: O(log n) batched flights."""
+def quickselect_cost(n: int, wave: int = 1,
+                     coalesce: bool = True) -> tuple[int, int]:
+    """(rounds, bytes) for a top-k over n candidates.
+
+    Coalesced (the default, matching `top_k_indices` under the flight
+    batcher): O(log n) partition flights, rounds independent of the
+    wave chunking. Uncoalesced, every per-wave chunk pays its own
+    comparison flight — the eager cost the batcher removes.
+    """
     flights = int(np.ceil(np.log2(max(n, 2)))) + 4
-    return (flights * compare.CMP_ROUNDS,
+    per_partition = 1 if coalesce else max(1, wave)
+    return (flights * per_partition * compare.CMP_ROUNDS,
             int(expected_comparisons(n, 0)) * compare.CMP_BYTES)
