@@ -9,10 +9,18 @@ over it (serial and §4.4-scheduled makespan). Emits `BENCH_fusion.json`
 
 `--smoke` additionally EXECUTES a tiny fused phase through the wave
 executor and enforces the acceptance gates (CI tier-1 runs this):
-  * fused RING32 rounds < eager rounds (>= 40% fewer) at identical bytes
+  * ExecConfig runs the FUSED stream by default (launch --eager opts out)
+  * fused RING32 2PC rounds < eager rounds (>= 40% fewer) at same bytes
   * fused vs eager output shares bitwise identical
   * the fused phase ledger satisfies iosched.ledger_agrees
   * the analytic mirror matches the fused probe record-for-record
+
+`--protocol 3pc` (the CI 3PC smoke job) runs the 2PC gates above AND
+executes both rings under the replicated-3PC backend, additionally
+gating:
+  * ZERO dealer/offline events in every 3PC ledger (the dealer is dead)
+  * costs.proxy_exec_cost(protocol="3pc") mirrors record-for-record
+  * fused 3PC rounds strictly below eager at identical bytes
 """
 from __future__ import annotations
 
@@ -42,22 +50,25 @@ RINGS = {"ring64": RING64, "ring32": RING32}
 
 
 def probe_grid(cfg: ArchConfig, spec: ProxySpec, *, batch: int, seq: int,
-               classes: int, n_batches: int) -> dict:
-    """{ring}_{eager|fused} -> per-batch ledger totals + modeled delay."""
+               classes: int, n_batches: int,
+               protocol: str = "2pc") -> dict:
+    """{ring}_{eager|fused} -> per-batch ledger totals + modeled delay.
+    The offline (dealer) channel is reported separately — it is the axis
+    on which the 3pc backend's zero sits."""
     out = {}
     sched = iosched.SchedConfig()
     for rname, ring in RINGS.items():
-        pp_sh = abstract_shares(cfg, spec, seq, classes, ring)
+        pp_sh = abstract_shares(cfg, spec, seq, classes, ring, protocol)
         for mode, fused in (("eager", False), ("fused", True)):
             t0 = time.time()
-            led = TraceEngine(ring).probe(pp_sh, cfg, spec,
-                                          (batch, seq, cfg.d_model),
-                                          fused=fused)
+            led = TraceEngine(ring, protocol=protocol).probe(
+                pp_sh, cfg, spec, (batch, seq, cfg.d_model), fused=fused)
             out[f"{rname}_{mode}"] = {
                 "rounds": led.rounds,
                 "lat_rounds": led.lat_rounds,
                 "bw_rounds": led.bw_rounds,
                 "nbytes": led.nbytes,
+                "offline_nbytes": led.offline_nbytes,
                 "flights": len(led.records),
                 "wan_serial_s": led.serial_time(WAN),
                 "wan_makespan_s": iosched.makespan(led, n_batches, WAN,
@@ -70,10 +81,14 @@ def probe_grid(cfg: ArchConfig, spec: ProxySpec, *, batch: int, seq: int,
     return out
 
 
-def smoke_execute() -> dict:
-    """Run a tiny fused RING32 phase for real and enforce the gates."""
+def smoke_execute(protocol: str = "2pc") -> dict:
+    """Run a tiny phase for real (eager + fused) and enforce the gates."""
     from benchmarks.common import tiny_exec_setup
     from repro.core.executor import ExecConfig, WaveExecutor
+
+    # the flipped default is itself a gate: deployments run fused unless
+    # they explicitly opt out (launch/select.py --eager)
+    assert ExecConfig().fuse is True, "ExecConfig.fuse default must be True"
 
     seq, classes, pool_n, batch, wave = 8, 2, 24, 8, 2
     cfg, spec, pp = tiny_exec_setup(0, seq=seq, n_classes=classes)
@@ -85,33 +100,48 @@ def smoke_execute() -> dict:
         scores, reports = {}, {}
         for mode, fused in (("eager", False), ("fused", True)):
             ex = WaveExecutor(ExecConfig(wave=wave, batch=batch, ring=ring,
-                                         fuse=fused))
+                                         fuse=fused, protocol=protocol))
             ent = ex.score_phase(key, pp, cfg, pool, spec)
             scores[mode], reports[mode] = np.asarray(ent.sh), ex.reports[-1]
         assert np.array_equal(scores["eager"], scores["fused"]), \
-            f"{rname}: fusion changed output shares"
+            f"{protocol}/{rname}: fusion changed output shares"
         for mode, rep in reports.items():
-            assert rep.agrees(), f"{rname}/{mode}: ledger_agrees failed"
+            assert rep.agrees(), \
+                f"{protocol}/{rname}/{mode}: ledger_agrees failed"
         ana = costs.proxy_exec_cost(batch, seq, cfg.d_model, spec.n_heads,
                                     cfg.n_kv_heads, cfg.d_head, spec.mlp_dim,
                                     classes, spec.n_layers, ring=ring,
-                                    fused=True)
+                                    protocol=protocol, fused=True)
         pb = reports["fused"].per_batch
         assert len(pb.records) == len(ana.records) and all(
             (g.rounds, g.nbytes, g.numel, g.flops, g.tag)
             == (w.rounds, w.nbytes, w.numel, w.flops, w.tag)
             for g, w in zip(pb.records, ana.records)), \
-            f"{rname}: proxy_exec_cost(fused=True) mirror diverged"
+            f"{protocol}/{rname}: proxy_exec_cost(fused=True) mirror diverged"
+        if protocol == "3pc":
+            # the headline gate: the dealer is DEAD — no offline channel,
+            # no dealer ops, anywhere in the executed phase ledger
+            for mode, rep in reports.items():
+                led = rep.ledger
+                assert led.offline_nbytes == 0, \
+                    f"3pc/{rname}/{mode}: offline bytes in a 3pc ledger"
+                bad = [r.op for r in led.records
+                       if r.tag == "offline" or r.op.startswith("offline")
+                       or r.op.startswith("beaver")
+                       or r.op.startswith("trunc_open")]
+                assert not bad, f"3pc/{rname}/{mode}: dealer events {bad}"
         e = reports["eager"].per_batch
         red = 1.0 - pb.rounds / e.rounds
-        assert pb.nbytes == e.nbytes, f"{rname}: fusion changed bytes"
-        assert pb.rounds < e.rounds, f"{rname}: no round reduction"
-        if ring is RING32:
+        assert pb.nbytes == e.nbytes, \
+            f"{protocol}/{rname}: fusion changed bytes"
+        assert pb.rounds < e.rounds, f"{protocol}/{rname}: no round reduction"
+        if ring is RING32 and protocol == "2pc":
             assert red >= 0.40, \
                 f"ring32 round reduction {red:.2%} below the 40% gate"
         out[rname] = {"eager_rounds": e.rounds, "fused_rounds": pb.rounds,
                       "round_reduction": red, "bitwise_identical": True,
-                      "ledger_agrees": True, "mirror_exact": True}
+                      "ledger_agrees": True, "mirror_exact": True,
+                      "offline_nbytes": pb.offline_nbytes}
     return out
 
 
@@ -119,6 +149,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny geometry + executed acceptance gates (CI)")
+    ap.add_argument("--protocol", choices=["2pc", "3pc"], default="2pc",
+                    help="secret-sharing backend to bench; 3pc also "
+                         "re-runs the 2pc gates (CI 3pc smoke job)")
     ap.add_argument("--csv", action="store_true",
                     help="emit benchmarks.run CSV rows instead of summary")
     ap.add_argument("--out", default="BENCH_fusion.json")
@@ -140,18 +173,36 @@ def main(argv=None) -> int:
     result = {
         "geometry": {"arch": cfg.name, "proxy": dataclasses.asdict(spec),
                      "batch": batch, "seq": seq, "classes": classes,
-                     "n_batches": n_batches},
+                     "n_batches": n_batches, "protocol": args.protocol},
         "probe": probe_grid(cfg, spec, batch=batch, seq=seq,
-                            classes=classes, n_batches=n_batches),
+                            classes=classes, n_batches=n_batches,
+                            protocol=args.protocol),
     }
     if args.smoke:
-        result["smoke"] = smoke_execute()
+        # the 2pc gates always run (a 3pc job must not regress 2pc);
+        # --protocol 3pc adds the dealer-free gates on top
+        result["smoke"] = smoke_execute("2pc")
+        if args.protocol == "3pc":
+            result["smoke_3pc"] = smoke_execute("3pc")
 
-    r32 = result["probe"]["ring32_round_reduction"]
-    if r32 < 0.40:
-        print(f"FAIL: fused RING32 probe reduces rounds by only {r32:.2%}",
-              file=sys.stderr)
-        return 1
+    if args.protocol == "3pc":
+        off = sum(v["offline_nbytes"] for k, v in result["probe"].items()
+                  if isinstance(v, dict))
+        if off != 0:
+            print(f"FAIL: 3pc probe carries {off} offline dealer bytes",
+                  file=sys.stderr)
+            return 1
+        r32 = result["probe"]["ring32_round_reduction"]
+        if r32 <= 0.0:
+            print("FAIL: fused 3pc probe shows no round reduction",
+                  file=sys.stderr)
+            return 1
+    else:
+        r32 = result["probe"]["ring32_round_reduction"]
+        if r32 < 0.40:
+            print(f"FAIL: fused RING32 probe reduces rounds by only "
+                  f"{r32:.2%}", file=sys.stderr)
+            return 1
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     for k, v in result["probe"].items():

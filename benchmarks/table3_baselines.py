@@ -24,7 +24,8 @@ from repro.core import iosched, proxy as proxy_mod, target as tgt
 from repro.core.proxy import ProxySpec
 from repro.core.selection import SelectionConfig, run_selection
 from repro.data.tasks import make_classification_task
-from repro.engine import ClearEngine, TraceEngine, VARIANTS, abstract_shares
+from repro.engine import (ClearEngine, TraceEngine, VARIANTS,
+                          abstract_shares, proxy_entropy, proxy_logits)
 from repro.mpc import costs
 from repro.mpc.comm import WAN
 from repro.mpc.ring import RING64
@@ -39,8 +40,8 @@ def _distill_proxy(key, pp, cfg, spec, teacher_params, boot_tokens):
     v = jax.tree.map(jnp.zeros_like, pp)
 
     def loss_fn(pp):
-        logits = proxy_mod.proxy_logits_clear(pp, cfg, boot_tokens, spec,
-                                              frozenset({"quad_sm", "se"}))
+        logits = proxy_logits(ClearEngine(), pp, cfg, boot_tokens, spec,
+                              frozenset({"quad_sm", "se"}))
         return jnp.mean((logits - teacher) ** 2)
 
     @jax.jit
@@ -104,8 +105,8 @@ def run() -> dict:
                                    exvivo_steps=60)
         pp = _distill_proxy(jax.random.fold_in(key, 6), pp, cfg, spec, mg,
                             boot)
-        ents = np.asarray(proxy_mod.proxy_entropy_clear(
-            pp, cfg, jnp.asarray(task.pool_tokens), spec,
+        ents = np.asarray(proxy_entropy(
+            ClearEngine(), pp, cfg, jnp.asarray(task.pool_tokens), spec,
             frozenset({"quad_sm", "se"})))
         mf_idx = np.argsort(ents)[-int(0.25 * POOL):]
         accs["mpcformer"] = finetune_eval(mf_idx)

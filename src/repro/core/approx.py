@@ -16,9 +16,9 @@ proxy end-to-end (proxy.py).
 
 Both execution paths live in the engine layer (the substrate-dispatch
 API): `engine/clear.mlp_apply` and `engine/mpc.mlp_apply_mpc` — the
-share-level path is 2 Beaver matmuls + low-dim ReLU, which is where the
-MPC savings come from.  They are re-exported here under their historic
-names; this module owns *fitting* (ex-vivo Gaussian-synthesis training).
+share-level path is 2 secure matmuls + low-dim ReLU, which is where the
+MPC savings come from.  This module owns *fitting* (ex-vivo
+Gaussian-synthesis training); import the apply paths from the engine.
 """
 from __future__ import annotations
 
@@ -27,8 +27,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.engine.clear import mlp_apply, softmax_entropy
-from repro.engine.mpc import mlp_apply_mpc  # noqa: F401  back-compat
+from repro.engine import clear as _clear
 
 
 def init_mlp(key, d_in: int, hidden: int, d_out: int):
@@ -54,7 +53,7 @@ def op_rsqrt(v, eps: float = 1e-5):
 
 
 def op_softmax_entropy(logits):
-    return softmax_entropy(logits)
+    return _clear.softmax_entropy(logits)
 
 
 # ---------------------------------------------------------------------------
@@ -87,7 +86,7 @@ def fit_mlp(key, op_fn, stats: GaussStats, d_in: int, hidden: int,
 
     def loss_fn(p, x):
         y = op_fn(x)
-        return jnp.mean((mlp_apply(p, x) - y) ** 2)
+        return jnp.mean((_clear.mlp_apply(p, x) - y) ** 2)
 
     @jax.jit
     def step(p, m, v, key, i):

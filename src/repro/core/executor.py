@@ -23,8 +23,10 @@ abstract `jax.eval_shape` probe of the identical op stream (zero FLOPs
 spent) — which in turn is pinned record-for-record to
 `mpc/costs.proxy_exec_cost`.  The forward itself is the unified
 engine-generic one (`engine/forward.py`) interpreted by an `MPCEngine`
-over this executor's ring; RING64 and RING32/dealer-trunc run the same
-code path.
+over this executor's ring and protocol backend; RING64 and RING32 run
+the same code path, and so do the additive-2PC (dealer Beaver) and
+replicated-3PC (dealer-free) sharing schemes — `ExecConfig.protocol`
+picks the backend, the party axis sizes itself accordingly.
 
 On a pod mesh the wave dimension is a logical sharding axis ("wave" ->
 the data axis; parallel/sharding.py), so W concurrent batches land on
@@ -46,7 +48,7 @@ from repro.core import proxy as proxy_mod
 from repro.core.proxy import ProxySpec
 from repro.engine import MPCEngine, TraceEngine, proxy_entropy
 from repro.engine.base import FULL_VARIANT
-from repro.mpc import comm, fusion
+from repro.mpc import comm, fusion, protocols
 from repro.mpc.comm import Ledger, NetProfile
 from repro.mpc.ring import RING64, RingSpec, x64_scope
 from repro.mpc.sharing import AShare, share
@@ -63,11 +65,16 @@ class ExecConfig:
     batch: int = 64               # candidates per batch
     flops_per_s: float = 10e12
     ring: RingSpec = RING64
+    # secret-sharing protocol backend (mpc/protocols/): "2pc" additive
+    # with trusted-dealer triples, "3pc" replicated 2-of-3, dealer-free
+    protocol: str = "2pc"
     # round compression (mpc/fusion.py): run each batch's forward under
     # a flight_scope so independent openings share flights. The
     # per-batch probe is fused identically, so ledger_agrees still holds
-    # and the schedule prices the compressed stream.
-    fuse: bool = False
+    # and the schedule prices the compressed stream. Default ON now that
+    # fig7/table4 report both modes; pass fuse=False (launch --eager)
+    # for the uncompressed stream.
+    fuse: bool = True
 
     def sched(self) -> iosched.SchedConfig:
         return iosched.SchedConfig(coalesce=self.coalesce,
@@ -85,6 +92,11 @@ class PhaseReport:
     n_waves: int
     wall_s: float
     sched: iosched.SchedConfig
+    # how the stream was produced — what the analytic mirror must be
+    # parameterized with to reproduce it (benchmarks/common.assert_mirror)
+    ring: RingSpec = RING64
+    protocol: str = "2pc"
+    fused: bool = True
 
     def agrees(self) -> bool:
         """Realized flights == the makespan model's inputs, exactly."""
@@ -133,18 +145,22 @@ class WaveExecutor:
             reps = -(-full // n)                       # tiling if B > n
             tok = np.concatenate([tok] * reps)[:full]
 
-        pp_sh = proxy_mod.share_proxy(jax.random.fold_in(key, 1), pp, ring)
+        proto = cfg.protocol
+        n_parties = protocols.get(proto).n_parties
+        pp_sh = proxy_mod.share_proxy(jax.random.fold_in(key, 1), pp, ring,
+                                      proto)
         batch_keys = jax.random.split(jax.random.fold_in(key, 2), n_batches)
         # per-batch op-stream reference: the zero-FLOP eval_shape probe
         # (fused exactly like the executed forwards below)
-        per_batch = TraceEngine(ring, variant).probe(
+        per_batch = TraceEngine(ring, variant, protocol=proto).probe(
             pp_sh, arch_cfg, spec, (B, seq, arch_cfg.d_model), batch_keys[0],
             fused=cfg.fuse)
 
         def fwd(sh, k):
-            eng = MPCEngine(ring=ring).with_key(k)
+            eng = MPCEngine(ring=ring, protocol=proto).with_key(k)
             with fusion.flight_scope(enabled=cfg.fuse):
-                return proxy_entropy(eng, pp_sh, arch_cfg, AShare(sh, ring),
+                return proxy_entropy(eng, pp_sh, arch_cfg,
+                                     AShare(sh, ring, proto),
                                      spec, variant).sh
 
         outer = comm.get_ledger()
@@ -159,7 +175,7 @@ class WaveExecutor:
             wave_tok = jnp.asarray(tok[b0 * B:b1 * B]).reshape(lanes, B, seq)
             x = jnp.take(pp["embed"], wave_tok, axis=0) * scale
             x_sh = share(jax.random.fold_in(key, 100 + wi),
-                         x.astype(jnp.float32), ring)
+                         x.astype(jnp.float32), ring, proto)
             # party axis -> pod, wave axis -> data devices on a pod mesh
             sh = sharding.shard(x_sh.sh, "pod", "wave", "batch", None, None)
             keys = batch_keys[b0:b1]
@@ -176,7 +192,7 @@ class WaveExecutor:
             if outer is not None:
                 outer.records.extend(wave_led.records)
 
-            ent = ent.reshape(2, lanes * B)
+            ent = ent.reshape(n_parties, lanes * B)
             # double buffer: block on wave i-1 only after dispatching i,
             # so its wire time overlaps this wave's local compute
             if pending is not None:
@@ -193,28 +209,31 @@ class WaveExecutor:
         out = jnp.concatenate(results, axis=1)[:, :n]
         self.reports.append(PhaseReport(
             ledger=phase_led, per_batch=per_batch, n_batches=n_batches,
-            n_waves=n_waves, wall_s=time.time() - t0, sched=self.cfg.sched()))
-        return AShare(out, ring)
+            n_waves=n_waves, wall_s=time.time() - t0, sched=self.cfg.sched(),
+            ring=ring, protocol=proto, fused=cfg.fuse))
+        return AShare(out, ring, proto)
 
 
 def run_variants(key, pp, arch_cfg: ArchConfig, tokens, spec: ProxySpec,
                  *, batch: int, wave: int,
                  flops_per_s: float = 10e12,
-                 fuse: bool = False) -> dict[str, "PhaseReport"]:
+                 fuse: bool | None = None,
+                 protocol: str = "2pc") -> dict[str, "PhaseReport"]:
     """Fig-7's four (coalesce, overlap) points, executed on one pool.
 
     Returns name -> PhaseReport; every variant is checked for exact
     ledger agreement with the makespan inputs, and all variants produce
     bitwise-identical scores (the schedule moves flights, not values —
-    and with `fuse=True` the flight batcher compresses rounds without
-    changing a share either).
+    and the flight batcher — on by default, `fuse=None` follows
+    ExecConfig — compresses rounds without changing a share either).
     """
     reports = {}
     ref = None
+    fuse_kw = {} if fuse is None else {"fuse": fuse}
     for name, (co, ov) in iosched.FIG7_VARIANTS.items():
         ex = WaveExecutor(ExecConfig(wave=wave, coalesce=co, overlap=ov,
                                      batch=batch, flops_per_s=flops_per_s,
-                                     fuse=fuse))
+                                     protocol=protocol, **fuse_kw))
         ent = ex.score_phase(key, pp, arch_cfg, tokens, spec)
         rep = ex.reports[-1]
         if not rep.agrees():

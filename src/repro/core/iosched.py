@@ -71,6 +71,9 @@ def stream_totals(per_batch: Ledger, n_batches: int,
         "bw_rounds": n_batches * per_batch.bw_rounds,
         "nbytes": n_batches * per_batch.nbytes,
         "flops": n_batches * per_batch.flops,
+        # dealer channel: schedule-invariant like bytes, but streamed
+        # ahead of the phase — never an input to makespan
+        "offline_nbytes": n_batches * per_batch.offline_nbytes,
     }
 
 
@@ -82,7 +85,8 @@ def ledger_agrees(stream: Ledger, per_batch: Ledger, n_batches: int,
     return (stream.lat_rounds == want["lat_rounds"]
             and stream.bw_rounds == want["bw_rounds"]
             and stream.nbytes == want["nbytes"]
-            and stream.flops == want["flops"])
+            and stream.flops == want["flops"]
+            and stream.offline_nbytes == want["offline_nbytes"])
 
 
 def makespan(per_batch: Ledger, n_batches: int, net: NetProfile,

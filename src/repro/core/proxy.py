@@ -14,10 +14,10 @@ Generation pipeline (all clear, model-owner side):
 
 Execution: the proxy forward exists ONCE, engine-generic, in
 `engine/forward.py` — `proxy_entropy(engine, pp, cfg, x, spec, variant)`
-runs it over clear floats (ClearEngine), additive shares (MPCEngine), or
-the eval_shape cost probe (TraceEngine).  The historic entry points
-`proxy_entropy_clear` / `proxy_entropy_mpc` remain below as thin
-deprecated shims; new code should construct an engine.
+runs it over clear floats (ClearEngine), secret shares of either
+protocol backend (MPCEngine), or the eval_shape cost probe
+(TraceEngine).  Construct an engine; the historic
+`proxy_entropy_clear`/`proxy_entropy_mpc` shims are gone.
 """
 from __future__ import annotations
 
@@ -30,11 +30,9 @@ from repro.configs.base import ArchConfig
 from repro.core import approx, target
 from repro.core.approx import GaussStats
 from repro.engine import forward as engine_forward
-from repro.engine.base import FULL_VARIANT
 from repro.engine.clear import ClearEngine
-from repro.engine.mpc import MPCEngine
 from repro.models import common
-from repro.mpc.sharing import AShare, share
+from repro.mpc.sharing import share
 from repro.mpc.ring import RingSpec, RING64
 
 
@@ -132,25 +130,6 @@ def build_proxy(key, params_g, cfg: ArchConfig, stats, spec: ProxySpec,
     return pp
 
 
-# ---------------------------------------------------------------------------
-# execution shims (deprecated — construct an engine instead)
-# ---------------------------------------------------------------------------
-
-
-def proxy_logits_clear(pp, cfg: ArchConfig, tokens, spec: ProxySpec,
-                       variant=FULL_VARIANT):
-    """Deprecated shim: `engine.proxy_logits(ClearEngine(), ...)`."""
-    return engine_forward.proxy_logits(ClearEngine(), pp, cfg, tokens,
-                                       spec, variant)
-
-
-def proxy_entropy_clear(pp, cfg: ArchConfig, tokens, spec: ProxySpec,
-                        variant=FULL_VARIANT):
-    """Deprecated shim: `engine.proxy_entropy(ClearEngine(), ...)`."""
-    return engine_forward.proxy_entropy(ClearEngine(), pp, cfg, tokens,
-                                        spec, variant)
-
-
 def invivo_finetune(key, pp, cfg: ArchConfig, tokens, labels,
                     spec: ProxySpec, *, steps: int = 150, lr: float = 5e-4,
                     batch: int = 32):
@@ -227,24 +206,10 @@ def random_proxy(key, cfg: ArchConfig, spec: ProxySpec, seq_len: int,
 # MPC execution
 # ---------------------------------------------------------------------------
 
-def share_proxy(key, pp, ring: RingSpec = RING64):
-    """Model owner secret-shares all proxy parameters."""
+def share_proxy(key, pp, ring: RingSpec = RING64, proto: str = "2pc"):
+    """Model owner secret-shares all proxy parameters (any protocol
+    backend: the leading party-axis size follows `proto`)."""
     leaves, treedef = jax.tree.flatten(pp)
     keys = jax.random.split(key, len(leaves))
-    shared = [share(k, l, ring) for k, l in zip(keys, leaves)]
+    shared = [share(k, l, ring, proto) for k, l in zip(keys, leaves)]
     return jax.tree.unflatten(treedef, shared)
-
-
-def proxy_entropy_mpc(pp_sh, cfg: ArchConfig, x_emb: AShare,
-                      spec: ProxySpec, key,
-                      variant=FULL_VARIANT) -> AShare:
-    """Deprecated shim: `engine.proxy_entropy(MPCEngine(ring).with_key(k),
-    ...)`.  Runs the SAME forward as the clear path over shares.
-
-    x_emb: shared embedded inputs (B, S, d) — the data owner shares
-    one-hot rows, the embedding matmul is folded into share generation
-    (equivalently a Beaver matmul; its cost is accounted by costs.py).
-    """
-    eng = MPCEngine(ring=x_emb.ring).with_key(key)
-    return engine_forward.proxy_entropy(eng, pp_sh, cfg, x_emb, spec,
-                                        variant)

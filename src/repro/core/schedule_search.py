@@ -41,7 +41,8 @@ class ScoredSchedule:
 @functools.lru_cache(maxsize=512)
 def _phase_probe(n_layers: int, n_heads: int, mlp_dim: int, *,
                  d_model: int, heads: int, classes: int, seq: int,
-                 batch: int, ring: RingSpec, fused: bool) -> Ledger:
+                 batch: int, ring: RingSpec, fused: bool,
+                 protocol: str = "2pc") -> Ledger:
     """Per-batch ledger of one phase proxy, probed from the executed
     forward (weight-free: abstract_shares + eval_shape)."""
     from repro.engine import TraceEngine, abstract_shares
@@ -52,9 +53,9 @@ def _phase_probe(n_layers: int, n_heads: int, mlp_dim: int, *,
                      n_heads=heads, n_kv_heads=heads, d_head=dh,
                      d_ff=0, vocab_size=2)
     spec = ProxySpec(n_layers, min(n_heads, heads), mlp_dim)
-    pp_sh = abstract_shares(cfg, spec, seq, classes, ring)
-    return TraceEngine(ring).probe(pp_sh, cfg, spec, (batch, seq, d_model),
-                                   fused=fused)
+    pp_sh = abstract_shares(cfg, spec, seq, classes, ring, protocol)
+    return TraceEngine(ring, protocol=protocol).probe(
+        pp_sh, cfg, spec, (batch, seq, d_model), fused=fused)
 
 
 def schedule_delay(phases, n_pool: int, budget: int, *, d_model: int = 768,
@@ -62,6 +63,7 @@ def schedule_delay(phases, n_pool: int, budget: int, *, d_model: int = 768,
                    batch: int = 4, net: NetProfile = WAN,
                    sched: iosched.SchedConfig | None = None,
                    ring: RingSpec = RING64,
+                   protocol: str = "2pc",
                    fused: bool | None = None) -> float:
     """`fused=None` prices whatever the executor would run by default
     (ExecConfig.fuse) — the search must rank schedules by the stream the
@@ -75,7 +77,8 @@ def schedule_delay(phases, n_pool: int, budget: int, *, d_model: int = 768,
     for i, ph in enumerate(phases):
         led = _phase_probe(ph.n_layers, ph.n_heads, ph.mlp_dim,
                            d_model=d_model, heads=heads, classes=classes,
-                           seq=seq, batch=batch, ring=ring, fused=fused)
+                           seq=seq, batch=batch, ring=ring, fused=fused,
+                           protocol=protocol)
         total += iosched.makespan(led, -(-remaining // batch), net, sched)
         remaining = budget if i == len(phases) - 1 else \
             max(budget, int(remaining * ph.selectivity))

@@ -43,7 +43,7 @@ from repro.core.proxy import ProxySpec
 from repro.engine import forward as engine_forward
 from repro.engine.base import FULL_VARIANT, TensorEngine, resolve_engine
 from repro.mpc import quickselect
-from repro.mpc.sharing import AShare
+from repro.mpc.sharing import AShare, reconstruct
 from repro.mpc.ring import x64_scope
 
 
@@ -67,11 +67,17 @@ class SelectionConfig:
 
     def __post_init__(self):
         self.engine = resolve_engine(self.engine if self.engine is not None
-                                     else self.mode, ring=self.executor.ring)
+                                     else self.mode, ring=self.executor.ring,
+                                     protocol=self.executor.protocol)
         self.mode = self.engine.kind
-        if self.mode == "mpc" and self.executor.ring is not self.engine.ring:
-            self.executor = dataclasses.replace(self.executor,
-                                                ring=self.engine.ring)
+        if self.mode == "mpc":
+            # the executor must run the engine's exact substrate: sync
+            # ring AND protocol backend (engine instance wins)
+            if self.executor.ring is not self.engine.ring or \
+                    self.executor.protocol != self.engine.protocol:
+                self.executor = dataclasses.replace(
+                    self.executor, ring=self.engine.ring,
+                    protocol=self.engine.protocol)
 
 
 @dataclasses.dataclass
@@ -195,9 +201,8 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
                                                       seed=1234 + pi,
                                                       wave=qs_wave)
                 appraisal = float(jnp.mean(
-                    (ent_sh[np.asarray(top_local)].sh[0]
-                     + ent_sh[np.asarray(top_local)].sh[1]).astype(jnp.float64)
-                    / ent_sh.ring.scale))
+                    reconstruct(ent_sh[np.asarray(top_local)].sh)
+                    .astype(jnp.float64) / ent_sh.ring.scale))
         else:
             ents = _score_clear(sel.engine, pp, cfg, tok, ph, sel.variant)
             top_local = np.argsort(ents)[-keep:]
@@ -232,7 +237,8 @@ def _run_fingerprint(sel: SelectionConfig, n_pool: int, budget: int,
                 (sel.exvivo_steps, sel.invivo_steps, sel.finetune_steps,
                  sel.boot_frac),
                 (ex.wave, ex.coalesce, ex.overlap, ex.fuse, ex.batch,
-                 sel.score_batch) if sel.mode == "mpc" else None)
+                 ex.protocol, sel.score_batch)
+                if sel.mode == "mpc" else None)
     h = hashlib.sha1(np.asarray(boot_idx, dtype=np.int64).tobytes())
     h.update(np.asarray([n_pool, budget], dtype=np.int64).tobytes())
     h.update(repr(cfg_desc).encode())
@@ -274,7 +280,7 @@ def appraise_threshold(ent_sh: AShare, idx, threshold: float, key) -> bool:
     sel = ent_sh[np.asarray(idx)]
     avg = mops.mean(sel, axis=0, key=jax.random.fold_in(key, 1))
     thr = mops.add_public(mops.neg(avg), threshold)      # thr - avg
-    bit = compare.reveal_lt(thr, AShare(jnp.zeros_like(thr.sh), thr.ring))
+    bit = compare.reveal_lt(thr, thr.with_sh(jnp.zeros_like(thr.sh)))
     return bool(np.asarray(bit))                         # avg > threshold
 
 

@@ -14,10 +14,12 @@ primitive ops over its own tensor type:
                 abstractly so every comm.record fires with real shapes
                 but zero FLOPs execute (engine/trace.py)
 
-Adding a backend (RING32 dealer-trunc, a future 3-party scheme, a
-cost-tracing variant) is a ~100-line engine implementation, not a
-forward rewrite — the dispatch-layer move MPC frameworks like CrypTen
-make with their tensor stack.
+Adding a substrate (a ring, a sharing scheme, a cost-tracing variant)
+never rewrites the forward: rings and protocol backends (additive-2PC
+dealer / replicated-3PC, `mpc/protocols/`) are MPCEngine parameters,
+and a genuinely new tensor type is a ~100-line engine implementation —
+the dispatch-layer move MPC frameworks like CrypTen make with their
+tensor stack.
 
 Nonlinearity policy: the Table-2/Table-3 `variant` sets are engine-level
 strategies.  A variant is a frozenset naming which nonlinearities use
@@ -91,9 +93,11 @@ class TensorEngine(Protocol):
     def entropy_head(self, pp, logits: Tensor, variant) -> Tensor: ...
 
 
-def resolve_engine(engine, ring=None) -> "TensorEngine":
+def resolve_engine(engine, ring=None, protocol: str = "2pc") -> "TensorEngine":
     """Engine instance from an instance (pass-through) or a mode string
-    ("clear" / "mpc" / "trace" — the legacy `SelectionConfig.mode`)."""
+    ("clear" / "mpc" / "trace" — the legacy `SelectionConfig.mode`).
+    `protocol` picks the secret-sharing backend for the MPC substrates
+    ("2pc" additive+dealer / "3pc" replicated, dealer-free)."""
     if not isinstance(engine, str):
         return engine
     from repro.engine.clear import ClearEngine
@@ -104,9 +108,9 @@ def resolve_engine(engine, ring=None) -> "TensorEngine":
     if engine == "clear":
         return ClearEngine()
     if engine == "mpc":
-        return MPCEngine(ring=ring)
+        return MPCEngine(ring=ring, protocol=protocol)
     if engine == "trace":
-        return TraceEngine(ring=ring)
+        return TraceEngine(ring=ring, protocol=protocol)
     raise ValueError(f"unknown engine {engine!r} "
                      "(expected 'clear', 'mpc', 'trace', or an instance)")
 

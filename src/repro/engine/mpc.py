@@ -1,9 +1,13 @@
 """MPCEngine — share-level interpretation of the proxy forward.
 
-Tensors are `AShare`s over a `RingSpec`; RING64 (CrypTen-style local
-truncation) and RING32 (TPU-native, dealer-assisted truncation) share
-this one code path — the ring decides which truncation protocol
-`mpc/ops.trunc` runs and what lands in the cost Ledger.
+Tensors are `Share`s over a `RingSpec` and a protocol backend
+(`mpc/protocols/`): RING64 and RING32 share this one code path, and so
+do the additive-2PC (trusted-dealer Beaver) and replicated-3PC
+(dealer-free resharing) protocols — the ring decides the truncation
+arithmetic, the backend decides the sharing scheme and what lands in
+the cost Ledger. All six variant strategies run bitwise-reproducibly on
+every (ring, protocol) combination: the op stream is fixed by
+`engine/forward.py` and keys derive deterministically below.
 
 PRNG keys are threaded internally: the engine is seeded once per
 forward (`with_key`) and derives one key per keyed op site by folding
@@ -21,28 +25,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine.forward import _mlp_at
-from repro.mpc import compare, fusion, nonlinear, ops as mops
+from repro.mpc import compare, fusion, nonlinear, protocols, ops as mops
 from repro.mpc.ring import RING64, RingSpec
-from repro.mpc.sharing import AShare
+from repro.mpc.sharing import Share
 
 
 def _ax(axis: int) -> int:
-    """Value axis -> share-array axis (leading party axis of size 2)."""
+    """Value axis -> share-array axis (leading party axis)."""
     return axis + 1 if axis >= 0 else axis
 
 
-def mlp_apply_mpc(p_sh: dict, x: AShare, key) -> AShare:
+def mlp_apply_mpc(p_sh: dict, x: Share, key) -> Share:
     """Share-level emulator MLP: weights are model-owner-private shares.
 
-    Cost: 2 Beaver matmuls (1 round each, bytes ~ rows*(d_in + d_out))
-    + ReLU over `hidden` elements only — the dimension reduction the
-    paper's MPC savings come from.  Canonical home of the share-level
-    apply path (core/approx re-exports it); the clear twin lives in
-    engine/clear.mlp_apply.
+    Cost: 2 secure matmuls (1 round each) + ReLU over `hidden` elements
+    only — the dimension reduction the paper's MPC savings come from.
+    Canonical home of the share-level apply path; the clear twin lives
+    in engine/clear.mlp_apply.
     """
-    def _badd(h: AShare, b: AShare) -> AShare:
+    def _badd(h: Share, b: Share) -> Share:
         bb = jnp.broadcast_to(b.sh[:, None, :], h.sh.shape)
-        return mops.add(h, AShare(bb, h.ring))
+        return mops.add(h, h.with_sh(bb))
 
     k1, k2, k3 = jax.random.split(key, 3)
     h = mops.matmul(x, p_sh["w1"], k1)
@@ -56,12 +59,16 @@ class MPCEngine:
     kind = "mpc"
 
     def __init__(self, ring: RingSpec = RING64, variant=None, key=None,
-                 combine_impl: str = "auto"):
+                 combine_impl: str = "auto", protocol: str = "2pc"):
         self.ring = ring
         self.variant = variant
         self._key = key
         self._ctr = 0
-        # Beaver post-open combine for 2-D RING32 matmuls: the fused
+        # protocol backend: "2pc" (additive + trusted dealer) or "3pc"
+        # (replicated 2-of-3, dealer-free) — mpc/protocols/
+        self.protocol = protocol
+        self.backend = protocols.get(protocol)
+        # Beaver post-open combine for 2-D RING32 2PC matmuls: the fused
         # Pallas secure_matmul kernel ("auto" = compiled on TPU, jnp
         # reference elsewhere; "interpret" exercises the kernel body on
         # CPU). Bitwise-identical wrapping int32 arithmetic either way.
@@ -70,11 +77,13 @@ class MPCEngine:
     def with_key(self, key) -> "MPCEngine":
         """Fresh engine seeded for one forward (keys derive from here)."""
         return MPCEngine(self.ring, self.variant, key=key,
-                         combine_impl=self.combine_impl)
+                         combine_impl=self.combine_impl,
+                         protocol=self.protocol)
 
     def fused(self, label: str):
-        """Mark a group of independent ops: their openings ride one
-        flight under an ambient `fusion.flight_scope` (no-op eagerly)."""
+        """Mark a group of independent ops: their openings/reshares ride
+        one flight under an ambient `fusion.flight_scope` (no-op
+        eagerly)."""
         return fusion.fused_group(label)
 
     def _k(self):
@@ -87,11 +96,16 @@ class MPCEngine:
 
     # -- data entry ------------------------------------------------------
     def embed(self, pp, x_in, cfg):
-        if not isinstance(x_in, AShare):
+        if not isinstance(x_in, Share):
             raise TypeError(
                 "MPCEngine consumes shared embedded inputs (B, S, d): the "
                 "data owner shares one-hot rows and the embedding matmul "
                 "is folded into share generation (see mpc/sharing.share)")
+        if x_in.proto != self.protocol:
+            raise ValueError(
+                f"engine protocol {self.protocol!r} but input shares are "
+                f"{x_in.proto!r} — share the inputs with "
+                f"share(..., proto={self.protocol!r})")
         return x_in
 
     # -- linear algebra --------------------------------------------------
@@ -111,9 +125,9 @@ class MPCEngine:
         return mops.add_public(x, v)
 
     def matmul(self, x, y):
-        return mops.matmul(x, y, self._k(),
-                           combine_impl=self.combine_impl
-                           if self.ring.bits == 32 else None)
+        combine = self.combine_impl \
+            if self.ring.bits == 32 and self.protocol == "2pc" else None
+        return mops.matmul(x, y, self._k(), combine_impl=combine)
 
     def mean(self, x, axis):
         return mops.mean(x, axis=axis, key=self._k())
@@ -127,22 +141,23 @@ class MPCEngine:
 
     def broadcast(self, x, shape):
         # right-align the VALUE dims under the leading party axis: a
-        # (2, n)-share broadcast to value shape (rows, n) must become
-        # (2, 1, n) first, or the party axis would be matched against a
+        # (P, n)-share broadcast to value shape (rows, n) must become
+        # (P, 1, n) first, or the party axis would be matched against a
         # value dim (the attention-bias path hits exactly this)
         shape = tuple(shape)
+        p = x.sh.shape[0]
         pad = len(shape) - x.ndim
-        sh = x.sh.reshape((2,) + (1,) * pad + x.shape)
-        return AShare(jnp.broadcast_to(sh, (2,) + shape), x.ring)
+        sh = x.sh.reshape((p,) + (1,) * pad + x.shape)
+        return x.with_sh(jnp.broadcast_to(sh, (p,) + shape))
 
     def moveaxis(self, x, src, dst):
-        return AShare(jnp.moveaxis(x.sh, _ax(src), _ax(dst)), x.ring)
+        return x.with_sh(jnp.moveaxis(x.sh, _ax(src), _ax(dst)))
 
     def swapaxes(self, x, a, b):
-        return AShare(jnp.swapaxes(x.sh, _ax(a), _ax(b)), x.ring)
+        return x.with_sh(jnp.swapaxes(x.sh, _ax(a), _ax(b)))
 
     def index(self, x, i):
-        return AShare(x.sh[:, i], x.ring)
+        return x.with_sh(x.sh[:, i])
 
     # -- nonlinearity strategies -----------------------------------------
     def mlp(self, p, x):
@@ -179,7 +194,7 @@ class MPCEngine:
         # row sits near -5
         s = mops.add_public(s, 1e-6)
         r = nonlinear.reciprocal(s, self._k())
-        rb = AShare(jnp.broadcast_to(r.sh, e.sh.shape), e.ring)
+        rb = e.with_sh(jnp.broadcast_to(r.sh, e.sh.shape))
         return mops.mul(e, rb, self._k())
 
     def _poly_softmax(self, scores):
@@ -190,7 +205,7 @@ class MPCEngine:
         the baseline's real MPC cost profile.
         """
         mx = compare.max_(scores, axis=-1, key=self._k())
-        mb = AShare(jnp.broadcast_to(mx.sh, scores.sh.shape), scores.ring)
+        mb = scores.with_sh(jnp.broadcast_to(mx.sh, scores.sh.shape))
         t = mops.sub(scores, mb)
         lo = mops.add_public(compare.relu(mops.add_public(t, 8.0), self._k()),
                              -8.0)
@@ -210,5 +225,5 @@ class MPCEngine:
         e = compare.relu(e, self._k())
         s = mops.sum_(e, axis=-1, keepdims=True)
         r = nonlinear.reciprocal(s, self._k())
-        rb = AShare(jnp.broadcast_to(r.sh, e.sh.shape), e.ring)
+        rb = e.with_sh(jnp.broadcast_to(r.sh, e.sh.shape))
         return mops.mul(e, rb, self._k())

@@ -6,7 +6,10 @@ static shapes) but no array math does.  This is the probe the wave
 executor used to improvise inline; it also prices *paper-scale*
 geometries without materializing a single weight — `abstract_shares`
 builds a ShapeDtypeStruct proxy pytree, so a BERT-scale per-batch
-Ledger costs microseconds (benchmarks/table3_baselines.py).
+Ledger costs microseconds (benchmarks/table3_baselines.py). Both the
+ring and the protocol backend are probe parameters: the same abstract
+run prices the 2PC dealer stream (offline channel included) or the
+3PC resharing stream.
 """
 import contextlib
 
@@ -14,10 +17,10 @@ import jax
 
 from repro.engine.forward import proxy_entropy
 from repro.engine.mpc import MPCEngine
-from repro.mpc import comm, fusion
+from repro.mpc import comm, fusion, protocols
 from repro.mpc.comm import Ledger
 from repro.mpc.ring import RING64, RingSpec, x64_scope
-from repro.mpc.sharing import AShare
+from repro.mpc.sharing import Share
 
 
 class TraceEngine:
@@ -27,9 +30,11 @@ class TraceEngine:
 
     kind = "trace"
 
-    def __init__(self, ring: RingSpec = RING64, variant=None):
+    def __init__(self, ring: RingSpec = RING64, variant=None,
+                 protocol: str = "2pc"):
         self.ring = ring
         self.variant = variant
+        self.protocol = protocol
 
     def fused(self, label):
         """No-op: the probe prices through MPCEngine, which batches for
@@ -46,20 +51,24 @@ class TraceEngine:
         `fusion.flight_scope`, exactly as the executor runs it).
         """
         ring = self.ring
+        proto = self.protocol
+        n_parties = protocols.get(proto).n_parties
         variant = self.variant if variant is None else variant
         key = jax.random.key(0) if key is None else key
 
         def fwd(pp, sh, k):
-            eng = MPCEngine(ring=ring, variant=variant).with_key(k)
+            eng = MPCEngine(ring=ring, variant=variant,
+                            protocol=proto).with_key(k)
             with fusion.flight_scope(enabled=fused):
-                return proxy_entropy(eng, pp, cfg, AShare(sh, ring), spec,
-                                     variant).sh
+                return proxy_entropy(eng, pp, cfg, Share(sh, ring, proto),
+                                     spec, variant).sh
 
         ctx = x64_scope() if ring.bits >= 64 else contextlib.nullcontext()
         with ctx, comm.ledger_scope() as led:
             jax.eval_shape(fwd, pp_sh,
-                           jax.ShapeDtypeStruct((2,) + tuple(batch_shape),
-                                                ring.dtype), key)
+                           jax.ShapeDtypeStruct(
+                               (n_parties,) + tuple(batch_shape),
+                               ring.dtype), key)
         return led
 
     def embed(self, pp, x_in, cfg):
@@ -71,16 +80,19 @@ class TraceEngine:
 
 
 def abstract_shares(cfg, spec, seq_len: int, n_classes: int,
-                    ring: RingSpec = RING64):
+                    ring: RingSpec = RING64, protocol: str = "2pc"):
     """ShapeDtypeStruct pytree shaped like `proxy.share_proxy`'s output
     (minus the embedding table, which the MPC forward never touches) —
-    lets `TraceEngine.probe` price paper-scale proxies for free."""
+    lets `TraceEngine.probe` price paper-scale proxies for free. The
+    leading party-axis size comes from the protocol backend."""
     dh, w = cfg.d_head, spec.n_heads
     wk = min(w, cfg.n_kv_heads)
     L, hid = spec.n_layers, spec.mlp_dim
+    p = protocols.get(protocol).n_parties
 
     def sh(*shape):
-        return AShare(jax.ShapeDtypeStruct((2,) + shape, ring.dtype), ring)
+        return Share(jax.ShapeDtypeStruct((p,) + shape, ring.dtype), ring,
+                     protocol)
 
     def mlp(d_in, d_out):
         return {"w1": sh(d_in, hid), "b1": sh(hid),

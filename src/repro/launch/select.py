@@ -13,12 +13,16 @@ executable share-level path, evaluated at the paper's geometry.
 
 --mode mpc runs Stage 2 through the wave executor (core/executor.py)
 with an MPCEngine interpreting the unified proxy forward; --ring 32
-switches the same code path onto the TPU-native RING32/dealer-trunc
-ring. --wave/--no-coalesce/--no-overlap select among Fig 7's four
-schedule variants at runtime, --fuse round-compresses the opening
-flights (mpc/fusion.py), and the output includes each phase's realized
-flight ledger plus its exact agreement with the makespan model.
-Re-runs resume from phase checkpoints (--no-resume disables).
+switches the same code path onto the TPU-native RING32 ring and
+--protocol {2pc,3pc} picks the secret-sharing backend (2pc: additive +
+trusted-dealer Beaver triples, offline bytes reported separately; 3pc:
+replicated 2-of-3, dealer-free — zero offline bytes).
+--wave/--no-coalesce/--no-overlap select among Fig 7's four schedule
+variants at runtime; openings/reshares are round-compressed into fused
+flights by default (mpc/fusion.py) — --eager disables the batcher. The
+output includes each phase's realized flight ledger plus its exact
+agreement with the makespan model. Re-runs resume from phase
+checkpoints (--no-resume disables).
 """
 from __future__ import annotations
 
@@ -84,8 +88,8 @@ def paper_scale_delay(n_pool: int, budget_frac: float, *, seq: int = 128,
 def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         mode: str = "clear", finetune_steps: int = 250, *,
         wave: int = 8, coalesce: bool = True, overlap: bool = True,
-        fuse: bool = False, score_batch: int = 64, ring_bits: int = 64,
-        resume: bool = True) -> dict:
+        fuse: bool = True, score_batch: int = 64, ring_bits: int = 64,
+        protocol: str = "2pc", resume: bool = True) -> dict:
     task = make_classification_task(seed, n_pool=n_pool, n_test=400,
                                     seq=16, vocab=256, n_classes=4)
     cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
@@ -93,7 +97,8 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
     params0 = tgt.init_classifier(key, cfg, task.n_classes)
 
     ring = RING32 if ring_bits == 32 else RING64
-    engine = MPCEngine(ring=ring) if mode == "mpc" else ClearEngine()
+    engine = MPCEngine(ring=ring, protocol=protocol) if mode == "mpc" \
+        else ClearEngine()
     ckpt_dir = os.path.join(tempfile.gettempdir(),
                             f"selectformer_phases_{getpass.getuser()}")
     sel = SelectionConfig(
@@ -103,7 +108,7 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         score_batch=score_batch,
         checkpoint_dir=ckpt_dir, resume=resume,
         executor=ExecConfig(wave=wave, coalesce=coalesce, overlap=overlap,
-                            fuse=fuse))
+                            fuse=fuse, protocol=protocol))
     t0 = time.time()
     res = run_selection(key, params0, cfg, task.pool_tokens, sel,
                         n_classes=task.n_classes,
@@ -124,9 +129,11 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
             executed["ledger_agrees"] &= rep.agrees()
             executed["phases"].append({
                 "n_batches": rep.n_batches, "n_waves": rep.n_waves,
+                "protocol": rep.protocol,
                 "lat_rounds": rep.ledger.lat_rounds,
                 "bw_rounds": rep.ledger.bw_rounds,
                 "nbytes": rep.ledger.nbytes,
+                "offline_nbytes": rep.ledger.offline_nbytes,
                 "makespan_wan_s": rep.makespan(WAN),
                 "wall_s": rep.wall_s})
 
@@ -166,20 +173,24 @@ def main() -> None:
                     help="disable latency-flight coalescing (fig7 'serial')")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable comm/compute double buffering")
-    ap.add_argument("--fuse", action="store_true",
-                    help="round-compress openings into fused flights "
-                         "(mpc/fusion.py flight batcher)")
+    ap.add_argument("--eager", action="store_true",
+                    help="disable the flight batcher (fused round "
+                         "compression is the default; mpc/fusion.py)")
     ap.add_argument("--ring", type=int, choices=[64, 32], default=64,
-                    help="MPC ring: 64 (CrypTen oracle) or 32 "
-                         "(TPU dealer-trunc)")
+                    help="MPC ring: 64 (CrypTen oracle) or 32 (TPU)")
+    ap.add_argument("--protocol", choices=["2pc", "3pc"], default="2pc",
+                    help="secret-sharing backend: 2pc (additive + "
+                         "trusted-dealer Beaver) or 3pc (replicated "
+                         "2-of-3, dealer-free)")
     ap.add_argument("--no-resume", action="store_true",
                     help="ignore existing phase checkpoints")
     args = ap.parse_args()
     out = run(args.seed, args.pool, args.budget, args.mode,
               wave=args.wave, coalesce=not args.no_coalesce,
-              overlap=not args.no_overlap, fuse=args.fuse,
+              overlap=not args.no_overlap, fuse=not args.eager,
               score_batch=args.score_batch,
-              ring_bits=args.ring, resume=not args.no_resume)
+              ring_bits=args.ring, protocol=args.protocol,
+              resume=not args.no_resume)
     if out["executed"] is not None:
         ex = out["executed"]
         ph = ex["phases"]

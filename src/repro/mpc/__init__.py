@@ -1,25 +1,34 @@
-"""2-party MPC substrate (CrypTen-style additive secret sharing).
+"""MPC substrate with pluggable secret-sharing protocol backends.
 
 Layout of this package:
 
   ring.py        fixed-point ring specs (int64/f16 CPU oracle, int32/f12 TPU)
-  sharing.py     AShare container (stacked party axis), share/open
-  beaver.py      trusted-dealer Beaver triples (elementwise + matmul)
+  sharing.py     protocol-generic Share container (stacked party axis),
+                 share/open routed through the backend
+  protocols/     the backends: additive2pc (CrypTen-style dealer Beaver)
+                 and replicated3pc (2-of-3 replicated, dealer-free)
+  beaver.py      back-compat re-export of the 2pc dealer
   ops.py         linear algebra over shares: add/sub/mul/matmul/trunc
   compare.py     secure comparison (ideal-functionality semantics,
                  protocol-accurate cost: 8 rounds / 432 B per scalar)
   nonlinear.py   CrypTen-style baselines: exp, reciprocal, rsqrt, softmax,
-                 log, gelu/relu, layernorm — built from Beaver muls
+                 log, gelu/relu, layernorm — built from secure muls
   quickselect.py top-k index selection over encrypted scores
-  comm.py        cost ledger + network profiles + delay model
-  costs.py       analytic per-op cost formulas (drive fig2/fig6/fig7)
+  comm.py        cost ledger (online + offline dealer channels) +
+                 network profiles + delay model
+  costs.py       analytic per-op cost formulas (drive fig2/fig6/fig7),
+                 ring- and protocol-parameterized
+  fusion.py      flight batcher: round compression of opening/resharing
+                 flights
 
-Security model: semi-honest 2PC with a trusted dealer (crypto provider),
-identical to CrypTen. Comparison is modeled as an ideal functionality with
-the real protocol's communication cost (see DESIGN.md §8) — the selection
-pipeline only ever reveals comparison *bits*, matching the paper.
+Security models: semi-honest 2PC with a trusted dealer (crypto
+provider), identical to CrypTen — or honest-majority semi-honest 3PC
+over replicated shares with no dealer at all. Comparison is modeled as
+an ideal functionality with the real protocol's communication cost (see
+DESIGN.md §8) — the selection pipeline only ever reveals comparison
+*bits*, matching the paper.
 """
 from repro.mpc.ring import RingSpec, RING64, RING32
-from repro.mpc.sharing import AShare, share, open_, reveal
+from repro.mpc.sharing import AShare, Share, share, open_, reveal
 from repro.mpc.comm import Ledger, NetProfile, WAN, POD_DCN, get_ledger, ledger_scope
-from repro.mpc import ops, nonlinear, compare, beaver, quickselect, costs
+from repro.mpc import ops, nonlinear, compare, beaver, protocols, quickselect, costs

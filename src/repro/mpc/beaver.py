@@ -1,72 +1,13 @@
-"""Trusted-dealer (crypto provider) Beaver triple generation.
+"""Trusted-dealer correlated randomness — back-compat re-export.
 
-Same trust model as CrypTen: an offline dealer samples correlated
-randomness and additively shares it to the two parties. Online cost of a
-multiplication is then a single simultaneous opening of (eps, delta).
+The dealer moved into the additive-2PC protocol backend
+(`mpc/protocols/additive2pc.py`), where it belongs: Beaver triples and
+truncation pairs are an artifact of THAT trust model, not of the MPC
+substrate. The replicated-3PC backend has no dealer at all. This module
+keeps the historic import path (`from repro.mpc import beaver`) alive.
 
-The dealer is a PRNG-keyed pure function so triples are reproducible and
-jit-friendly; in deployment the dealer seed lives on the crypto-provider
-host and shares are streamed ahead of the online phase (their bytes are
-accounted as offline cost, reported separately by the benchmarks).
+Dealer-shipped bytes are recorded into the ambient ledger's offline
+channel (`tag="offline"`) at generation time — see `Ledger.offline_nbytes`.
 """
-from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
-
-from repro.mpc.ring import RingSpec
-from repro.mpc.sharing import AShare
-
-
-def _share_raw(key: jax.Array, enc: jax.Array, ring: RingSpec) -> jax.Array:
-    r = ring.rand(key, enc.shape)
-    return jnp.stack([r, enc - r])
-
-
-def mul_triple(key: jax.Array, shape, ring: RingSpec) -> tuple[AShare, AShare, AShare]:
-    """Elementwise triple: a*b = c (c at 2*frac scale — consumed pre-trunc)."""
-    ka, kb, k1, k2, k3 = jax.random.split(key, 5)
-    a = ring.rand(ka, shape)
-    b = ring.rand(kb, shape)
-    c = a * b   # ring product, wraps mod 2**bits
-    return (AShare(_share_raw(k1, a, ring), ring),
-            AShare(_share_raw(k2, b, ring), ring),
-            AShare(_share_raw(k3, c, ring), ring))
-
-
-def matmul_triple(key: jax.Array, a_shape, b_shape, ring: RingSpec,
-                  dimension_numbers=None) -> tuple[AShare, AShare, AShare]:
-    """Matrix triple A@B = C for arbitrary batched matmul shapes."""
-    ka, kb, k1, k2, k3 = jax.random.split(key, 5)
-    a = ring.rand(ka, a_shape)
-    b = ring.rand(kb, b_shape)
-    c = jnp.matmul(a, b, preferred_element_type=ring.dtype)
-    return (AShare(_share_raw(k1, a, ring), ring),
-            AShare(_share_raw(k2, b, ring), ring),
-            AShare(_share_raw(k3, c, ring), ring))
-
-
-def trunc_pair(key: jax.Array, shape, ring: RingSpec) -> tuple[AShare, AShare]:
-    """Dealer-assisted truncation pair (r, r >> f) — SecureML-style.
-
-    Exact (±1 LSB) truncation for the int32 TPU ring where local
-    truncation's wrap probability is too high.
-    """
-    kr, k1, k2 = jax.random.split(key, 3)
-    # r drawn from the "safe" range [0, 2**(bits-2)) to avoid sign wrap
-    r = (ring.rand(kr, shape).astype(jnp.uint32 if ring.bits == 32 else jnp.uint64)
-         >> 2).astype(ring.dtype)
-    r_t = r >> ring.frac_bits    # arithmetic shift of non-negative r
-    return (AShare(_share_raw(k1, r, ring), ring),
-            AShare(_share_raw(k2, r_t, ring), ring))
-
-
-def triple_bytes(a_shape, b_shape, c_shape, ring: RingSpec) -> int:
-    """Offline bytes the dealer ships for one triple (both parties)."""
-    n = 1
-    for s in (a_shape, b_shape, c_shape):
-        m = 1
-        for d in s:
-            m *= int(d)
-        n += m
-    return 2 * ring.elem_bytes * n
+from repro.mpc.protocols.additive2pc import (  # noqa: F401
+    matmul_triple, mul_triple, triple_bytes, trunc_pair)

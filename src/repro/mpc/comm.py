@@ -45,6 +45,7 @@ class CostRecord:
     numel: int = 0
     flops: int = 0       # local per-party compute, for the overlap model
     tag: str = ""        # scheduler class: "bw" (bandwidth-bound) | "lat"
+                         # | "offline" (dealer bytes, streamed pre-phase)
     wave: int = 1        # batches serviced by this flight (executor waves)
 
 
@@ -64,7 +65,16 @@ class Ledger:
 
     @property
     def nbytes(self) -> int:
-        return sum(r.nbytes for r in self.records)
+        """Online bytes-on-wire. Offline (dealer) bytes are a separate
+        channel: streamed ahead of the phase, priced by
+        `offline_nbytes`, never by the delay model."""
+        return sum(r.nbytes for r in self.records if r.tag != "offline")
+
+    @property
+    def offline_nbytes(self) -> int:
+        """Dealer-shipped correlated-randomness bytes (Beaver triples,
+        truncation pairs). Zero for dealer-free backends (3pc)."""
+        return sum(r.nbytes for r in self.records if r.tag == "offline")
 
     @property
     def flops(self) -> int:

@@ -3,20 +3,24 @@
 Protocol: modeled as an ideal functionality with the *real* protocol's
 communication cost, exactly as stated by the paper (§4.1): one pairwise
 comparison of two secret values costs 8 communication rounds and 432
-bytes, and reveals only the binary outcome.
+bytes, and reveals only the binary outcome. The same functionality cost
+is charged on every protocol backend (2pc binary-share conversion and
+3pc bit-decomposition land in the same ballpark; the ledger mirror in
+mpc/costs.py charges the identical record either way).
 
-Implementation note (DESIGN.md §8): real 2PC comparison needs binary
-share conversion (B2A/edaBits). Semantics here are computed from the
-summed shares *inside the functionality boundary* — the returned object
-is either an AShare of the bit (private outcome, used by ReLU/max) or a
+Implementation note (DESIGN.md §8): real comparison needs binary share
+conversion (B2A/edaBits). Semantics here are computed from the summed
+components *inside the functionality boundary* — the returned object is
+either a Share of the bit (private outcome, used by ReLU/max) or a
 revealed bool (public outcome, used by QuickSelect ranking, which the
-paper explicitly reveals).
+paper explicitly reveals). Outputs inherit the input's protocol
+backend.
 """
 from __future__ import annotations
 
 import jax
 
-from repro.mpc.sharing import AShare, share_encoded
+from repro.mpc.sharing import Share, reconstruct, share_encoded
 from repro.mpc import comm, ops
 
 CMP_ROUNDS = 8          # paper §4.1
@@ -30,54 +34,54 @@ def _numel(shape) -> int:
     return n
 
 
-def lt_zero(x: AShare, key: jax.Array) -> AShare:
+def lt_zero(x: Share, key: jax.Array) -> Share:
     """Shares of the bit [x < 0] (bit encoded at fixed-point scale 1.0)."""
     n = _numel(x.shape)
     comm.record("secure_cmp", rounds=CMP_ROUNDS, nbytes=CMP_BYTES * n,
                 numel=n, tag="lat")
-    v = x.sh[0] + x.sh[1]                      # functionality boundary
+    v = reconstruct(x.sh)                      # functionality boundary
     bit = (v < 0).astype(x.ring.dtype) * x.ring.scale
-    return share_encoded(key, bit, x.ring)
+    return share_encoded(key, bit, x.ring, x.proto)
 
 
-def le(x: AShare, y: AShare, key: jax.Array) -> AShare:
+def le(x: Share, y: Share, key: jax.Array) -> Share:
     return lt_zero(ops.sub(x, y), key)
 
 
-def reveal_lt(x: AShare, y: AShare) -> jax.Array:
+def reveal_lt(x: Share, y: Share) -> jax.Array:
     """Public bit x<y — what QuickSelect consumes (outcome revealed)."""
     d = ops.sub(x, y)
     n = _numel(d.shape)
     comm.record("secure_cmp_reveal", rounds=CMP_ROUNDS, nbytes=CMP_BYTES * n,
                 numel=n, tag="lat")
-    return (d.sh[0] + d.sh[1]) < 0
+    return reconstruct(d.sh) < 0
 
 
-def relu(x: AShare, key: jax.Array) -> AShare:
-    """ReLU(x) = x * [x >= 0]: one comparison + one Beaver multiply."""
+def relu(x: Share, key: jax.Array) -> Share:
+    """ReLU(x) = x * [x >= 0]: one comparison + one secure multiply."""
     kb, km = jax.random.split(key)
     neg_bit = lt_zero(x, kb)
     pos_bit = ops.add_public(ops.neg(neg_bit), 1.0)
     return ops.mul(x, pos_bit, km)
 
 
-def max_(x: AShare, axis: int, key: jax.Array) -> AShare:
+def max_(x: Share, axis: int, key: jax.Array) -> Share:
     """Tournament max along an axis: log2(n) comparison rounds."""
-    n = x.shape[axis]
     cur = x
     i = 0
     while cur.shape[axis] > 1:
         m = cur.shape[axis]
         half = m // 2
         ax = axis + 1 if axis >= 0 else axis
-        lo = AShare(jax.lax.slice_in_dim(cur.sh, 0, half, axis=ax), x.ring)
-        hi = AShare(jax.lax.slice_in_dim(cur.sh, half, 2 * half, axis=ax), x.ring)
+        lo = x.with_sh(jax.lax.slice_in_dim(cur.sh, 0, half, axis=ax))
+        hi = x.with_sh(jax.lax.slice_in_dim(cur.sh, half, 2 * half, axis=ax))
         kb, km, key = jax.random.split(jax.random.fold_in(key, i), 3)
         b = le(lo, hi, kb)                      # [lo < hi]
         diff = ops.sub(hi, lo)
         mx = ops.add(lo, ops.mul(b, diff, km))  # lo + b*(hi-lo)
         if m % 2:
-            tail = AShare(jax.lax.slice_in_dim(cur.sh, 2 * half, m, axis=ax), x.ring)
+            tail = x.with_sh(jax.lax.slice_in_dim(cur.sh, 2 * half, m,
+                                                  axis=ax))
             mx = ops.concat([mx, tail], axis=axis)
         cur = mx
         i += 1

@@ -13,7 +13,17 @@ Ring parameterization: the primitive helpers take an optional RingSpec.
 RING64 (default) truncates locally — free, no record, CrypTen's choice.
 RING32 (the TPU ring) uses dealer-assisted truncation: every fixed-point
 product pays one extra opening round (`trunc_open`), mirrored here
-record-for-record against `ops.trunc`'s dealer path.
+record-for-record against the dealer path of `Additive2PC.trunc`.
+
+Protocol parameterization: the same primitives take `protocol=`
+("2pc"/"3pc") and mirror the chosen backend's records exactly:
+  2pc  Beaver opening flights (bytes ~ inputs) + dealer bytes in the
+       OFFLINE channel (tag="offline", 0 rounds: triples and, on
+       RING32, truncation pairs) in the positions the executable dealer
+       records them.
+  3pc  one resharing flight per mul/matmul (bytes ~ OUTPUT), no
+       truncation records at all (probabilistic local trunc), zero
+       offline records — the dealer-free cost profile.
 """
 from __future__ import annotations
 
@@ -35,6 +45,13 @@ def _led(*recs: CostRecord) -> Ledger:
     return led
 
 
+def _offline(n_elems: int, op: str, ring: RingSpec) -> CostRecord:
+    """Dealer-shipped correlated randomness (mirrors
+    additive2pc._record_offline): 0 rounds, both parties' components."""
+    return CostRecord(op, 0, 2 * ring.elem_bytes * n_elems, n_elems, 0,
+                      "offline")
+
+
 def merge(*ledgers: Ledger) -> Ledger:
     out = Ledger()
     for led in ledgers:
@@ -46,31 +63,50 @@ def merge(*ledgers: Ledger) -> Ledger:
 # primitive costs
 # ---------------------------------------------------------------------------
 
-def open_cost(n: int, op: str = "open", *, ring: RingSpec = RING64) -> Ledger:
-    return _led(CostRecord(op, 1, 2 * ring.elem_bytes * n, n, 0, "bw"))
+def open_cost(n: int, op: str = "open", *, ring: RingSpec = RING64,
+              protocol: str = "2pc") -> Ledger:
+    parties = 3 if protocol == "3pc" else 2
+    return _led(CostRecord(op, 1, parties * ring.elem_bytes * n, n, 0, "bw"))
 
 
 def trunc_cost(n: int, op: str = "trunc_open", *,
-               ring: RingSpec = RING64) -> Ledger:
-    """Fixed-point truncation after a product: free on RING64 (local
-    arithmetic shift), one dealer-pair opening on RING32 (ops.trunc)."""
-    if ring.bits >= 64:
+               ring: RingSpec = RING64, protocol: str = "2pc") -> Ledger:
+    """Fixed-point truncation after a product: free on 2pc/RING64 (local
+    arithmetic shift) and on 3pc both rings (probabilistic local trunc);
+    one dealer-pair opening — offline pair bytes + a trunc_open flight —
+    on 2pc/RING32 (Additive2PC.trunc)."""
+    if protocol == "3pc" or ring.bits >= 64:
         return Ledger()
-    return _led(CostRecord(op, 1, 2 * ring.elem_bytes * n, n, 0, "bw"))
+    return _led(_offline(2 * n, op + ".pair", ring),
+                CostRecord(op, 1, 2 * ring.elem_bytes * n, n, 0, "bw"))
 
 
 def mul_cost(n: int, op: str = "beaver_mul", *,
-             ring: RingSpec = RING64) -> Ledger:
-    return merge(_led(CostRecord(op, 1, 4 * ring.elem_bytes * n, n,
+             ring: RingSpec = RING64, protocol: str = "2pc") -> Ledger:
+    if protocol == "3pc":
+        # local cross-terms + one resharing flight; no triple, no trunc
+        return _led(CostRecord(op, 1, 3 * ring.elem_bytes * n, n,
+                               6 * n, "bw"))
+    return merge(_led(_offline(3 * n, op + ".triple", ring),
+                      CostRecord(op, 1, 4 * ring.elem_bytes * n, n,
                                  4 * n, "bw")),
                  trunc_cost(n, op + ".trunc", ring=ring))
 
 
 def matmul_cost(batch: int, m: int, k: int, n: int,
                 op: str = "beaver_matmul", *,
-                ring: RingSpec = RING64) -> Ledger:
-    nbytes = 2 * ring.elem_bytes * batch * (m * k + k * n)
-    return merge(_led(CostRecord(op, 1, nbytes, batch * (m * k + k * n),
+                ring: RingSpec = RING64, protocol: str = "2pc") -> Ledger:
+    if protocol == "3pc":
+        # resharing flight of the OUTPUT: bytes ~ batch*m*n (the inverse
+        # of Beaver's input-proportional wire profile)
+        out_elems = batch * m * n
+        return _led(CostRecord(op, 1, 3 * ring.elem_bytes * out_elems,
+                               out_elems, 6 * batch * m * k * n, "bw"))
+    in_elems = batch * (m * k + k * n)
+    nbytes = 2 * ring.elem_bytes * in_elems
+    return merge(_led(_offline(in_elems + batch * m * n, op + ".triple",
+                               ring),
+                      CostRecord(op, 1, nbytes, in_elems,
                                  2 * batch * m * k * n, "bw")),
                  trunc_cost(batch * m * n, op + ".trunc", ring=ring))
 
@@ -79,8 +115,10 @@ def cmp_cost(n: int, op: str = "secure_cmp") -> Ledger:
     return _led(CostRecord(op, CMP_ROUNDS, CMP_BYTES * n, n, 0, "lat"))
 
 
-def relu_cost(n: int, op: str = "relu", *, ring: RingSpec = RING64) -> Ledger:
-    return merge(cmp_cost(n, op + ".cmp"), mul_cost(n, op + ".mul", ring=ring))
+def relu_cost(n: int, op: str = "relu", *, ring: RingSpec = RING64,
+              protocol: str = "2pc") -> Ledger:
+    return merge(cmp_cost(n, op + ".cmp"),
+                 mul_cost(n, op + ".mul", ring=ring, protocol=protocol))
 
 
 def exp_cost(n: int, op: str = "exp") -> Ledger:
@@ -156,11 +194,15 @@ def entropy_cost(rows: int, classes: int, op: str = "entropy") -> Ledger:
 # ---------------------------------------------------------------------------
 
 def mlp_cost(rows: int, d_in: int, hidden: int, d_out: int,
-             op: str = "mlp", *, ring: RingSpec = RING64) -> Ledger:
+             op: str = "mlp", *, ring: RingSpec = RING64,
+             protocol: str = "2pc") -> Ledger:
     """Linear(d_in->h) + ReLU(h) + Linear(h->d_out), private weights."""
-    return merge(matmul_cost(1, rows, d_in, hidden, op + ".fc1", ring=ring),
-                 relu_cost(rows * hidden, op + ".relu", ring=ring),
-                 matmul_cost(1, rows, hidden, d_out, op + ".fc2", ring=ring))
+    return merge(matmul_cost(1, rows, d_in, hidden, op + ".fc1", ring=ring,
+                             protocol=protocol),
+                 relu_cost(rows * hidden, op + ".relu", ring=ring,
+                           protocol=protocol),
+                 matmul_cost(1, rows, hidden, d_out, op + ".fc2", ring=ring,
+                             protocol=protocol))
 
 
 # ---------------------------------------------------------------------------
@@ -256,7 +298,7 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
                     kv_heads: int, d_head: int, mlp_hidden: int,
                     classes: int, n_layers: int,
                     op: str = "exec", *, ring: RingSpec = RING64,
-                    fused: bool = False) -> Ledger:
+                    protocol: str = "2pc", fused: bool = False) -> Ledger:
     """EXACT mirror of the engine forward's share-level op stream.
 
     Record-for-record prediction of what one batch of the executable
@@ -272,6 +314,10 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
     RING64). Biases add no wire cost, so the formulas hold with or
     without them.
 
+    `protocol="3pc"` mirrors the replicated-sharing stream: resharing
+    flights (output-proportional bytes) in place of Beaver openings,
+    no truncation records on either ring, and an empty offline channel.
+
     `fused=True` mirrors the round-compressed stream instead: the eager
     event stream below — with GroupBegin/GroupEnd markers placed exactly
     where `engine/forward.py` opens its `eng.fused` groups — is replayed
@@ -284,6 +330,7 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
     w, wk = heads, min(kv_heads, heads)
     t = bsz * seq
     events: list = []
+    kw = dict(ring=ring, protocol=protocol)
 
     def ext(led: Ledger) -> None:
         events.extend(led.records)
@@ -293,29 +340,29 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
         # multiply), rsqrt emulated, then normalize-and-affine
         # multiplies against shared gamma
         events.append(fusion.GroupBegin("ln_stats"))
-        ext(trunc_cost(t, f"{op}.ln.mu.trunc", ring=ring))
-        ext(mul_cost(t * d_model, f"{op}.ln.var", ring=ring))
-        ext(trunc_cost(t, f"{op}.ln.var_mean.trunc", ring=ring))
+        ext(trunc_cost(t, f"{op}.ln.mu.trunc", **kw))
+        ext(mul_cost(t * d_model, f"{op}.ln.var", **kw))
+        ext(trunc_cost(t, f"{op}.ln.var_mean.trunc", **kw))
         events.append(fusion.GROUP_END)
-        ext(mlp_cost(t, 1, mlp_hidden, 1, f"{op}.mlp_ln", ring=ring))
-        ext(mul_cost(t * d_model, f"{op}.ln.normmul", ring=ring))
-        ext(mul_cost(t * d_model, f"{op}.ln.affine", ring=ring))
-        # pruned attention: per-projection Beaver matmuls
+        ext(mlp_cost(t, 1, mlp_hidden, 1, f"{op}.mlp_ln", **kw))
+        ext(mul_cost(t * d_model, f"{op}.ln.normmul", **kw))
+        ext(mul_cost(t * d_model, f"{op}.ln.affine", **kw))
+        # pruned attention: per-projection secure matmuls
         events.append(fusion.GroupBegin("qkv"))
-        ext(matmul_cost(1, t, d_model, w * d_head, f"{op}.q", ring=ring))
-        ext(matmul_cost(1, t, d_model, wk * d_head, f"{op}.k", ring=ring))
-        ext(matmul_cost(1, t, d_model, wk * d_head, f"{op}.v", ring=ring))
+        ext(matmul_cost(1, t, d_model, w * d_head, f"{op}.q", **kw))
+        ext(matmul_cost(1, t, d_model, wk * d_head, f"{op}.k", **kw))
+        ext(matmul_cost(1, t, d_model, wk * d_head, f"{op}.v", **kw))
         events.append(fusion.GROUP_END)
-        ext(matmul_cost(bsz * w, seq, d_head, seq, f"{op}.scores", ring=ring))
+        ext(matmul_cost(bsz * w, seq, d_head, seq, f"{op}.scores", **kw))
         ext(trunc_cost(bsz * w * seq * seq, f"{op}.scores.scale.trunc",
-                       ring=ring))
+                       **kw))
         ext(mlp_cost(bsz * w * seq, seq, mlp_hidden, seq, f"{op}.mlp_sm",
-                     ring=ring))
-        ext(matmul_cost(bsz * w, seq, seq, d_head, f"{op}.av", ring=ring))
-        ext(matmul_cost(1, t, w * d_head, d_model, f"{op}.out", ring=ring))
-    ext(trunc_cost(bsz * d_model, f"{op}.pool.trunc", ring=ring))
-    ext(matmul_cost(1, bsz, d_model, classes, f"{op}.head", ring=ring))
-    ext(mlp_cost(bsz, classes, mlp_hidden, 1, f"{op}.mlp_se", ring=ring))
+                     **kw))
+        ext(matmul_cost(bsz * w, seq, seq, d_head, f"{op}.av", **kw))
+        ext(matmul_cost(1, t, w * d_head, d_model, f"{op}.out", **kw))
+    ext(trunc_cost(bsz * d_model, f"{op}.pool.trunc", **kw))
+    ext(matmul_cost(1, bsz, d_model, classes, f"{op}.head", **kw))
+    ext(mlp_cost(bsz, classes, mlp_hidden, 1, f"{op}.mlp_se", **kw))
     if fused:
         return fusion.compress_events(events)
     led = Ledger()

@@ -31,10 +31,17 @@ untouched:
                      flight: rounds paid once, bytes summed.
 
 Legality: a group may share a flight iff no message in it depends on
-another message of the same flight being received first. Chains of
+another message of the same flight being received first. The argument
+is per protocol backend (mpc/protocols/): additive-2PC chains of
 mul/mul_public/trunc qualify under the deferred-reconstruction
 convention above (parties exchange only mask components and apply the
-public adjustments locally); comparisons never do — hence the barrier.
+public adjustments locally); replicated-3PC resharing messages are
+locally computable before their flight departs, so independent groups
+(qkv, ln_stats) batch identically — the batcher itself is
+scheme-agnostic because every backend marks its deferrable flights
+tag="bw". Comparisons never qualify — hence the barrier. Dealer
+(tag="offline") records are not flights at all: they pass through to
+the ledger's offline channel without flushing anything.
 
 Everything here is accounting: the batcher intercepts `comm.record`
 calls, so the PRNG key stream, the dealer triples, and every share an
@@ -121,6 +128,10 @@ class FlightBatcher:
         """Offer one record. True -> deferred (caller must not ledger it);
         False -> caller records eagerly (after any barrier flush)."""
         if self._suspended:
+            return False
+        if tag == "offline":
+            # dealer bytes never ride the online wire: not a flight, not
+            # a barrier — land in the ledger's offline channel as-is
             return False
         if tag == "lat":
             if self._in_lat_group:

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.mpc.sharing import AShare, from_public
+from repro.mpc.sharing import Share, from_public
 from repro.mpc import ops, compare
 
 EXP_ITERS = 8
@@ -28,7 +28,7 @@ RSQRT_ITERS = 10
 LOG_ITERS = 8
 
 
-def exp(x: AShare, key: jax.Array) -> AShare:
+def exp(x: Share, key: jax.Array) -> Share:
     """(1 + x/2**t)**(2**t): t sequential squarings = t rounds."""
     y = ops.add_public(ops.mul_public(x, 1.0 / (1 << EXP_ITERS),
                                       key=jax.random.fold_in(key, 99)), 1.0)
@@ -37,7 +37,7 @@ def exp(x: AShare, key: jax.Array) -> AShare:
     return y
 
 
-def reciprocal(x: AShare, key: jax.Array) -> AShare:
+def reciprocal(x: Share, key: jax.Array) -> Share:
     """NR iterations y <- y(2 - x y); init 3 exp(0.5 - x) + 0.003."""
     k0, key = jax.random.split(key)
     init = ops.add_public(
@@ -53,7 +53,7 @@ def reciprocal(x: AShare, key: jax.Array) -> AShare:
     return y
 
 
-def rsqrt(x: AShare, key: jax.Array) -> AShare:
+def rsqrt(x: Share, key: jax.Array) -> Share:
     """NR for 1/sqrt(x): y <- y(3 - x y^2)/2, init 3*exp(-(x/2+0.2))+0.2."""
     k0, key = jax.random.split(key)
     init = ops.add_public(
@@ -74,7 +74,7 @@ def rsqrt(x: AShare, key: jax.Array) -> AShare:
     return y
 
 
-def log(x: AShare, key: jax.Array) -> AShare:
+def log(x: Share, key: jax.Array) -> Share:
     """Householder iterations: y <- y - 1 + x*exp(-y) (order-1 form)."""
     y = ops.add_public(ops.mul_public(x, 1.0 / 120.0,
                                       key=jax.random.fold_in(key, 95)), 2.0)
@@ -87,36 +87,36 @@ def log(x: AShare, key: jax.Array) -> AShare:
     return y
 
 
-def softmax(x: AShare, key: jax.Array, axis: int = -1,
-            stabilize: bool = True) -> AShare:
+def softmax(x: Share, key: jax.Array, axis: int = -1,
+            stabilize: bool = True) -> Share:
     """CrypTen softmax: subtract max (comparison tree), exp, normalize."""
     kmax, kexp, krec, kmul, key = jax.random.split(key, 5)
     if stabilize:
         mx = compare.max_(x, axis=axis, key=kmax)
-        x = ops.sub(x, AShare(jnp.broadcast_to(mx.sh, x.sh.shape), x.ring))
+        x = ops.sub(x, x.with_sh(jnp.broadcast_to(mx.sh, x.sh.shape)))
     e = exp(x, kexp)
     s = ops.sum_(e, axis=axis, keepdims=True)
     r = reciprocal(s, krec)
-    return ops.mul(e, AShare(jnp.broadcast_to(r.sh, e.sh.shape), e.ring), kmul)
+    return ops.mul(e, e.with_sh(jnp.broadcast_to(r.sh, e.sh.shape)), kmul)
 
 
-def layernorm(x: AShare, gamma, beta, key: jax.Array, eps: float = 1e-5) -> AShare:
+def layernorm(x: Share, gamma, beta, key: jax.Array, eps: float = 1e-5) -> Share:
     """LayerNorm with NR-rsqrt for the variance reciprocal sqrt."""
     kvar, krs, kmul, kaff = jax.random.split(key, 4)
     d = x.shape[-1]
     mu = ops.mean(x, axis=-1, key=jax.random.fold_in(key, 94))
-    xc = ops.sub(x, AShare(jnp.broadcast_to(mu.sh[..., None], x.sh.shape), x.ring))
+    xc = ops.sub(x, x.with_sh(jnp.broadcast_to(mu.sh[..., None], x.sh.shape)))
     var = ops.mean(ops.square(xc, kvar), axis=-1,
                    key=jax.random.fold_in(key, 93))
     inv = rsqrt(ops.add_public(var, eps), krs)
-    xn = ops.mul(xc, AShare(jnp.broadcast_to(inv.sh[..., None], xc.sh.shape), x.ring),
+    xn = ops.mul(xc, xc.with_sh(jnp.broadcast_to(inv.sh[..., None], xc.sh.shape)),
                  kmul)
     out = ops.mul_public(xn, gamma, key=kaff)
     return ops.add(out, from_public(jnp.broadcast_to(jnp.asarray(beta), out.shape),
-                                    out.ring))
+                                    out.ring, out.proto))
 
 
-def entropy_from_logits(logits: AShare, key: jax.Array) -> AShare:
+def entropy_from_logits(logits: Share, key: jax.Array) -> Share:
     """H = -sum p log p over the class axis — the Oracle's scoring op."""
     ksm, klog, kmul, key = jax.random.split(key, 4)
     p = softmax(logits, ksm, axis=-1)
@@ -125,7 +125,7 @@ def entropy_from_logits(logits: AShare, key: jax.Array) -> AShare:
     return ops.neg(ops.sum_(plp, axis=-1))
 
 
-def gelu(x: AShare, key: jax.Array) -> AShare:
+def gelu(x: Share, key: jax.Array) -> Share:
     """Quad approximation (MPCFormer uses this for the *baseline* models)."""
     k1, k2 = jax.random.split(key)
     x2 = ops.square(x, k1)

@@ -1,238 +1,148 @@
-"""Linear algebra over additive shares.
+"""Linear algebra over secret shares — protocol-generic.
+
+Everything here works on any `sharing.Share` regardless of backend:
+local linear ops transform the stacked components directly (party-axis
+size is whatever the protocol dictates), while every scheme-dependent
+op (multiplication, matmul, truncation) dispatches to the share's
+`ProtocolBackend` (mpc/protocols/).
 
 Cost accounting notes (all recorded into the ambient Ledger):
   add/sub/neg/sum/mean-by-constant ......... local, 0 rounds
   mul_public/matmul_public ................. local + trunc
-  mul (Beaver) ............................. 1 round: open(eps)+open(delta)
-  matmul (Beaver matrix triple) ............ 1 round
-  trunc local .............................. 0 rounds (RING64 path)
-  trunc dealer-assisted .................... 1 round (RING32/TPU path)
+  mul / matmul, 2pc (Beaver) ............... 1 round: open(eps)+open(delta)
+                                             + offline dealer bytes
+  mul / matmul, 3pc (replicated) ........... 1 round: resharing flight,
+                                             no dealer, no offline bytes
+  trunc, 2pc RING64 / 3pc both rings ....... 0 rounds (local)
+  trunc, 2pc RING32 (dealer-assisted) ...... 1 round + offline pair
 
-Under an ambient `fusion.flight_scope` every one of these openings is
-deferred into the current fused flight instead of paying its own round
-(mpc/fusion.py); the arithmetic below never changes. `mul`/`matmul`/
-`mul_public` additionally take `lazy=True` to return the untruncated
-product as a `fusion.PendingShare` tagged with its truncation key —
-`force()` applies the identical truncation later, letting a caller hold
-the pending-trunc state across a fused group.
+Under an ambient `fusion.flight_scope` every 1-round opening/resharing
+is deferred into the current fused flight instead of paying its own
+round (mpc/fusion.py); the arithmetic below never changes. `mul`/
+`matmul`/`mul_public` additionally take `lazy=True` to return the
+untruncated product as a `fusion.PendingShare` tagged with its
+truncation key — `force()` applies the identical truncation later,
+letting a caller hold the pending-trunc state across a fused group.
 
-All integer arithmetic relies on XLA's modular two's-complement semantics,
-which *is* ring arithmetic mod 2**bits.
+All integer arithmetic relies on XLA's modular two's-complement
+semantics, which *is* ring arithmetic mod 2**bits.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.mpc.ring import RingSpec
-from repro.mpc.sharing import AShare
-from repro.mpc import beaver, comm, fusion
-
-
-def _numel(shape) -> int:
-    n = 1
-    for d in shape:
-        n *= int(d)
-    return n
-
-
-def _open_flight(op: str, tensors, ring: RingSpec, *, numel: int,
-                 flops: int = 0, tag: str = "bw"):
-    """Open masked share tensors in ONE simultaneous message flight.
-
-    All tensors of a flight ride the same round trip (each party sends
-    its shares of every tensor at once), so the flight costs 1 round and
-    2 * elem_bytes * total-elements on the wire. This is the unit the
-    wave executor schedules: under comm.wave_scope the flight's bytes
-    scale with the wave while latency-bound flights keep their rounds.
-    """
-    wire_elems = sum(_numel(t.shape[1:]) for t in tensors)
-    comm.record(op, rounds=1, nbytes=2 * ring.elem_bytes * wire_elems,
-                numel=numel, flops=flops, tag=tag)
-    return tuple(t[0] + t[1] for t in tensors)
+from repro.mpc.sharing import Share
+from repro.mpc import fusion
 
 
 # ---------------------------------------------------------------------------
-# local (round-free) ops
+# local (round-free) ops — party-axis generic
 # ---------------------------------------------------------------------------
 
-def add(x: AShare, y: AShare) -> AShare:
-    return AShare(x.sh + y.sh, x.ring)
+def add(x: Share, y: Share) -> Share:
+    return x.with_sh(x.sh + y.sh)
 
 
-def sub(x: AShare, y: AShare) -> AShare:
-    return AShare(x.sh - y.sh, x.ring)
+def sub(x: Share, y: Share) -> Share:
+    return x.with_sh(x.sh - y.sh)
 
 
-def neg(x: AShare) -> AShare:
-    return AShare(-x.sh, x.ring)
+def neg(x: Share) -> Share:
+    return x.with_sh(-x.sh)
 
 
-def add_public(x: AShare, v) -> AShare:
+def add_public(x: Share, v) -> Share:
+    """Add a public constant: component 0 absorbs it (every backend's
+    `from_public` convention)."""
     enc = x.ring.encode(jnp.asarray(v))
-    pub = jnp.stack([jnp.broadcast_to(enc, x.shape),
-                     jnp.zeros(x.shape, x.ring.dtype)])
-    return AShare(x.sh + pub, x.ring)
+    return x.with_sh(x.sh.at[0].add(jnp.broadcast_to(enc, x.shape)))
 
 
-def mul_public(x: AShare, v, *, key: jax.Array | None = None,
+def mul_public(x: Share, v, *, key: jax.Array | None = None,
                lazy: bool = False):
     """Multiply by a public float tensor; needs one truncation."""
     enc = x.ring.encode(jnp.asarray(v))
-    z = AShare(x.sh * enc, x.ring)
+    z = x.with_sh(x.sh * enc)
     if lazy:
         return fusion.PendingShare(z, key)
     return trunc(z, key=key)
 
 
-def mul_public_int(x: AShare, v: int) -> AShare:
+def mul_public_int(x: Share, v: int) -> Share:
     """Multiply by a public *integer* — exact, no truncation."""
-    return AShare(x.sh * jnp.asarray(v, x.ring.dtype), x.ring)
+    return x.with_sh(x.sh * jnp.asarray(v, x.ring.dtype))
 
 
-def matmul_public(x: AShare, w, *, key: jax.Array | None = None,
-                  w_encoded: jax.Array | None = None) -> AShare:
-    """x @ w with public (already known to both parties) w."""
+def matmul_public(x: Share, w, *, key: jax.Array | None = None,
+                  w_encoded: jax.Array | None = None) -> Share:
+    """x @ w with public (already known to all parties) w."""
     enc = w_encoded if w_encoded is not None else x.ring.encode(jnp.asarray(w))
     z = jnp.matmul(x.sh, enc, preferred_element_type=x.ring.dtype)
-    return trunc(AShare(z, x.ring), key=key)
+    return trunc(x.with_sh(z), key=key)
 
 
-def sum_(x: AShare, axis=None, keepdims=False) -> AShare:
+def sum_(x: Share, axis=None, keepdims=False) -> Share:
     ax = axis
     if ax is not None:
         ax = tuple(a + 1 if a >= 0 else a for a in
                    ((axis,) if isinstance(axis, int) else tuple(axis)))
     else:
         ax = tuple(range(1, x.sh.ndim))
-    return AShare(jnp.sum(x.sh, axis=ax, keepdims=keepdims), x.ring)
+    return x.with_sh(jnp.sum(x.sh, axis=ax, keepdims=keepdims))
 
 
-def mean(x: AShare, axis: int, *, key: jax.Array | None = None) -> AShare:
+def mean(x: Share, axis: int, *, key: jax.Array | None = None) -> Share:
     n = x.shape[axis]
     s = sum_(x, axis=axis)
     return mul_public(s, 1.0 / n, key=key)
 
 
-def stack(xs: list[AShare], axis: int = 0) -> AShare:
-    return AShare(jnp.stack([x.sh for x in xs], axis=axis + 1), xs[0].ring)
+def stack(xs: list[Share], axis: int = 0) -> Share:
+    return xs[0].with_sh(jnp.stack([x.sh for x in xs], axis=axis + 1))
 
 
-def concat(xs: list[AShare], axis: int = 0) -> AShare:
+def concat(xs: list[Share], axis: int = 0) -> Share:
     ax = axis + 1 if axis >= 0 else axis
-    return AShare(jnp.concatenate([x.sh for x in xs], axis=ax), xs[0].ring)
+    return xs[0].with_sh(jnp.concatenate([x.sh for x in xs], axis=ax))
 
 
 # ---------------------------------------------------------------------------
-# truncation
+# scheme-dependent ops: dispatch to the share's protocol backend
 # ---------------------------------------------------------------------------
 
-def trunc(x: AShare, *, key: jax.Array | None = None) -> AShare:
+def trunc(x: Share, *, key: jax.Array | None = None) -> Share:
     """Divide by 2**frac_bits after a fixed-point product.
 
-    RING64: local arithmetic shift of both shares — correct up to ±1 LSB
-    w.p. 1 - |v|/2**(bits-1) per element (CrypTen's choice).
-    RING32: dealer-assisted pair (exact): open (x+r), shift publicly,
-    subtract the dealer's share of r>>f. Costs one opening round.
+    2pc RING64: local arithmetic shifts (CrypTen's choice).
+    2pc RING32: dealer-assisted pair — exact, one opening round.
+    3pc:        probabilistic local truncation, both rings — no dealer.
     """
-    ring = x.ring
-    if ring.bits >= 64 or key is None:
-        s0 = x.sh[0] >> ring.frac_bits
-        s1 = -((-x.sh[1]) >> ring.frac_bits)
-        return AShare(jnp.stack([s0, s1]), ring)
-    # dealer-assisted exact truncation (TPU ring)
-    r, r_t = beaver.trunc_pair(key, x.shape, ring)
-    masked = AShare(x.sh + r.sh, ring)
-    m = masked.sh[0] + masked.sh[1]          # open
-    comm.record("trunc_open", rounds=1, nbytes=2 * ring.elem_bytes * _numel(x.shape),
-                numel=_numel(x.shape), tag="bw")
-    m_t = m >> ring.frac_bits
-    pub = jnp.stack([m_t, jnp.zeros_like(m_t)])
-    return AShare(pub - r_t.sh, ring)
+    return x.backend.trunc(x, key)
 
 
-# ---------------------------------------------------------------------------
-# Beaver multiplication / matmul
-# ---------------------------------------------------------------------------
-
-def mul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True,
+def mul(x: Share, y: Share, key: jax.Array, *, do_trunc: bool = True,
         lazy: bool = False):
-    """Elementwise secure multiply. One opening round for (eps, delta)."""
-    ring = x.ring
-    shape = jnp.broadcast_shapes(x.shape, y.shape)
-    xb = AShare(jnp.broadcast_to(x.sh, (2,) + shape), ring)
-    yb = AShare(jnp.broadcast_to(y.sh, (2,) + shape), ring)
-    a, b, c = beaver.mul_triple(key, shape, ring)
-    eps = xb.sh - a.sh
-    dlt = yb.sh - b.sh
-    n = _numel(shape)
-    eps_o, dlt_o = _open_flight("beaver_mul", (eps, dlt), ring,
-                                numel=n, flops=4 * n)
-    z = c.sh + eps_o * b.sh + dlt_o * a.sh
-    z = z.at[0].add(eps_o * dlt_o)
-    out = AShare(z, ring)
-    if not do_trunc:
-        return out
-    tkey = jax.random.fold_in(key, 7)
-    if lazy:
-        return fusion.PendingShare(out, tkey)
-    return trunc(out, key=tkey)
+    """Elementwise secure multiply. One wire flight (Beaver opening for
+    2pc, resharing for 3pc)."""
+    return x.backend.mul(x, y, key, do_trunc=do_trunc, lazy=lazy)
 
 
-def square(x: AShare, key: jax.Array) -> AShare:
+def square(x: Share, key: jax.Array) -> Share:
     return mul(x, x, key)
 
 
-def matmul(x: AShare, y: AShare, key: jax.Array, *, do_trunc: bool = True,
+def matmul(x: Share, y: Share, key: jax.Array, *, do_trunc: bool = True,
            lazy: bool = False, combine_impl: str | None = None):
-    """Secure batched matmul via a Beaver matrix triple. One opening round.
-
-    Bytes on the wire: |eps| + |delta| per party = (numel(x)+numel(y)) elems
-    — crucially *not* numel(x)*cols bytes: the triple reuse is what makes
-    matmul bandwidth-, not latency-, dominated.
-
-    `combine_impl` routes the post-open combine of 2-D RING32 matmuls
-    through the fused Pallas kernel (`kernels/ops.secure_matmul`): both
-    parties' `z_p = c_p + eps@b_p + a_p@dlt (+ p0: eps@dlt)` in one tiled
-    launch. Exact wrapping int32 arithmetic — bitwise-identical to the
-    inline combine ("auto" compiles on TPU, falls back to the jnp
-    reference elsewhere).
-    """
-    ring = x.ring
-    a, b, c = beaver.matmul_triple(key, x.shape, y.shape, ring)
-    eps = x.sh - a.sh
-    dlt = y.sh - b.sh
-    n = _numel(x.shape) + _numel(y.shape)
-    m, k = x.shape[-2], x.shape[-1]
-    n_out = y.shape[-1]
-    batch = _numel(x.shape[:-2])
-    eps_o, dlt_o = _open_flight("beaver_matmul", (eps, dlt), ring, numel=n,
-                                flops=2 * batch * m * k * n_out)
-    # party-local: z_p = c_p + eps@b_p + a_p@dlt ; party0 adds eps@dlt
-    if combine_impl is not None and ring.bits == 32 \
-            and x.sh.ndim == 3 and y.sh.ndim == 3:
-        from repro.kernels import ops as kops
-        z = kops.secure_matmul(eps_o, dlt_o, a.sh, b.sh, c.sh,
-                               impl=combine_impl)
-        out = AShare(z, ring)
-    else:
-        eb = jnp.matmul(jnp.stack([eps_o, eps_o]), b.sh,
-                        preferred_element_type=ring.dtype)
-        ad = jnp.matmul(a.sh, jnp.stack([dlt_o, dlt_o]),
-                        preferred_element_type=ring.dtype)
-        z = c.sh + eb + ad
-        ed = jnp.matmul(eps_o, dlt_o, preferred_element_type=ring.dtype)
-        z = z.at[0].add(ed)
-        out = AShare(z, ring)
-    if not do_trunc:
-        return out
-    tkey = jax.random.fold_in(key, 11)
-    if lazy:
-        return fusion.PendingShare(out, tkey)
-    return trunc(out, key=tkey)
+    """Secure batched matmul — one wire flight. 2pc bytes scale with the
+    INPUTS (Beaver triple reuse), 3pc bytes with the OUTPUT (resharing);
+    `combine_impl` routes the 2pc RING32 post-open combine through the
+    Pallas secure_matmul kernel and is ignored by 3pc."""
+    return x.backend.matmul(x, y, key, do_trunc=do_trunc, lazy=lazy,
+                            combine_impl=combine_impl)
 
 
-def dot_last(x: AShare, y: AShare, key: jax.Array) -> AShare:
+def dot_last(x: Share, y: Share, key: jax.Array) -> Share:
     """Inner product along the last axis (entropy dot products etc.)."""
     z = mul(x, y, key, do_trunc=False)
     s = sum_(z, axis=-1)

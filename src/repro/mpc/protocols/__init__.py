@@ -1,0 +1,61 @@
+"""Pluggable secret-sharing protocol backends.
+
+The MPC substrate used to assume 2-party additive sharing with a
+trusted dealer everywhere — share layout, Beaver triples, truncation
+pairs, the `2 * elem_bytes` opening wire model were baked into every
+file. This package makes the scheme a backend:
+
+  additive2pc   semi-honest 2PC, CrypTen trust model: a trusted dealer
+                (crypto provider) ships Beaver triples and truncation
+                pairs ahead of time — their bytes land in the ledger's
+                OFFLINE channel (tag="offline", priced separately from
+                the online wire).
+  replicated3pc honest-majority 3PC, 2-out-of-3 replicated sharing
+                (ABY3-style): multiplication is local cross-terms plus
+                a correlated-PRNG zero-share resharing flight, and
+                truncation is probabilistic and local — NO dealer, zero
+                offline bytes.
+
+A backend owns exactly the operations where the schemes differ:
+
+  n_parties      leading party-axis size of every `Share`
+  share_encoded  layout of a fresh sharing (uniform components)
+  from_public    trivial sharing of a public ring element
+  open_bytes     wire bytes to open n elements (n_parties * elem_bytes)
+  mul / matmul   ring multiplication incl. its wire flights
+  trunc          fixed-point truncation after a product
+
+Flight legality is per-backend: additive-2PC openings fuse under the
+deferred-reconstruction convention (messages are mask components,
+public corrections applied after the flight; see mpc/fusion.py), and
+replicated-3PC resharing messages are locally computable before their
+flight departs, so independent groups batch the same way. Both mark
+their flights tag="bw"; the batcher needs no scheme-specific code.
+
+Everything above this layer (`ops`, `compare`, `nonlinear`, the
+engines, the executor, the analytic mirror) is protocol-generic and
+routes through `get(name)`.
+"""
+from __future__ import annotations
+
+from repro.mpc.protocols.base import ProtocolBackend
+from repro.mpc.protocols.additive2pc import Additive2PC
+from repro.mpc.protocols.replicated3pc import Replicated3PC
+
+PROTOCOLS: dict[str, ProtocolBackend] = {
+    "2pc": Additive2PC(),
+    "3pc": Replicated3PC(),
+}
+
+
+def get(name: str) -> ProtocolBackend:
+    try:
+        return PROTOCOLS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown protocol {name!r} (expected one of "
+            f"{sorted(PROTOCOLS)})") from None
+
+
+__all__ = ["ProtocolBackend", "Additive2PC", "Replicated3PC", "PROTOCOLS",
+           "get"]

@@ -1,0 +1,234 @@
+"""Additive 2PC with a trusted dealer — the CrypTen trust model.
+
+Share layout: two uniform additive components on the leading axis,
+`sh[0] + sh[1] = value` (mod 2**bits). Multiplication consumes Beaver
+triples and (on the TPU ring) truncation pairs from an offline dealer
+(crypto provider): the dealer is a PRNG-keyed pure function so triples
+are reproducible and jit-friendly; in deployment the dealer seed lives
+on the crypto-provider host and shares are streamed ahead of the online
+phase.
+
+Every byte the dealer ships is recorded into the ambient ledger's
+OFFLINE channel (`tag="offline"`, 0 rounds): it never rides the online
+wire, is excluded from `Ledger.nbytes`/makespan, and is reported
+separately (`Ledger.offline_nbytes`) — the cost axis on which the
+dealer-free replicated3pc backend wins.
+
+Online wire model: an opening flight carries both parties' components
+of every tensor at once — 1 round, `2 * elem_bytes * elems` bytes.
+These flights are fusible under the deferred-reconstruction convention
+(mpc/fusion.py): messages are mask components (`x - a`, `z + r`)
+computable before the flight departs, with dependence on previously
+opened values entering only through PUBLIC reconstructions both parties
+apply after the fact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.mpc.ring import RingSpec
+from repro.mpc import comm, fusion
+from repro.mpc.protocols.base import numel
+
+
+def _share_raw(key: jax.Array, enc: jax.Array, ring: RingSpec) -> jax.Array:
+    r = ring.rand(key, enc.shape)
+    return jnp.stack([r, enc - r])
+
+
+def _record_offline(op: str, ring: RingSpec, n_elems: int) -> None:
+    """Dealer-shipped correlated randomness: n_elems ring elements,
+    additively shared to both parties."""
+    comm.record(op, rounds=0, nbytes=2 * ring.elem_bytes * n_elems,
+                numel=n_elems, tag="offline")
+
+
+# ---------------------------------------------------------------------------
+# the dealer (re-exported by mpc/beaver.py for back-compat)
+# ---------------------------------------------------------------------------
+
+def mul_triple(key: jax.Array, shape, ring: RingSpec):
+    """Elementwise triple: a*b = c (c at 2*frac scale — consumed pre-trunc)."""
+    from repro.mpc.sharing import Share
+    ka, kb, k1, k2, k3 = jax.random.split(key, 5)
+    a = ring.rand(ka, shape)
+    b = ring.rand(kb, shape)
+    c = a * b   # ring product, wraps mod 2**bits
+    _record_offline("offline.mul_triple", ring, 3 * numel(shape))
+    return (Share(_share_raw(k1, a, ring), ring),
+            Share(_share_raw(k2, b, ring), ring),
+            Share(_share_raw(k3, c, ring), ring))
+
+
+def matmul_triple(key: jax.Array, a_shape, b_shape, ring: RingSpec,
+                  dimension_numbers=None):
+    """Matrix triple A@B = C for arbitrary batched matmul shapes."""
+    from repro.mpc.sharing import Share
+    ka, kb, k1, k2, k3 = jax.random.split(key, 5)
+    a = ring.rand(ka, a_shape)
+    b = ring.rand(kb, b_shape)
+    c = jnp.matmul(a, b, preferred_element_type=ring.dtype)
+    _record_offline("offline.matmul_triple", ring,
+                    numel(a_shape) + numel(b_shape) + numel(c.shape))
+    return (Share(_share_raw(k1, a, ring), ring),
+            Share(_share_raw(k2, b, ring), ring),
+            Share(_share_raw(k3, c, ring), ring))
+
+
+def trunc_pair(key: jax.Array, shape, ring: RingSpec):
+    """Dealer-assisted truncation pair (r, r >> f) — SecureML-style.
+
+    Exact (±1 LSB) truncation for the int32 TPU ring where local
+    truncation's wrap probability is too high.
+    """
+    from repro.mpc.sharing import Share
+    kr, k1, k2 = jax.random.split(key, 3)
+    # r drawn from the "safe" range [0, 2**(bits-2)) to avoid sign wrap
+    r = (ring.rand(kr, shape).astype(jnp.uint32 if ring.bits == 32 else jnp.uint64)
+         >> 2).astype(ring.dtype)
+    r_t = r >> ring.frac_bits    # arithmetic shift of non-negative r
+    _record_offline("offline.trunc_pair", ring, 2 * numel(shape))
+    return (Share(_share_raw(k1, r, ring), ring),
+            Share(_share_raw(k2, r_t, ring), ring))
+
+
+def triple_bytes(a_shape, b_shape, c_shape, ring: RingSpec) -> int:
+    """Offline bytes the dealer ships for one triple (both parties)."""
+    n = 0
+    for s in (a_shape, b_shape, c_shape):
+        n += numel(s)
+    return 2 * ring.elem_bytes * n
+
+
+# ---------------------------------------------------------------------------
+# the backend
+# ---------------------------------------------------------------------------
+
+class Additive2PC:
+    name = "2pc"
+    n_parties = 2
+
+    # -- sharing --------------------------------------------------------
+    def share_encoded(self, key: jax.Array, enc: jax.Array,
+                      ring: RingSpec) -> jax.Array:
+        return _share_raw(key, enc, ring)
+
+    def from_public(self, enc: jax.Array) -> jax.Array:
+        return jnp.stack([enc, jnp.zeros_like(enc)])
+
+    def open_bytes(self, ring: RingSpec, n: int) -> int:
+        return 2 * ring.elem_bytes * n
+
+    # -- openings -------------------------------------------------------
+    def _open_flight(self, op: str, tensors, ring: RingSpec, *, n: int,
+                     flops: int = 0):
+        """Open masked share tensors in ONE simultaneous message flight.
+
+        All tensors of a flight ride the same round trip (each party
+        sends its shares of every tensor at once), so the flight costs
+        1 round and 2 * elem_bytes * total-elements on the wire. This is
+        the unit the wave executor schedules: under comm.wave_scope the
+        flight's bytes scale with the wave while latency-bound flights
+        keep their rounds.
+        """
+        wire_elems = sum(numel(t.shape[1:]) for t in tensors)
+        comm.record(op, rounds=1, nbytes=2 * ring.elem_bytes * wire_elems,
+                    numel=n, flops=flops, tag="bw")
+        return tuple(t[0] + t[1] for t in tensors)
+
+    # -- truncation -----------------------------------------------------
+    def trunc(self, x, key: jax.Array | None):
+        """RING64: local arithmetic shift of both components — correct up
+        to ±1 LSB w.p. 1 - |v|/2**(bits-1) per element (CrypTen's
+        choice). RING32: dealer-assisted pair (exact): open (x+r), shift
+        publicly, subtract the dealer's share of r>>f. Costs one opening
+        round plus the pair's offline bytes."""
+        ring = x.ring
+        if ring.bits >= 64 or key is None:
+            s0 = x.sh[0] >> ring.frac_bits
+            s1 = -((-x.sh[1]) >> ring.frac_bits)
+            return x.with_sh(jnp.stack([s0, s1]))
+        # dealer-assisted exact truncation (TPU ring)
+        r, r_t = trunc_pair(key, x.shape, ring)
+        masked = x.sh + r.sh
+        m = masked[0] + masked[1]                # open
+        comm.record("trunc_open", rounds=1,
+                    nbytes=2 * ring.elem_bytes * numel(x.shape),
+                    numel=numel(x.shape), tag="bw")
+        m_t = m >> ring.frac_bits
+        pub = jnp.stack([m_t, jnp.zeros_like(m_t)])
+        return x.with_sh(pub - r_t.sh)
+
+    # -- multiplication -------------------------------------------------
+    def mul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
+            lazy: bool = False):
+        """Beaver multiply. One opening round for (eps, delta)."""
+        ring = x.ring
+        shape = jnp.broadcast_shapes(x.shape, y.shape)
+        xb = jnp.broadcast_to(x.sh, (2,) + shape)
+        yb = jnp.broadcast_to(y.sh, (2,) + shape)
+        a, b, c = mul_triple(key, shape, ring)
+        eps = xb - a.sh
+        dlt = yb - b.sh
+        n = numel(shape)
+        eps_o, dlt_o = self._open_flight("beaver_mul", (eps, dlt), ring,
+                                         n=n, flops=4 * n)
+        z = c.sh + eps_o * b.sh + dlt_o * a.sh
+        z = z.at[0].add(eps_o * dlt_o)
+        out = x.with_sh(z)
+        if not do_trunc:
+            return out
+        tkey = jax.random.fold_in(key, 7)
+        if lazy:
+            return fusion.PendingShare(out, tkey)
+        return self.trunc(out, tkey)
+
+    def matmul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
+               lazy: bool = False, combine_impl: str | None = None):
+        """Beaver matrix-triple matmul. One opening round.
+
+        Bytes on the wire: |eps| + |delta| per party = (numel(x)+numel(y))
+        elems — crucially *not* numel(x)*cols bytes: the triple reuse is
+        what makes 2PC matmul bandwidth-, not latency-, dominated.
+
+        `combine_impl` routes the post-open combine of 2-D RING32
+        matmuls through the fused Pallas kernel
+        (`kernels/ops.secure_matmul`): both parties'
+        `z_p = c_p + eps@b_p + a_p@dlt (+ p0: eps@dlt)` in one tiled
+        launch. Exact wrapping int32 arithmetic — bitwise-identical to
+        the inline combine ("auto" compiles on TPU, falls back to the
+        jnp reference elsewhere).
+        """
+        ring = x.ring
+        a, b, c = matmul_triple(key, x.shape, y.shape, ring)
+        eps = x.sh - a.sh
+        dlt = y.sh - b.sh
+        n = numel(x.shape) + numel(y.shape)
+        m, k = x.shape[-2], x.shape[-1]
+        n_out = y.shape[-1]
+        batch = numel(x.shape[:-2])
+        eps_o, dlt_o = self._open_flight("beaver_matmul", (eps, dlt), ring,
+                                         n=n, flops=2 * batch * m * k * n_out)
+        # party-local: z_p = c_p + eps@b_p + a_p@dlt ; party0 adds eps@dlt
+        if combine_impl is not None and ring.bits == 32 \
+                and x.sh.ndim == 3 and y.sh.ndim == 3:
+            from repro.kernels import ops as kops
+            z = kops.secure_matmul(eps_o, dlt_o, a.sh, b.sh, c.sh,
+                                   impl=combine_impl)
+            out = x.with_sh(z)
+        else:
+            eb = jnp.matmul(jnp.stack([eps_o, eps_o]), b.sh,
+                            preferred_element_type=ring.dtype)
+            ad = jnp.matmul(a.sh, jnp.stack([dlt_o, dlt_o]),
+                            preferred_element_type=ring.dtype)
+            z = c.sh + eb + ad
+            ed = jnp.matmul(eps_o, dlt_o, preferred_element_type=ring.dtype)
+            z = z.at[0].add(ed)
+            out = x.with_sh(z)
+        if not do_trunc:
+            return out
+        tkey = jax.random.fold_in(key, 11)
+        if lazy:
+            return fusion.PendingShare(out, tkey)
+        return self.trunc(out, tkey)

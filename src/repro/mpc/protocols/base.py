@@ -1,0 +1,65 @@
+"""The protocol-backend interface every sharing scheme implements.
+
+`Share` values carry their backend's name (`Share.proto`); the generic
+layers (`mpc/ops`, `mpc/compare`, `mpc/nonlinear`, the engines) look the
+backend up per value and delegate every scheme-dependent operation here.
+Backends are stateless singletons — randomness always arrives as an
+explicit PRNG key so executions stay reproducible across schedule
+variants.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+
+from repro.mpc.ring import RingSpec
+
+
+def numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+@runtime_checkable
+class ProtocolBackend(Protocol):
+    """Scheme-dependent share operations.
+
+    `mul`/`matmul` consume and produce `sharing.Share` values and record
+    their own wire flights (and, for dealer-based schemes, their offline
+    bytes) into the ambient ledger; `trunc` implements the scheme's
+    fixed-point truncation. Everything linear is protocol-generic and
+    lives in `mpc/ops`.
+    """
+
+    name: str                     # registry key, also Share.proto
+    n_parties: int                # leading party-axis size of Share.sh
+
+    def share_encoded(self, key: jax.Array, enc: jax.Array,
+                      ring: RingSpec) -> jax.Array:
+        """(n_parties, *enc.shape) uniform components summing to enc."""
+        ...
+
+    def from_public(self, enc: jax.Array) -> jax.Array:
+        """Trivial sharing of a public ring element."""
+        ...
+
+    def open_bytes(self, ring: RingSpec, n: int) -> int:
+        """Wire bytes for opening n ring elements (1 round)."""
+        ...
+
+    def mul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
+            lazy: bool = False):
+        """Elementwise secure multiply (broadcasting)."""
+        ...
+
+    def matmul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
+               lazy: bool = False, combine_impl: str | None = None):
+        """Batched secure matmul."""
+        ...
+
+    def trunc(self, x, key: jax.Array | None):
+        """Divide by 2**frac_bits after a fixed-point product."""
+        ...

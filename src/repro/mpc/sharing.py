@@ -1,13 +1,24 @@
-"""Additive 2PC secret shares.
+"""Protocol-generic secret shares.
 
-AShare stacks both parties' shares on a leading axis of size 2:
-  sh[0] = party-0 share, sh[1] = party-1 share,  value = sh[0] + sh[1] (ring)
+A `Share` stacks every party's share component on a leading axis whose
+size the protocol backend decides (`mpc/protocols/`):
 
-This layout is deliberate: on the multi-pod mesh the party axis is sharded
-over the "pod" mesh axis, so party-0's share physically lives on pod 0 and
-every `open` is an inter-pod collective (psum over "pod"). On a single pod
-the two shares are co-located ("simulation mode"). Either way the
-arithmetic is identical.
+  2pc  additive 2-party:      sh[0] + sh[1] = value          (axis 2)
+  3pc  replicated 2-of-3:     sh[0] + sh[1] + sh[2] = value  (axis 3),
+       party i holds the pair (sh[i], sh[i+1 mod 3])
+
+This layout is deliberate: on the multi-pod mesh the party axis is
+sharded over the "pod" mesh axis, so each party's component physically
+lives on its own pod and every `open` is an inter-pod collective. On a
+single pod the components are co-located ("simulation mode"). Either
+way the arithmetic is identical.
+
+The share container itself is protocol-agnostic: it carries the ring
+and the protocol name (both static pytree aux data), and every op that
+depends on the sharing scheme — `share`, `open_`, multiplication,
+truncation — routes through the backend registered under `proto`.
+`open_` no longer hard-codes the 2-party wire model: bytes-on-wire come
+from `backend.open_bytes`.
 """
 from __future__ import annotations
 
@@ -22,17 +33,19 @@ from repro.mpc import comm
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
-class AShare:
-    sh: jax.Array                 # (2, *shape) ring ints
+class Share:
+    sh: jax.Array                 # (n_parties, *shape) ring ints
     ring: RingSpec                # static
+    proto: str = "2pc"            # static: protocol backend name
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
-        return (self.sh,), self.ring
+        return (self.sh,), (self.ring, self.proto)
 
     @classmethod
-    def tree_unflatten(cls, ring, children):
-        return cls(children[0], ring)
+    def tree_unflatten(cls, aux, children):
+        ring, proto = aux
+        return cls(children[0], ring, proto)
 
     # -- convenience ----------------------------------------------------
     @property
@@ -43,52 +56,89 @@ class AShare:
     def ndim(self) -> int:
         return self.sh.ndim - 1
 
-    def __getitem__(self, idx) -> "AShare":
+    @property
+    def n_parties(self) -> int:
+        return self.sh.shape[0]
+
+    @property
+    def backend(self):
+        from repro.mpc import protocols
+        return protocols.get(self.proto)
+
+    def with_sh(self, sh: jax.Array) -> "Share":
+        """Same ring/protocol, new share components — THE way to rebuild
+        a share from transformed components (preserves the protocol tag;
+        a bare Share(sh, ring) would silently re-label 3PC shares as
+        2PC)."""
+        return Share(sh, self.ring, self.proto)
+
+    def __getitem__(self, idx) -> "Share":
         idx = idx if isinstance(idx, tuple) else (idx,)
-        return AShare(self.sh[(slice(None),) + idx], self.ring)
+        return self.with_sh(self.sh[(slice(None),) + idx])
 
-    def reshape(self, *shape) -> "AShare":
-        return AShare(self.sh.reshape((2,) + tuple(shape)), self.ring)
+    def reshape(self, *shape) -> "Share":
+        return self.with_sh(
+            self.sh.reshape((self.sh.shape[0],) + tuple(shape)))
 
-    def astuple(self) -> tuple[jax.Array, jax.Array]:
-        return self.sh[0], self.sh[1]
-
-
-def share(key: jax.Array, x: jax.Array, ring: RingSpec = RING64) -> AShare:
-    """Encode x in the ring and split into two uniform additive shares."""
-    enc = ring.encode(x)
-    r = ring.rand(key, enc.shape)
-    return AShare(jnp.stack([r, enc - r]), ring)
+    def astuple(self) -> tuple:
+        return tuple(self.sh[i] for i in range(self.sh.shape[0]))
 
 
-def share_encoded(key: jax.Array, enc: jax.Array, ring: RingSpec = RING64) -> AShare:
-    r = ring.rand(key, enc.shape)
-    return AShare(jnp.stack([r, enc - r]), ring)
+# Historic name — the additive-2PC container before protocols became
+# pluggable. Every call site that builds one positionally still works
+# (proto defaults to "2pc").
+AShare = Share
 
 
-def open_(x: AShare, op: str = "open") -> jax.Array:
-    """Reconstruct the ring element (each party sends its share: 1 round)."""
-    comm.record(op, rounds=1, nbytes=2 * x.ring.elem_bytes * _numel(x),
+def reconstruct(sh: jax.Array) -> jax.Array:
+    """Ring sum over the leading party axis (the functionality-boundary
+    reconstruction every backend shares)."""
+    out = sh[0]
+    for i in range(1, sh.shape[0]):
+        out = out + sh[i]
+    return out
+
+
+def share(key: jax.Array, x: jax.Array, ring: RingSpec = RING64,
+          proto: str = "2pc") -> Share:
+    """Encode x in the ring and split into uniform shares (backend
+    layout: 2 additive components for 2pc, 3 replicated for 3pc)."""
+    return share_encoded(key, ring.encode(x), ring, proto)
+
+
+def share_encoded(key: jax.Array, enc: jax.Array, ring: RingSpec = RING64,
+                  proto: str = "2pc") -> Share:
+    from repro.mpc import protocols
+    return Share(protocols.get(proto).share_encoded(key, enc, ring), ring,
+                 proto)
+
+
+def open_(x: Share, op: str = "open") -> jax.Array:
+    """Reconstruct the ring element (each party sends the component(s)
+    the others lack: 1 round, backend-defined bytes)."""
+    comm.record(op, rounds=1, nbytes=x.backend.open_bytes(x.ring, _numel(x)),
                 numel=_numel(x), tag="bw")
-    return x.sh[0] + x.sh[1]
+    return reconstruct(x.sh)
 
 
-def reveal(x: AShare) -> jax.Array:
+def reveal(x: Share) -> jax.Array:
     """Open and decode to float."""
     return x.ring.decode(open_(x))
 
 
-def zeros_like(x: AShare) -> AShare:
-    return AShare(jnp.zeros_like(x.sh), x.ring)
+def zeros_like(x: Share) -> Share:
+    return x.with_sh(jnp.zeros_like(x.sh))
 
 
-def from_public(v: jax.Array, ring: RingSpec = RING64) -> AShare:
-    """A public constant as a (trivial) share: party 0 holds it all."""
-    enc = ring.encode(v)
-    return AShare(jnp.stack([enc, jnp.zeros_like(enc)]), ring)
+def from_public(v: jax.Array, ring: RingSpec = RING64,
+                proto: str = "2pc") -> Share:
+    """A public constant as a (trivial) share: component 0 holds it all."""
+    from repro.mpc import protocols
+    return Share(protocols.get(proto).from_public(ring.encode(v)), ring,
+                 proto)
 
 
-def _numel(x: AShare) -> int:
+def _numel(x: Share) -> int:
     n = 1
     for d in x.shape:
         n *= int(d)

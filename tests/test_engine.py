@@ -7,8 +7,9 @@ Contracts:
      The exact-op and baseline variants run *real* share-level
      protocols (CrypTen softmax/rsqrt/entropy, 2Quad, Bolt polynomial)
      — their first MPC execution in this repo.
-  2. SHIMS — the deprecated proxy_entropy_clear/_mpc entry points
-     delegate to the single engine forward (bitwise for clear).
+  2. REMOVED SHIMS — the deprecated proxy_entropy_clear/_mpc and
+     approx.mlp_apply/_mpc back-compat wrappers are gone: the engine
+     API is the only entry point.
   3. TRACE — TraceEngine's abstract probe equals the analytic mirror on
      both rings without materializing weights (abstract_shares).
   4. RESOLUTION — legacy mode strings resolve to engine instances.
@@ -129,25 +130,20 @@ class TestParitySweep:
 
 
 # ---------------------------------------------------------------------------
-# 2. deprecated shims delegate to the one forward
+# 2. the deprecated shims are gone (PR 2 left them; this PR removes them)
 # ---------------------------------------------------------------------------
 
 
-class TestShims:
-    def test_clear_shim_bitwise(self, pp, tok):
-        got = proxy_mod.proxy_entropy_clear(pp, CFG, tok, SPEC)
-        want = proxy_entropy(ClearEngine(), pp, CFG, tok, SPEC)
-        assert np.array_equal(np.asarray(got), np.asarray(want))
+class TestShimsRemoved:
+    def test_proxy_shims_removed(self):
+        assert not hasattr(proxy_mod, "proxy_entropy_clear")
+        assert not hasattr(proxy_mod, "proxy_entropy_mpc")
+        assert not hasattr(proxy_mod, "proxy_logits_clear")
 
-    def test_mpc_shim_bitwise(self, pp, tok, x64):
-        pp_sh = proxy_mod.share_proxy(jax.random.fold_in(K, 5), pp)
-        x = jnp.take(pp["embed"], tok, axis=0) * (CFG.d_model ** 0.5)
-        x_sh = share(jax.random.fold_in(K, 6), x.astype(jnp.float32))
-        k = jax.random.fold_in(K, 7)
-        got = proxy_mod.proxy_entropy_mpc(pp_sh, CFG, x_sh, SPEC, k)
-        want = proxy_entropy(MPCEngine().with_key(k), pp_sh, CFG, x_sh,
-                             SPEC)
-        assert np.array_equal(np.asarray(got.sh), np.asarray(want.sh))
+    def test_approx_shims_removed(self):
+        from repro.core import approx
+        assert not hasattr(approx, "mlp_apply")
+        assert not hasattr(approx, "mlp_apply_mpc")
 
 
 # ---------------------------------------------------------------------------

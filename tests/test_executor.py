@@ -53,11 +53,14 @@ def pp():
 @pytest.fixture(scope="module")
 def executed(pp, pool):
     """All four schedule variants run on the same pool with the same
-    per-batch keys -> {name: (scores_sh, PhaseReport)}."""
+    per-batch keys -> {name: (scores_sh, PhaseReport)}. Pinned to the
+    eager (fuse=False) stream: these tests assert the anatomy of the
+    uncompressed flight ledger; the fused default is covered by
+    tests/test_fusion.py and the bench_fusion smoke gates."""
     out = {}
     for name, (co, ov) in VARIANTS.items():
         ex = WaveExecutor(ExecConfig(wave=WAVE, coalesce=co, overlap=ov,
-                                     batch=BATCH))
+                                     batch=BATCH, fuse=False))
         ent = ex.score_phase(jax.random.fold_in(K, 1), pp, CFG, pool, SPEC)
         out[name] = (ent, ex.reports[-1])
     return out
@@ -138,7 +141,8 @@ class TestLedgerAgreement:
 class TestRing32:
     @pytest.fixture(scope="class")
     def ring32_report(self, pp, pool):
-        ex = WaveExecutor(ExecConfig(wave=WAVE, batch=BATCH, ring=RING32))
+        ex = WaveExecutor(ExecConfig(wave=WAVE, batch=BATCH, ring=RING32,
+                                     fuse=False))
         ent = ex.score_phase(jax.random.fold_in(K, 9), pp, CFG, pool, SPEC)
         return ent, ex.reports[-1]
 
@@ -200,11 +204,13 @@ class TestEquivalence:
 
     def test_wave_matches_clear_proxy(self, executed, pp, pool):
         """Parity of the executed wave path against the float reference."""
-        clear = np.asarray(proxy_mod.proxy_entropy_clear(
-            pp, CFG, jnp.asarray(pool), SPEC))
+        from repro.engine import ClearEngine, proxy_entropy
+        from repro.mpc.sharing import reconstruct
+        clear = np.asarray(proxy_entropy(ClearEngine(), pp, CFG,
+                                         jnp.asarray(pool), SPEC))
         ent, _ = executed["ours"]
         with x64_scope():
-            got = np.asarray((ent.sh[0] + ent.sh[1]).astype(jnp.float64)
+            got = np.asarray(reconstruct(ent.sh).astype(jnp.float64)
                              / ent.ring.scale)
         assert np.abs(got - clear).max() < 1e-3
         k = 16

@@ -13,6 +13,9 @@ from repro.core.proxy import ProxySpec
 from repro.core.selection import (SelectionConfig, run_selection,
                                   resume_phase, _phase_keep)
 from repro.data.tasks import make_classification_task
+from repro.engine import ClearEngine, MPCEngine, proxy_entropy
+from repro.engine.clear import mlp_apply
+from repro.engine.mpc import mlp_apply_mpc
 from repro.mpc.sharing import share, reveal
 from repro.mpc.comm import ledger_scope
 
@@ -49,7 +52,7 @@ class TestApproxMLPs:
         stats = GaussStats(jnp.zeros(12), jnp.ones(12))
         p = approx.fit_softmax_mlp(K, stats, 12, 16, steps=400)
         x = stats.sample(jax.random.fold_in(K, 1), 256)
-        err = jnp.abs(approx.mlp_apply(p, x) - jax.nn.softmax(x, -1)).mean()
+        err = jnp.abs(mlp_apply(p, x) - jax.nn.softmax(x, -1)).mean()
         assert float(err) < 0.05
 
     def test_rsqrt_mlp_learns(self):
@@ -58,7 +61,7 @@ class TestApproxMLPs:
         stats = GaussStats(jnp.full((1,), 1.0), jnp.full((1,), 0.3))
         p = approx.fit_rsqrt_mlp(K, stats, 8, steps=800)
         v = jnp.abs(stats.sample(jax.random.fold_in(K, 2), 256)) + 1e-4
-        rel = jnp.abs(approx.mlp_apply(p, v) - jax.lax.rsqrt(v + 1e-5)) \
+        rel = jnp.abs(mlp_apply(p, v) - jax.lax.rsqrt(v + 1e-5)) \
             / jax.lax.rsqrt(v + 1e-5)
         assert float(rel.mean()) < 0.12
 
@@ -67,7 +70,7 @@ class TestApproxMLPs:
         stats = GaussStats(jnp.zeros(4), jnp.full((4,), 2.0))
         p = approx.fit_entropy_mlp(K, stats, 4, 16, steps=4000)
         x = stats.sample(jax.random.fold_in(K, 3), 128)
-        got = approx.mlp_apply(p, x)[:, 0]
+        got = mlp_apply(p, x)[:, 0]
         want = approx.op_softmax_entropy(x)[:, 0]
         rho = np.corrcoef(np.argsort(np.argsort(np.asarray(got))),
                           np.argsort(np.argsort(np.asarray(want))))[0, 1]
@@ -76,10 +79,10 @@ class TestApproxMLPs:
     def test_mlp_mpc_matches_clear(self, x64):
         p = approx.init_mlp(K, 6, 4, 6)
         x = jax.random.normal(jax.random.fold_in(K, 4), (8, 6))
-        clear = approx.mlp_apply(p, x)
+        clear = mlp_apply(p, x)
         p_sh = proxy_mod.share_proxy(jax.random.fold_in(K, 5), p)
         x_sh = share(jax.random.fold_in(K, 6), x)
-        got = reveal(approx.mlp_apply_mpc(p_sh, x_sh, jax.random.fold_in(K, 7)))
+        got = reveal(mlp_apply_mpc(p_sh, x_sh, jax.random.fold_in(K, 7)))
         assert np.allclose(np.asarray(got), np.asarray(clear), atol=1e-3)
 
 
@@ -91,13 +94,13 @@ class TestProxy:
     def test_proxy_entropy_mpc_parity(self, built_proxy, task, x64):
         params, pp, spec = built_proxy
         tok = jnp.asarray(task.pool_tokens[:12])
-        clear = proxy_mod.proxy_entropy_clear(pp, CFG, tok, spec)
+        clear = proxy_entropy(ClearEngine(), pp, CFG, tok, spec)
         pp_sh = proxy_mod.share_proxy(jax.random.fold_in(K, 8), pp)
         x = jnp.take(pp["embed"], tok, axis=0) * (CFG.d_model ** 0.5)
         with ledger_scope() as led:
             x_sh = share(jax.random.fold_in(K, 9), x.astype(jnp.float32))
-            ent = reveal(proxy_mod.proxy_entropy_mpc(
-                pp_sh, CFG, x_sh, spec, jax.random.fold_in(K, 10)))
+            eng = MPCEngine().with_key(jax.random.fold_in(K, 10))
+            ent = reveal(proxy_entropy(eng, pp_sh, CFG, x_sh, spec))
         assert np.abs(np.asarray(ent) - np.asarray(clear)).max() < 1e-3
         # top-half selection overlap must be near-perfect
         kk = 6
@@ -258,5 +261,5 @@ class TestAppraisalAndGates:
         stats = GaussStats(jnp.zeros(8), jnp.ones(8) * 1.5)
         p = approx.fit_gate_mlp(K, stats, 8, 32, steps=1200)
         x = stats.sample(jax.random.fold_in(K, 63), 256)
-        err = jnp.abs(approx.mlp_apply(p, x) - jax.nn.sigmoid(x))
+        err = jnp.abs(mlp_apply(p, x) - jax.nn.sigmoid(x))
         assert float(err.mean()) < 0.05
