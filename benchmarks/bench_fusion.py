@@ -14,6 +14,11 @@ executor and enforces the acceptance gates (CI tier-1 runs this):
   * fused vs eager output shares bitwise identical
   * the fused phase ledger satisfies iosched.ledger_agrees
   * the analytic mirror matches the fused probe record-for-record
+  * scale-carrying gate (ISSUE 5): the RING32 2PC stream's truncation
+    events are >= 25% below the frozen PR 4 per-op-trunc baseline
+    (costs.pr4_trunc_baseline) with strictly lower dealer trunc-pair
+    offline bytes — `trunc_events` / `offline_nbytes` land in
+    BENCH_fusion.json as the regression trajectory
 
 `--protocol 3pc` (the CI 3PC smoke job) runs the 2PC gates above AND
 executes both rings under the replicated-3PC backend, additionally
@@ -138,10 +143,39 @@ def smoke_execute(protocol: str = "2pc") -> dict:
         if ring is RING32 and protocol == "2pc":
             assert red >= 0.40, \
                 f"ring32 round reduction {red:.2%} below the 40% gate"
+        # scale-carrying truncation events: every force is one bw trunc
+        # flight in the EAGER stream (trunc_open / trunc_reshare); the
+        # dealer pair bytes ride the offline channel in both modes
+        trunc_events = sum(1 for r in e.records
+                           if r.tag == "bw" and "trunc" in r.op)
+        trunc_pair_bytes = sum(r.nbytes for r in pb.records
+                               if r.tag == "offline" and "trunc" in r.op)
+        base_events, base_bytes = costs.pr4_trunc_baseline(
+            batch, seq, cfg.d_model, spec.n_heads, cfg.n_kv_heads,
+            cfg.d_head, spec.mlp_dim, classes, spec.n_layers, ring=ring)
+        trunc_red = 1.0 - trunc_events / base_events
+        if ring is RING32 and protocol == "2pc":
+            # the ISSUE 5 gate: cross-op deferred truncation must strip
+            # >= 25% of the per-op trunc events AND the dealer's pair
+            # bytes versus the frozen PR 4 stream
+            assert trunc_red >= 0.25, \
+                f"trunc events {trunc_events} vs PR4 {base_events}: " \
+                f"{trunc_red:.2%} below the 25% gate"
+            assert trunc_pair_bytes < base_bytes, \
+                f"trunc-pair bytes {trunc_pair_bytes} not below PR4 " \
+                f"baseline {base_bytes}"
+        if protocol == "3pc":
+            assert pb.offline_nbytes == 0, \
+                f"3pc/{rname}: folded 3PC probe carries offline bytes"
         out[rname] = {"eager_rounds": e.rounds, "fused_rounds": pb.rounds,
                       "round_reduction": red, "bitwise_identical": True,
                       "ledger_agrees": True, "mirror_exact": True,
-                      "offline_nbytes": pb.offline_nbytes}
+                      "offline_nbytes": pb.offline_nbytes,
+                      "trunc_events": trunc_events,
+                      "trunc_events_pr4": base_events,
+                      "trunc_event_reduction": trunc_red,
+                      "trunc_pair_nbytes": trunc_pair_bytes,
+                      "trunc_pair_nbytes_pr4": base_bytes}
     return out
 
 

@@ -36,9 +36,10 @@ def _proxy_layer(eng, x, pp, li, cfg, spec, variant):
     g = w // wk
     b, s, d = eng.shape(x)
     # MLP-LayerNorm: numerator exact, reciprocal-sqrt emulated ("ln").
-    # The stat openings (mean trunc, variance Beaver open + truncs) form
-    # one fused flight under a flight_scope — `eng.fused` is a no-op on
-    # wireless substrates, so clear/MPC parity is untouched.
+    # The stat openings (the variance Beaver open plus whatever forced
+    # truncations the scale lattice fires — pow2 means fold for free)
+    # form one fused flight under a flight_scope — `eng.fused` is a
+    # no-op on wireless substrates, so clear/MPC parity is untouched.
     with eng.fused("ln_stats"):
         mu = eng.mean(x, axis=-1)
         xc = eng.sub(x, eng.broadcast(eng.reshape(mu, (b, s, 1)), (b, s, d)))
@@ -52,7 +53,8 @@ def _proxy_layer(eng, x, pp, li, cfg, spec, variant):
     # pruned attention: per-projection matmuls, GQA head grouping. The
     # three projections consume the same input and nothing of each other
     # — the canonical independent group, one (eps, delta) flight for all
-    # three plus their deferred truncations.
+    # three; the shared input's forced truncation (ops.force memo) is
+    # paid once and rides the same flight.
     ap = pp["attn"]
     h2 = eng.reshape(h, (b * s, d))
     with eng.fused("qkv"):

@@ -9,6 +9,13 @@ the cost Ledger. All six variant strategies run bitwise-reproducibly on
 every (ring, protocol) combination: the op stream is fixed by
 `engine/forward.py` and keys derive deterministically below.
 
+Fixed-point scale flows through the forward as share metadata
+(`Share.fb`, mpc/scale.py): products ride at 2f, pow2 rescales fold
+free, and forced truncations fire only where the lattice demands —
+the engine adds exactly one boundary rule of its own, `entropy_head`
+returns CANONICAL-scale scores (QuickSelect and appraisal consume
+them as public-contract fb == frac_bits).
+
 PRNG keys are threaded internally: the engine is seeded once per
 forward (`with_key`) and derives one key per keyed op site by folding
 an op counter.  The op sequence is fixed by `engine/forward.py`, so the
@@ -44,8 +51,10 @@ def mlp_apply_mpc(p_sh: dict, x: Share, key) -> Share:
     in engine/clear.mlp_apply.
     """
     def _badd(h: Share, b: Share) -> Share:
-        bb = jnp.broadcast_to(b.sh[:, None, :], h.sh.shape)
-        return mops.add(h, h.with_sh(bb))
+        # build the broadcast from b (it carries b's exponent — h may
+        # ride at 2f, and add() lifts the bias to match, exactly)
+        bb = b.with_sh(jnp.broadcast_to(b.sh[:, None, :], h.sh.shape))
+        return mops.add(h, bb)
 
     k1, k2, k3 = jax.random.split(key, 3)
     h = mops.matmul(x, p_sh["w1"], k1)
@@ -109,11 +118,15 @@ class MPCEngine:
         return x_in
 
     # -- linear algebra --------------------------------------------------
+    # add/sub get a key: exponent alignment is usually an exact lift,
+    # but a pow2-folded operand above the 2f cap (layer>=2 mean vs the
+    # 2f residual) must down-trunc EXACTLY — keyless local shifts wrap
+    # too often at fb > 2f on the 32-bit ring
     def add(self, x, y):
-        return mops.add(x, y)
+        return mops.add(x, y, key=self._k())
 
     def sub(self, x, y):
-        return mops.sub(x, y)
+        return mops.sub(x, y, key=self._k())
 
     def mul(self, x, y):
         return mops.mul(x, y, self._k())
@@ -133,6 +146,10 @@ class MPCEngine:
         return mops.mean(x, axis=axis, key=self._k())
 
     # -- shape ops (local on shares) -------------------------------------
+    # Layout ops go through Share.derive: they are scale-preserving AND
+    # remember their source, so a forced truncation on (say) a broadcast
+    # inverse-std fires on the small pre-broadcast tensor and the free
+    # layout replays — fewer dealer trunc-pair bytes for the same event.
     def shape(self, x):
         return x.shape
 
@@ -145,18 +162,23 @@ class MPCEngine:
         # (P, 1, n) first, or the party axis would be matched against a
         # value dim (the attention-bias path hits exactly this)
         shape = tuple(shape)
-        p = x.sh.shape[0]
         pad = len(shape) - x.ndim
-        sh = x.sh.reshape((p,) + (1,) * pad + x.shape)
-        return x.with_sh(jnp.broadcast_to(sh, (p,) + shape))
+        val_shape = x.shape
+
+        def fn(sh):
+            sh = sh.reshape((sh.shape[0],) + (1,) * pad + val_shape)
+            return jnp.broadcast_to(sh, (sh.shape[0],) + shape)
+
+        return x.derive(fn)
 
     def moveaxis(self, x, src, dst):
-        return x.with_sh(jnp.moveaxis(x.sh, _ax(src), _ax(dst)))
+        return x.derive(lambda sh: jnp.moveaxis(sh, _ax(src), _ax(dst)))
 
     def swapaxes(self, x, a, b):
-        return x.with_sh(jnp.swapaxes(x.sh, _ax(a), _ax(b)))
+        return x.derive(lambda sh: jnp.swapaxes(sh, _ax(a), _ax(b)))
 
     def index(self, x, i):
+        # no lineage: forcing a slice must not truncate the whole source
         return x.with_sh(x.sh[:, i])
 
     # -- nonlinearity strategies -----------------------------------------
@@ -178,10 +200,15 @@ class MPCEngine:
         return nonlinear.softmax(scores, self._k(), axis=-1)
 
     def entropy_head(self, pp, logits, variant):
+        """Entropy scores, forced to CANONICAL scale: the forward's
+        public boundary. Downstream consumers (QuickSelect ranking,
+        appraisal means, decode-at-f callers) see fb == frac_bits."""
         b = logits.shape[0]
         if "se" in variant:
-            return self.mlp(pp["mlp_se"], logits).reshape(b)
-        return nonlinear.entropy_from_logits(logits, self._k())
+            out = self.mlp(pp["mlp_se"], logits).reshape(b)
+        else:
+            out = nonlinear.entropy_from_logits(logits, self._k())
+        return mops.force(out, self._k())
 
     # -- Table-3 baseline softmaxes over shares --------------------------
     def _quad_softmax(self, scores):
@@ -194,7 +221,7 @@ class MPCEngine:
         # row sits near -5
         s = mops.add_public(s, 1e-6)
         r = nonlinear.reciprocal(s, self._k())
-        rb = e.with_sh(jnp.broadcast_to(r.sh, e.sh.shape))
+        rb = r.with_sh(jnp.broadcast_to(r.sh, e.sh.shape))
         return mops.mul(e, rb, self._k())
 
     def _poly_softmax(self, scores):
@@ -202,10 +229,13 @@ class MPCEngine:
 
         clip(t, -8, 0) over shares: max(t,-8) = relu(t+8)-8, then
         min(u,0) = u - relu(u) — two comparisons per element, matching
-        the baseline's real MPC cost profile.
+        the baseline's real MPC cost profile. The comparisons are
+        scale-invariant and their bits multiply at exponent 0, so the
+        whole clip chain rides at the scores' carried exponent without
+        a single truncation.
         """
         mx = compare.max_(scores, axis=-1, key=self._k())
-        mb = scores.with_sh(jnp.broadcast_to(mx.sh, scores.sh.shape))
+        mb = mx.with_sh(jnp.broadcast_to(mx.sh, scores.sh.shape))
         t = mops.sub(scores, mb)
         lo = mops.add_public(compare.relu(mops.add_public(t, 8.0), self._k()),
                              -8.0)
@@ -213,9 +243,10 @@ class MPCEngine:
         # Horner: e = 1 + t(1 + t(1/2 + t(1/6 + t/24))) — one fused
         # flight: every message is a mask component, the public parts of
         # the chained openings reconstruct locally (fusion.py legality).
-        # Each step consumes the previous truncated acc, so truncation
-        # stays inline (the batcher defers only its *flight*); holding
-        # PendingShares across ops is the cross-op folding follow-up.
+        # Scale carrying does the cross-op trunc folding here: each
+        # step's product emits at 2f and the next mul's headroom plan
+        # forces exactly one trunc — the PendingShare choreography this
+        # chain used to motivate is gone.
         with fusion.fused_group("horner"):
             acc = mops.add_public(mops.mul_public(t, 1.0 / 24.0,
                                                   key=self._k()), 1.0 / 6.0)
@@ -225,5 +256,5 @@ class MPCEngine:
         e = compare.relu(e, self._k())
         s = mops.sum_(e, axis=-1, keepdims=True)
         r = nonlinear.reciprocal(s, self._k())
-        rb = e.with_sh(jnp.broadcast_to(r.sh, e.sh.shape))
+        rb = r.with_sh(jnp.broadcast_to(r.sh, e.sh.shape))
         return mops.mul(e, rb, self._k())

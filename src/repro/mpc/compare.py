@@ -35,13 +35,19 @@ def _numel(shape) -> int:
 
 
 def lt_zero(x: Share, key: jax.Array) -> Share:
-    """Shares of the bit [x < 0] (bit encoded at fixed-point scale 1.0)."""
+    """Shares of the bit [x < 0], shared at EXPONENT 0 (integer 0/1).
+
+    The sign of a two's-complement encoding is the sign of the value at
+    any carried exponent, so scale-carrying inputs compare without
+    forcing a truncation first; and a bit at exponent 0 multiplies into
+    any share exactly (fb + 0 = fb) — ReLU and tournament-max selection
+    become truncation-free."""
     n = _numel(x.shape)
     comm.record("secure_cmp", rounds=CMP_ROUNDS, nbytes=CMP_BYTES * n,
                 numel=n, tag="lat")
     v = reconstruct(x.sh)                      # functionality boundary
-    bit = (v < 0).astype(x.ring.dtype) * x.ring.scale
-    return share_encoded(key, bit, x.ring, x.proto)
+    bit = (v < 0).astype(x.ring.dtype)
+    return share_encoded(key, bit, x.ring, x.proto, fb=0)
 
 
 def le(x: Share, y: Share, key: jax.Array) -> Share:
@@ -58,7 +64,9 @@ def reveal_lt(x: Share, y: Share) -> jax.Array:
 
 
 def relu(x: Share, key: jax.Array) -> Share:
-    """ReLU(x) = x * [x >= 0]: one comparison + one secure multiply."""
+    """ReLU(x) = x * [x >= 0]: one comparison + one secure multiply.
+    The bit sits at exponent 0, so the multiply is exact and the output
+    keeps x's carried exponent — no truncation anywhere in ReLU."""
     kb, km = jax.random.split(key)
     neg_bit = lt_zero(x, kb)
     pos_bit = ops.add_public(ops.neg(neg_bit), 1.0)
@@ -73,15 +81,16 @@ def max_(x: Share, axis: int, key: jax.Array) -> Share:
         m = cur.shape[axis]
         half = m // 2
         ax = axis + 1 if axis >= 0 else axis
-        lo = x.with_sh(jax.lax.slice_in_dim(cur.sh, 0, half, axis=ax))
-        hi = x.with_sh(jax.lax.slice_in_dim(cur.sh, half, 2 * half, axis=ax))
+        lo = cur.with_sh(jax.lax.slice_in_dim(cur.sh, 0, half, axis=ax))
+        hi = cur.with_sh(jax.lax.slice_in_dim(cur.sh, half, 2 * half,
+                                              axis=ax))
         kb, km, key = jax.random.split(jax.random.fold_in(key, i), 3)
         b = le(lo, hi, kb)                      # [lo < hi]
         diff = ops.sub(hi, lo)
         mx = ops.add(lo, ops.mul(b, diff, km))  # lo + b*(hi-lo)
         if m % 2:
-            tail = x.with_sh(jax.lax.slice_in_dim(cur.sh, 2 * half, m,
-                                                  axis=ax))
+            tail = cur.with_sh(jax.lax.slice_in_dim(cur.sh, 2 * half, m,
+                                                    axis=ax))
             mx = ops.concat([mx, tail], axis=axis)
         cur = mx
         i += 1

@@ -21,9 +21,10 @@ Protocol parameterization: the same primitives take `protocol=`
        OFFLINE channel (tag="offline", 0 rounds: triples and, on
        RING32, truncation pairs) in the positions the executable dealer
        records them.
-  3pc  one resharing flight per mul/matmul (bytes ~ OUTPUT), no
-       truncation records at all (probabilistic local trunc), zero
-       offline records — the dealer-free cost profile.
+  3pc  one resharing flight per mul/matmul (bytes ~ OUTPUT) and, per
+       forced truncation, a 0-round `trunc_reshare` record pricing the
+       re-replication component on the resharing flight; zero offline
+       records — the dealer-free cost profile.
 """
 from __future__ import annotations
 
@@ -71,44 +72,66 @@ def open_cost(n: int, op: str = "open", *, ring: RingSpec = RING64,
 
 def trunc_cost(n: int, op: str = "trunc_open", *,
                ring: RingSpec = RING64, protocol: str = "2pc") -> Ledger:
-    """Fixed-point truncation after a product: free on 2pc/RING64 (local
-    arithmetic shift) and on 3pc both rings (probabilistic local trunc);
-    one dealer-pair opening — offline pair bytes + a trunc_open flight —
-    on 2pc/RING32 (Additive2PC.trunc)."""
-    if protocol == "3pc" or ring.bits >= 64:
+    """One forced truncation of n elements (ops.force / backend.trunc
+    with a key) — the SAME records for any shift, which is what makes
+    folding a chain of deferred rescales into one trunc a pure win:
+      2pc RING64   local arithmetic shift — free, no record
+      2pc RING32   dealer pair (offline bytes) + one trunc_open flight
+      3pc both     local regrouped shift + the re-replication message
+                   riding the next resharing flight: 0 rounds, one
+                   output component's bytes (the ROADMAP PR 4 follow-up
+                   — previously modeled as free, now priced)."""
+    if protocol == "3pc":
+        return _led(CostRecord(op + ".reshare", 0, ring.elem_bytes * n, n,
+                               0, "bw"))
+    if ring.bits >= 64:
         return Ledger()
     return _led(_offline(2 * n, op + ".pair", ring),
                 CostRecord(op, 1, 2 * ring.elem_bytes * n, n, 0, "bw"))
 
 
 def mul_cost(n: int, op: str = "beaver_mul", *,
-             ring: RingSpec = RING64, protocol: str = "2pc") -> Ledger:
+             ring: RingSpec = RING64, protocol: str = "2pc",
+             inline_trunc: bool = True) -> Ledger:
+    """One secure elementwise multiply. `inline_trunc=True` prices the
+    classic trunc-at-op-boundary stream (the CrypTen-style baselines);
+    the executable scale-carrying ops emit the RAW product
+    (`inline_trunc=False`) and `proxy_exec_cost` places the forced
+    truncations where `mpc/scale.py` actually fires them."""
     if protocol == "3pc":
-        # local cross-terms + one resharing flight; no triple, no trunc
-        return _led(CostRecord(op, 1, 3 * ring.elem_bytes * n, n,
-                               6 * n, "bw"))
-    return merge(_led(_offline(3 * n, op + ".triple", ring),
-                      CostRecord(op, 1, 4 * ring.elem_bytes * n, n,
-                                 4 * n, "bw")),
-                 trunc_cost(n, op + ".trunc", ring=ring))
+        led = _led(CostRecord(op, 1, 3 * ring.elem_bytes * n, n,
+                              6 * n, "bw"))
+    else:
+        led = _led(_offline(3 * n, op + ".triple", ring),
+                   CostRecord(op, 1, 4 * ring.elem_bytes * n, n,
+                              4 * n, "bw"))
+    if inline_trunc:
+        led = merge(led, trunc_cost(n, op + ".trunc", ring=ring,
+                                    protocol=protocol))
+    return led
 
 
 def matmul_cost(batch: int, m: int, k: int, n: int,
                 op: str = "beaver_matmul", *,
-                ring: RingSpec = RING64, protocol: str = "2pc") -> Ledger:
+                ring: RingSpec = RING64, protocol: str = "2pc",
+                inline_trunc: bool = True) -> Ledger:
     if protocol == "3pc":
         # resharing flight of the OUTPUT: bytes ~ batch*m*n (the inverse
         # of Beaver's input-proportional wire profile)
         out_elems = batch * m * n
-        return _led(CostRecord(op, 1, 3 * ring.elem_bytes * out_elems,
-                               out_elems, 6 * batch * m * k * n, "bw"))
-    in_elems = batch * (m * k + k * n)
-    nbytes = 2 * ring.elem_bytes * in_elems
-    return merge(_led(_offline(in_elems + batch * m * n, op + ".triple",
-                               ring),
-                      CostRecord(op, 1, nbytes, in_elems,
-                                 2 * batch * m * k * n, "bw")),
-                 trunc_cost(batch * m * n, op + ".trunc", ring=ring))
+        led = _led(CostRecord(op, 1, 3 * ring.elem_bytes * out_elems,
+                              out_elems, 6 * batch * m * k * n, "bw"))
+    else:
+        in_elems = batch * (m * k + k * n)
+        nbytes = 2 * ring.elem_bytes * in_elems
+        led = _led(_offline(in_elems + batch * m * n, op + ".triple",
+                            ring),
+                   CostRecord(op, 1, nbytes, in_elems,
+                              2 * batch * m * k * n, "bw"))
+    if inline_trunc:
+        led = merge(led, trunc_cost(batch * m * n, op + ".trunc",
+                                    ring=ring, protocol=protocol))
+    return led
 
 
 def cmp_cost(n: int, op: str = "secure_cmp") -> Ledger:
@@ -316,7 +339,9 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
 
     `protocol="3pc"` mirrors the replicated-sharing stream: resharing
     flights (output-proportional bytes) in place of Beaver openings,
-    no truncation records on either ring, and an empty offline channel.
+    0-round `trunc_reshare` bytes wherever a truncation is forced (the
+    re-replication component riding the resharing flight), and an
+    empty offline channel on both rings.
 
     `fused=True` mirrors the round-compressed stream instead: the eager
     event stream below — with GroupBegin/GroupEnd markers placed exactly
@@ -324,9 +349,21 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
     through `fusion.compress_events`, i.e. the very FlightBatcher the
     executed path batches with, so flush semantics cannot drift between
     model and execution.
-    """
-    from repro.mpc import fusion
 
+    The stream is SCALE-SIMULATED: multiplies emit raw products at the
+    summed exponent (`inline_trunc=False`) and forced truncations land
+    exactly where the `mpc/scale.py` lattice — the SAME decision
+    procedure the executable ops consult — fires them: power-of-two
+    rescales (pow2 means, `d_head**-0.5`) fold for free, comparison
+    bits multiply at exponent 0 (ReLU is truncation-free), a tensor
+    consumed by several scale-sensitive ops truncates once (the
+    ops.force memo), and forcing a broadcast bills the pre-broadcast
+    element count (layout lineage). That is the cross-op deferred-
+    truncation contract this mirror certifies record-for-record.
+    """
+    from repro.mpc import fusion, scale as lattice
+
+    f = ring.frac_bits
     w, wk = heads, min(kv_heads, heads)
     t = bsz * seq
     events: list = []
@@ -335,34 +372,103 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
     def ext(led: Ledger) -> None:
         events.extend(led.records)
 
+    class V:
+        """Symbolic scale-carrying tensor: carried exponent, the element
+        count a forced truncation bills (its lineage ROOT's numel), and
+        the per-target force memo mirroring ops.force's cache."""
+
+        def __init__(self, fb: int, n: int):
+            self.fb, self.n, self.forced = fb, n, set()
+
+    W = V(f, 0)                       # shared weights: always canonical
+
+    def forced(v: V, name: str, to: int) -> None:
+        if v.fb <= to or to in v.forced:
+            return
+        ext(trunc_cost(v.n, f"{op}.{name}", **kw))
+        v.forced.add(to)
+
+    def mul_pub(v: V, c: float, name: str, n_out: int) -> V:
+        k = lattice.pow2_exponent(c)
+        if k is not None:             # free exponent fold
+            return V(v.fb - k, n_out)
+        _, shift, out_fb = lattice.mul_public_plan(v.fb, c, f)
+        if shift:
+            forced(v, name, f)
+        return V(out_fb, n_out)
+
+    def mul2(x: V, y: V, name: str, n: int) -> V:
+        px, py, out_fb = lattice.mul_plan(x.fb, y.fb, f)
+        if px:
+            forced(x, f"{name}.x", x.fb - px)
+        if py and y is not x:
+            forced(y, f"{name}.y", y.fb - py)
+        ext(mul_cost(n, f"{op}.{name}", inline_trunc=False, **kw))
+        return V(out_fb, n)
+
+    def mm(x: V, y: V, name: str, batch: int, m: int, kk: int,
+           n: int) -> V:
+        px, py, out_fb = lattice.mul_plan(x.fb, y.fb, f)
+        if px:
+            forced(x, f"{name}.x", x.fb - px)
+        if py and y is not x:
+            forced(y, f"{name}.y", y.fb - py)
+        ext(matmul_cost(batch, m, kk, n, f"{op}.{name}",
+                        inline_trunc=False, **kw))
+        return V(out_fb, batch * m * n)
+
+    def mlp(x: V, rows: int, d_in: int, hid: int, d_out: int,
+            name: str) -> V:
+        h = mm(x, W, f"{name}.fc1", 1, rows, d_in, hid)
+        # ReLU: comparison (scale-invariant) + bit multiply at exponent
+        # 0 — truncation-free, output keeps h's exponent
+        ext(cmp_cost(rows * hid, f"{op}.{name}.relu.cmp"))
+        r = mul2(h, V(0, rows * hid), f"{name}.relu.mul", rows * hid)
+        return mm(r, W, f"{name}.fc2", 1, rows, hid, d_out)
+
+    x_fb = f                          # shared activations enter canonical
     for _ in range(n_layers):
-        # MLP-LayerNorm: mean (trunc only), numerator exact (var
-        # multiply), rsqrt emulated, then normalize-and-affine
-        # multiplies against shared gamma
+        # MLP-LayerNorm: pow2 d folds the mean for free; the centered
+        # activation truncates ONCE (memo) though both the variance
+        # square and the normalize multiply consume it
         events.append(fusion.GroupBegin("ln_stats"))
-        ext(trunc_cost(t, f"{op}.ln.mu.trunc", **kw))
-        ext(mul_cost(t * d_model, f"{op}.ln.var", **kw))
-        ext(trunc_cost(t, f"{op}.ln.var_mean.trunc", **kw))
+        mu = mul_pub(V(x_fb, t), 1.0 / d_model, "ln.mu.force", t)
+        # centering sub: exact lift unless mu's pow2 fold topped the 2f
+        # cap (layer >= 2, pow2 d) — then mu down-truncs KEYED, billed
+        # at its pre-broadcast rows (lineage)
+        align_fb = lattice.align_target(x_fb, mu.fb, f)
+        if mu.fb > align_fb:
+            forced(mu, "ln.mu.align", align_fb)
+        xc = V(align_fb, t * d_model)
+        var_p = mul2(xc, xc, "ln.var", t * d_model)
+        var = mul_pub(V(var_p.fb, t), 1.0 / d_model, "ln.var_mean.force", t)
         events.append(fusion.GROUP_END)
-        ext(mlp_cost(t, 1, mlp_hidden, 1, f"{op}.mlp_ln", **kw))
-        ext(mul_cost(t * d_model, f"{op}.ln.normmul", **kw))
-        ext(mul_cost(t * d_model, f"{op}.ln.affine", **kw))
-        # pruned attention: per-projection secure matmuls
+        inv = mlp(var, t, 1, mlp_hidden, 1, "mlp_ln")
+        # normalize: inv's force bills its pre-broadcast rows (lineage)
+        h = mul2(xc, inv, "ln.normmul", t * d_model)
+        h = mul2(h, W, "ln.affine", t * d_model)
+        ha = V(h.fb, t * d_model)     # + beta (lift, free): new object
+        # pruned attention: per-projection secure matmuls; one forced
+        # trunc of the shared input serves all three projections
         events.append(fusion.GroupBegin("qkv"))
-        ext(matmul_cost(1, t, d_model, w * d_head, f"{op}.q", **kw))
-        ext(matmul_cost(1, t, d_model, wk * d_head, f"{op}.k", **kw))
-        ext(matmul_cost(1, t, d_model, wk * d_head, f"{op}.v", **kw))
+        q = mm(ha, W, "q", 1, t, d_model, w * d_head)
+        k_ = mm(ha, W, "k", 1, t, d_model, wk * d_head)
+        v_ = mm(ha, W, "v", 1, t, d_model, wk * d_head)
         events.append(fusion.GROUP_END)
-        ext(matmul_cost(bsz * w, seq, d_head, seq, f"{op}.scores", **kw))
-        ext(trunc_cost(bsz * w * seq * seq, f"{op}.scores.scale.trunc",
-                       **kw))
-        ext(mlp_cost(bsz * w * seq, seq, mlp_hidden, seq, f"{op}.mlp_sm",
-                     **kw))
-        ext(matmul_cost(bsz * w, seq, seq, d_head, f"{op}.av", **kw))
-        ext(matmul_cost(1, t, w * d_head, d_model, f"{op}.out", **kw))
-    ext(trunc_cost(bsz * d_model, f"{op}.pool.trunc", **kw))
-    ext(matmul_cost(1, bsz, d_model, classes, f"{op}.head", **kw))
-    ext(mlp_cost(bsz, classes, mlp_hidden, 1, f"{op}.mlp_se", **kw))
+        scores = mm(q, k_, "scores", bsz * w, seq, d_head, seq)
+        scores = mul_pub(scores, d_head ** -0.5, "scores.scale.force",
+                         bsz * w * seq * seq)
+        probs = mlp(scores, bsz * w * seq, seq, mlp_hidden, seq, "mlp_sm")
+        o = mm(probs, v_, "av", bsz * w, seq, seq, d_head)
+        out = mm(o, W, "out", 1, t, w * d_head, d_model)
+        x_fb = lattice.align_target(x_fb, out.fb, f)   # residual add
+    pooled = mul_pub(V(x_fb, bsz * d_model), 1.0 / seq, "pool.force",
+                     bsz * d_model)
+    logits = mm(pooled, W, "head", 1, bsz, d_model, classes)
+    ent = mlp(logits, bsz, classes, mlp_hidden, 1, "mlp_se")
+    # the engine's entropy head forces its output canonical — the
+    # forward's public boundary (QuickSelect consumes fb == frac_bits)
+    forced(ent, "entropy.force", f)
     if fused:
         return fusion.compress_events(events)
     led = Ledger()
@@ -370,6 +476,46 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
                        if not isinstance(r, (fusion.GroupBegin,
                                              fusion.GroupEnd)))
     return led
+
+
+def pr4_trunc_baseline(bsz: int, seq: int, d_model: int, heads: int,
+                       kv_heads: int, d_head: int, mlp_hidden: int,
+                       classes: int, n_layers: int, *,
+                       ring: RingSpec = RING64) -> tuple[int, int]:
+    """FROZEN PR 4 baseline: (truncation events, dealer trunc-pair
+    bytes) of the pre-scale-carrying RING32 2PC proxy stream, where
+    every mul/matmul/mul_public/mean forced its own truncation at the
+    op boundary (18 events per layer + 5 tail). This is the regression
+    reference `bench_fusion --smoke` gates the >=25% event reduction
+    against — do NOT update it to track the live stream."""
+    w, wk = heads, min(kv_heads, heads)
+    t = bsz * seq
+    rows = bsz * w * seq
+    per_layer = [
+        t,                      # mean trunc
+        t * d_model,            # var mul
+        t,                      # var mean
+        t * mlp_hidden,         # mlp_ln fc1
+        t * mlp_hidden,         # mlp_ln relu mul
+        t,                      # mlp_ln fc2
+        t * d_model,            # normmul
+        t * d_model,            # affine
+        t * w * d_head,         # q
+        t * wk * d_head,        # k
+        t * wk * d_head,        # v
+        bsz * w * seq * seq,    # scores matmul
+        bsz * w * seq * seq,    # scores scale
+        rows * mlp_hidden,      # mlp_sm fc1
+        rows * mlp_hidden,      # mlp_sm relu mul
+        rows * seq,             # mlp_sm fc2
+        bsz * w * seq * d_head,  # av
+        t * d_model,            # out
+    ]
+    tail = [bsz * d_model, bsz * classes, bsz * mlp_hidden,
+            bsz * mlp_hidden, bsz]
+    numels = per_layer * n_layers + tail
+    # one dealer pair per event: (r, r>>f) = 2 tensors, both parties
+    return len(numels), sum(4 * ring.elem_bytes * n for n in numels)
 
 
 def mpcformer_block_cost(g: BlockGeom) -> Ledger:

@@ -75,28 +75,12 @@ class PendingOpen:
     tag: str = "bw"
 
 
-@dataclasses.dataclass
-class PendingShare:
-    """An untruncated product tagged with its pending truncation.
-
-    `mops.mul/matmul/mul_public(..., lazy=True)` return one of these:
-    the raw shares still carry the doubled fixed-point scale, and `key`
-    is exactly the truncation key the eager path would have used — so
-    `force()` is bitwise-identical to having truncated inline, it only
-    moves WHEN the dealer-trunc opening joins a flight.
-    """
-    raw: object                   # AShare at 2*frac_bits scale
-    key: object | None            # trunc PRNG key (None -> local shift)
-
-    def force(self):
-        from repro.mpc import ops
-        return ops.trunc(self.raw, key=self.key)
-
-
-def force(x):
-    """Resolve a PendingShare to its truncated AShare (pass-through for
-    anything already materialized)."""
-    return x.force() if isinstance(x, PendingShare) else x
+# NOTE: PR 3's `PendingShare` (the op-boundary pending-trunc container
+# behind `lazy=True`) is retired: fixed-point scale is now a tracked
+# property of `Share` itself (`Share.fb`, mpc/scale.py), so untruncated
+# products flow through downstream ops as ordinary shares and
+# `mpc/ops.force` is the one truncation point. This module is purely
+# the flight batcher again.
 
 
 # ---------------------------------------------------------------------------
@@ -142,8 +126,11 @@ class FlightBatcher:
             # comparisons are real interaction: barrier, then pass through
             self.flush()
             return False
-        if tag == "bw" and rounds == 1:
-            self.pending.append(PendingOpen(op, nbytes, numel, flops))
+        if tag == "bw" and rounds <= 1:
+            # rounds == 0: a piggyback message (3pc trunc re-replication)
+            # that rides whatever flight the segment flushes as
+            self.pending.append(PendingOpen(op, nbytes, numel, flops,
+                                            rounds))
             self.n_deferred += 1
             return True
         self.flush()                  # unknown multi-round op: be safe
@@ -163,11 +150,13 @@ class FlightBatcher:
             self._suspended = False
 
     def flush(self, label: str | None = None) -> None:
-        """Emit the pending segment as ONE flight (no-op when empty)."""
+        """Emit the pending segment as ONE flight (no-op when empty).
+        A segment of only piggyback records (rounds 0) flushes at 0
+        rounds — fusing must never create a round eager mode didn't pay."""
         if self.pending:
             batch, self.pending = self.pending, []
-            self._emit(f"fused.{label or self._label or 'flight'}", 1,
-                       batch, "bw")
+            self._emit(f"fused.{label or self._label or 'flight'}",
+                       max(p.rounds for p in batch), batch, "bw")
             self.n_flights += 1
 
     def flush_lat(self, label: str | None = None) -> None:

@@ -6,6 +6,16 @@ rsqrt, log) plus the comparison functionality (max, relu). Their cost is
 what makes Figure 2 / Figure 6's "Oracle" so slow; our benchmarks measure
 them via the ambient Ledger.
 
+Scale discipline: every public entry point FORCES its input to the
+canonical exponent first (`ops.force`) — the iterative approximations
+are tuned for canonical fixed-point precision, and forcing at the
+boundary keeps each protocol's internal op/cost stream identical no
+matter what carried exponent the caller accumulated (mpc/scale.py).
+Inside, products ride at 2f and the next iteration's multiply forces
+them back — the same one-trunc-per-consumption contract as everywhere
+else. Outputs are returned at their natural (usually 2f) exponent; the
+caller's consumer forces once more if it cares.
+
 Approximation choices follow CrypTen (Knott et al. 2021):
   exp(x)        limit approximation (1 + x/2**t)**(2**t), t=8 squarings
   reciprocal(x) Newton-Raphson, init 3*exp(0.5-x)+0.003, 10 iterations
@@ -30,6 +40,8 @@ LOG_ITERS = 8
 
 def exp(x: Share, key: jax.Array) -> Share:
     """(1 + x/2**t)**(2**t): t sequential squarings = t rounds."""
+    x = ops.force(x, jax.random.fold_in(key, 89))
+    # x/2**t is a pure exponent fold; the first squaring forces it back
     y = ops.add_public(ops.mul_public(x, 1.0 / (1 << EXP_ITERS),
                                       key=jax.random.fold_in(key, 99)), 1.0)
     for i in range(EXP_ITERS):
@@ -39,6 +51,7 @@ def exp(x: Share, key: jax.Array) -> Share:
 
 def reciprocal(x: Share, key: jax.Array) -> Share:
     """NR iterations y <- y(2 - x y); init 3 exp(0.5 - x) + 0.003."""
+    x = ops.force(x, jax.random.fold_in(key, 89))
     k0, key = jax.random.split(key)
     init = ops.add_public(
         ops.mul_public(exp(ops.add_public(ops.neg(x), 0.5), k0), 3.0,
@@ -55,6 +68,7 @@ def reciprocal(x: Share, key: jax.Array) -> Share:
 
 def rsqrt(x: Share, key: jax.Array) -> Share:
     """NR for 1/sqrt(x): y <- y(3 - x y^2)/2, init 3*exp(-(x/2+0.2))+0.2."""
+    x = ops.force(x, jax.random.fold_in(key, 89))
     k0, key = jax.random.split(key)
     init = ops.add_public(
         ops.mul_public(
@@ -76,6 +90,7 @@ def rsqrt(x: Share, key: jax.Array) -> Share:
 
 def log(x: Share, key: jax.Array) -> Share:
     """Householder iterations: y <- y - 1 + x*exp(-y) (order-1 form)."""
+    x = ops.force(x, jax.random.fold_in(key, 89))
     y = ops.add_public(ops.mul_public(x, 1.0 / 120.0,
                                       key=jax.random.fold_in(key, 95)), 2.0)
     # crude affine init y0 ~ x/120 + 2 (CrypTen uses x/120 - 20exp(-2x-1)+3)
@@ -91,28 +106,30 @@ def softmax(x: Share, key: jax.Array, axis: int = -1,
             stabilize: bool = True) -> Share:
     """CrypTen softmax: subtract max (comparison tree), exp, normalize."""
     kmax, kexp, krec, kmul, key = jax.random.split(key, 5)
+    x = ops.force(x, jax.random.fold_in(key, 89))
     if stabilize:
         mx = compare.max_(x, axis=axis, key=kmax)
-        x = ops.sub(x, x.with_sh(jnp.broadcast_to(mx.sh, x.sh.shape)))
+        x = ops.sub(x, mx.with_sh(jnp.broadcast_to(mx.sh, x.sh.shape)))
     e = exp(x, kexp)
     s = ops.sum_(e, axis=axis, keepdims=True)
     r = reciprocal(s, krec)
-    return ops.mul(e, e.with_sh(jnp.broadcast_to(r.sh, e.sh.shape)), kmul)
+    return ops.mul(e, r.with_sh(jnp.broadcast_to(r.sh, e.sh.shape)), kmul)
 
 
 def layernorm(x: Share, gamma, beta, key: jax.Array, eps: float = 1e-5) -> Share:
     """LayerNorm with NR-rsqrt for the variance reciprocal sqrt."""
     kvar, krs, kmul, kaff = jax.random.split(key, 4)
-    d = x.shape[-1]
     mu = ops.mean(x, axis=-1, key=jax.random.fold_in(key, 94))
-    xc = ops.sub(x, x.with_sh(jnp.broadcast_to(mu.sh[..., None], x.sh.shape)))
+    xc = ops.sub(x, mu.with_sh(jnp.broadcast_to(mu.sh[..., None],
+                                                x.sh.shape)))
     var = ops.mean(ops.square(xc, kvar), axis=-1,
                    key=jax.random.fold_in(key, 93))
     inv = rsqrt(ops.add_public(var, eps), krs)
-    xn = ops.mul(xc, xc.with_sh(jnp.broadcast_to(inv.sh[..., None], xc.sh.shape)),
-                 kmul)
+    xn = ops.mul(xc, inv.with_sh(jnp.broadcast_to(inv.sh[..., None],
+                                                  xc.sh.shape)), kmul)
     out = ops.mul_public(xn, gamma, key=kaff)
-    return ops.add(out, from_public(jnp.broadcast_to(jnp.asarray(beta), out.shape),
+    return ops.add(out, from_public(jnp.broadcast_to(jnp.asarray(beta),
+                                                     out.shape),
                                     out.ring, out.proto))
 
 
@@ -128,6 +145,7 @@ def entropy_from_logits(logits: Share, key: jax.Array) -> Share:
 def gelu(x: Share, key: jax.Array) -> Share:
     """Quad approximation (MPCFormer uses this for the *baseline* models)."""
     k1, k2 = jax.random.split(key)
+    x = ops.force(x, jax.random.fold_in(key, 89))
     x2 = ops.square(x, k1)
     # 0.125 x^2 + 0.25 x + 0.5  (times x) — MPCFormer's "2Quad" GeLU
     inner = ops.add_public(

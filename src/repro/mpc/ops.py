@@ -1,4 +1,4 @@
-"""Linear algebra over secret shares — protocol-generic.
+"""Linear algebra over secret shares — protocol-generic, scale-carrying.
 
 Everything here works on any `sharing.Share` regardless of backend:
 local linear ops transform the stacked components directly (party-axis
@@ -6,23 +6,40 @@ size is whatever the protocol dictates), while every scheme-dependent
 op (multiplication, matmul, truncation) dispatches to the share's
 `ProtocolBackend` (mpc/protocols/).
 
+Fixed-point scale is a tracked property of the value (`Share.fb`, the
+mpc/scale.py lattice), not an op-boundary invariant:
+
+  add/sub/concat/stack ......... align exponents by exact local lifts
+  mul_public by ±2**k .......... pure exponent fold — zero arithmetic
+  mul_public general ........... encode at f, emit at fb+f, NO trunc
+  mul / matmul ................. emit at the summed exponent (<= 2f),
+                                 forcing inputs down only when the 2f
+                                 headroom cap demands it
+  force (this module) .......... THE truncation point: one
+                                 backend.trunc(shift=excess) per value,
+                                 memoized on the Share and pushed
+                                 through layout lineage
+
+so a product's truncation is paid once, where a scale-sensitive
+consumer (comparison, nonlinear entry point, another multiply) actually
+needs it — not once per op. The PR 3 `fusion.PendingShare` /`lazy=`
+regime is retired: scale carrying subsumes it across op boundaries.
+
 Cost accounting notes (all recorded into the ambient Ledger):
-  add/sub/neg/sum/mean-by-constant ......... local, 0 rounds
-  mul_public/matmul_public ................. local + trunc
+  add/sub/neg/sum/lifts/pow2 folds ......... local, 0 rounds
   mul / matmul, 2pc (Beaver) ............... 1 round: open(eps)+open(delta)
                                              + offline dealer bytes
   mul / matmul, 3pc (replicated) ........... 1 round: resharing flight,
                                              no dealer, no offline bytes
-  trunc, 2pc RING64 / 3pc both rings ....... 0 rounds (local)
-  trunc, 2pc RING32 (dealer-assisted) ...... 1 round + offline pair
+  force, 2pc RING64 ........................ 0 rounds (local shift)
+  force, 2pc RING32 ........................ 1 round + offline trunc pair
+  force, 3pc both rings .................... local shift + re-replication
+                                             bytes on the next resharing
+                                             flight (0 rounds)
 
 Under an ambient `fusion.flight_scope` every 1-round opening/resharing
 is deferred into the current fused flight instead of paying its own
-round (mpc/fusion.py); the arithmetic below never changes. `mul`/
-`matmul`/`mul_public` additionally take `lazy=True` to return the
-untruncated product as a `fusion.PendingShare` tagged with its
-truncation key — `force()` applies the identical truncation later,
-letting a caller hold the pending-trunc state across a fused group.
+round (mpc/fusion.py); the arithmetic below never changes.
 
 All integer arithmetic relies on XLA's modular two's-complement
 semantics, which *is* ring arithmetic mod 2**bits.
@@ -33,18 +50,90 @@ import jax
 import jax.numpy as jnp
 
 from repro.mpc.sharing import Share
-from repro.mpc import fusion
+from repro.mpc import scale
+
+
+# ---------------------------------------------------------------------------
+# scale plumbing: lifts, forced truncation, alignment
+# ---------------------------------------------------------------------------
+
+def lift(x: Share, k: int) -> Share:
+    """Raise the carried exponent by k: int * 2**k — exact, local, free.
+    Spends headroom instead of precision (the scale.align_target cap
+    guarantees the result stays within the 2f contract)."""
+    if k == 0:
+        return x
+    return x.with_scale(x.sh * jnp.asarray(1 << k, x.ring.dtype), x.fb + k)
+
+
+def force(x: Share, key: jax.Array | None = None, *,
+          to: int | None = None) -> Share:
+    """Resolve a scale-carrying share to exponent `to` (canonical f by
+    default) — THE deferred-truncation consumer.
+
+    Sub-target exponents lift (free); excess truncates ONCE via the
+    backend's `trunc(shift=)`. The result is memoized on the Share (a
+    value consumed by several scale-sensitive ops pays one truncation,
+    not one per consumer) and pushed through layout lineage
+    (`Share.derive`): forcing a broadcast/reshaped view truncates the
+    pre-layout tensor at its element count and replays the free layout.
+    """
+    t = x.ring.frac_bits if to is None else to
+    if x.fb == t:
+        return x
+    if x.fb < t:
+        return lift(x, t - x.fb)
+    cache = getattr(x, "_forced", None)
+    if cache is None:
+        cache = x._forced = {}
+    if t in cache:
+        return cache[t]
+    lineage = getattr(x, "_lineage", None)
+    if lineage is not None:
+        base, fn = lineage
+        fbase = force(base, key, to=t)
+        out = fbase.with_sh(fn(fbase.sh))
+    else:
+        out = x.backend.trunc(x, key, shift=x.fb - t)
+    cache[t] = out
+    return out
+
+
+def _aligned(xs: list[Share], key: jax.Array | None = None) -> list[Share]:
+    """Bring operands to a common exponent for add/sub/concat: lift the
+    lower ones (exact, free); trunc down only in the above-cap case
+    scale.align_target clamps (a pow2-folded mean meeting a 2f residual).
+
+    That down-force is a REAL truncation and takes the caller's key —
+    keyless it degrades to the local-shift path, whose share-wrap
+    probability is unacceptable for fb > 2f on the 32-bit ring (the
+    MPCEngine threads a key through every add/sub for exactly this
+    case; key-free library callers only ever align same-exponent or
+    lift-direction operands)."""
+    f = xs[0].ring.frac_bits
+    t = xs[0].fb
+    for x in xs[1:]:
+        t = scale.align_target(t, x.fb, f)
+    out = []
+    for i, x in enumerate(xs):
+        if x.fb != t:
+            kx = None if key is None else jax.random.fold_in(key, 50 + i)
+            x = force(x, kx, to=t)
+        out.append(x)
+    return out
 
 
 # ---------------------------------------------------------------------------
 # local (round-free) ops — party-axis generic
 # ---------------------------------------------------------------------------
 
-def add(x: Share, y: Share) -> Share:
+def add(x: Share, y: Share, *, key: jax.Array | None = None) -> Share:
+    x, y = _aligned([x, y], key)
     return x.with_sh(x.sh + y.sh)
 
 
-def sub(x: Share, y: Share) -> Share:
+def sub(x: Share, y: Share, *, key: jax.Array | None = None) -> Share:
+    x, y = _aligned([x, y], key)
     return x.with_sh(x.sh - y.sh)
 
 
@@ -54,32 +143,45 @@ def neg(x: Share) -> Share:
 
 def add_public(x: Share, v) -> Share:
     """Add a public constant: component 0 absorbs it (every backend's
-    `from_public` convention)."""
-    enc = x.ring.encode(jnp.asarray(v))
+    `from_public` convention), encoded at the carried exponent."""
+    enc = x.ring.encode_at(jnp.asarray(v), x.fb)
     return x.with_sh(x.sh.at[0].add(jnp.broadcast_to(enc, x.shape)))
 
 
-def mul_public(x: Share, v, *, key: jax.Array | None = None,
-               lazy: bool = False):
-    """Multiply by a public float tensor; needs one truncation."""
+def mul_public(x: Share, v, *, key: jax.Array | None = None) -> Share:
+    """Multiply by a public float tensor.
+
+    Scalar powers of two fold into the carried exponent — zero
+    arithmetic, zero rounding, zero wire (the attention `dh**-0.5`
+    rescale and pow2 means cost literally nothing). General constants
+    encode at f and emit at fb+f; no truncation here — the downstream
+    scale-sensitive consumer forces once at the accumulated excess.
+    """
+    k = scale.pow2_exponent(v)
+    if k is not None:
+        sh = -x.sh if float(v) < 0 else x.sh
+        return x.with_scale(sh, x.fb - k)
+    _, shift, out_fb = scale.mul_public_plan(x.fb, v, x.ring.frac_bits)
+    if shift:
+        x = force(x, key)
     enc = x.ring.encode(jnp.asarray(v))
-    z = x.with_sh(x.sh * enc)
-    if lazy:
-        return fusion.PendingShare(z, key)
-    return trunc(z, key=key)
+    return x.with_scale(x.sh * enc, out_fb)
 
 
 def mul_public_int(x: Share, v: int) -> Share:
-    """Multiply by a public *integer* — exact, no truncation."""
+    """Multiply by a public *integer* — exact, scale-preserving."""
     return x.with_sh(x.sh * jnp.asarray(v, x.ring.dtype))
 
 
 def matmul_public(x: Share, w, *, key: jax.Array | None = None,
                   w_encoded: jax.Array | None = None) -> Share:
-    """x @ w with public (already known to all parties) w."""
+    """x @ w with public (already known to all parties) w; emits at
+    fb+f like `mul_public` — consumers force."""
+    if x.excess > 0:
+        x = force(x, key)
     enc = w_encoded if w_encoded is not None else x.ring.encode(jnp.asarray(w))
     z = jnp.matmul(x.sh, enc, preferred_element_type=x.ring.dtype)
-    return trunc(x.with_sh(z), key=key)
+    return x.with_scale(z, x.fb + x.ring.frac_bits)
 
 
 def sum_(x: Share, axis=None, keepdims=False) -> Share:
@@ -93,16 +195,22 @@ def sum_(x: Share, axis=None, keepdims=False) -> Share:
 
 
 def mean(x: Share, axis: int, *, key: jax.Array | None = None) -> Share:
+    """Sum then multiply by 1/n — the 1/n lands on the (smaller) summed
+    tensor, and for power-of-two n it is a free exponent fold."""
     n = x.shape[axis]
     s = sum_(x, axis=axis)
     return mul_public(s, 1.0 / n, key=key)
 
 
-def stack(xs: list[Share], axis: int = 0) -> Share:
+def stack(xs: list[Share], axis: int = 0, *,
+          key: jax.Array | None = None) -> Share:
+    xs = _aligned(xs, key)
     return xs[0].with_sh(jnp.stack([x.sh for x in xs], axis=axis + 1))
 
 
-def concat(xs: list[Share], axis: int = 0) -> Share:
+def concat(xs: list[Share], axis: int = 0, *,
+           key: jax.Array | None = None) -> Share:
+    xs = _aligned(xs, key)
     ax = axis + 1 if axis >= 0 else axis
     return xs[0].with_sh(jnp.concatenate([x.sh for x in xs], axis=ax))
 
@@ -111,39 +219,53 @@ def concat(xs: list[Share], axis: int = 0) -> Share:
 # scheme-dependent ops: dispatch to the share's protocol backend
 # ---------------------------------------------------------------------------
 
-def trunc(x: Share, *, key: jax.Array | None = None) -> Share:
-    """Divide by 2**frac_bits after a fixed-point product.
+def trunc(x: Share, *, key: jax.Array | None = None,
+          shift: int | None = None) -> Share:
+    """Divide by 2**shift (default: one canonical scale, frac_bits).
 
     2pc RING64: local arithmetic shifts (CrypTen's choice).
     2pc RING32: dealer-assisted pair — exact, one opening round.
-    3pc:        probabilistic local truncation, both rings — no dealer.
+    3pc:        probabilistic local shift, both rings — no dealer; the
+                re-replication message is priced on the resharing flight.
     """
-    return x.backend.trunc(x, key)
+    return x.backend.trunc(x, key, shift=shift)
 
 
-def mul(x: Share, y: Share, key: jax.Array, *, do_trunc: bool = True,
-        lazy: bool = False):
-    """Elementwise secure multiply. One wire flight (Beaver opening for
-    2pc, resharing for 3pc)."""
-    return x.backend.mul(x, y, key, do_trunc=do_trunc, lazy=lazy)
+def _forced_operands(x: Share, y: Share, key: jax.Array):
+    """Apply scale.mul_plan: trunc inputs only as far as the 2f headroom
+    cap requires. A squared operand (x is y) forces once and reuses."""
+    px, py, out_fb = scale.mul_plan(x.fb, y.fb, x.ring.frac_bits)
+    if x is y:
+        if px:
+            x = y = force(x, jax.random.fold_in(key, 3), to=x.fb - px)
+        return x, y, out_fb
+    if px:
+        x = force(x, jax.random.fold_in(key, 3), to=x.fb - px)
+    if py:
+        y = force(y, jax.random.fold_in(key, 4), to=y.fb - py)
+    return x, y, out_fb
+
+
+def mul(x: Share, y: Share, key: jax.Array) -> Share:
+    """Elementwise secure multiply — one wire flight (Beaver opening for
+    2pc, resharing for 3pc), emitted at the summed exponent x.fb + y.fb
+    (post headroom plan). No inline truncation: the consumer forces."""
+    x, y, out_fb = _forced_operands(x, y, key)
+    z = x.backend.mul(x, y, key)
+    return z.with_scale(z.sh, out_fb)
 
 
 def square(x: Share, key: jax.Array) -> Share:
     return mul(x, x, key)
 
 
-def matmul(x: Share, y: Share, key: jax.Array, *, do_trunc: bool = True,
-           lazy: bool = False, combine_impl: str | None = None):
-    """Secure batched matmul — one wire flight. 2pc bytes scale with the
-    INPUTS (Beaver triple reuse), 3pc bytes with the OUTPUT (resharing);
-    `combine_impl` routes the 2pc RING32 post-open combine through the
-    Pallas secure_matmul kernel and is ignored by 3pc."""
-    return x.backend.matmul(x, y, key, do_trunc=do_trunc, lazy=lazy,
-                            combine_impl=combine_impl)
-
-
-def dot_last(x: Share, y: Share, key: jax.Array) -> Share:
-    """Inner product along the last axis (entropy dot products etc.)."""
-    z = mul(x, y, key, do_trunc=False)
-    s = sum_(z, axis=-1)
-    return trunc(s, key=jax.random.fold_in(key, 13))
+def matmul(x: Share, y: Share, key: jax.Array, *,
+           combine_impl: str | None = None) -> Share:
+    """Secure batched matmul — one wire flight, emitted at the summed
+    exponent. 2pc bytes scale with the INPUTS (Beaver triple reuse),
+    3pc bytes with the OUTPUT (resharing); `combine_impl` routes the
+    2pc RING32 post-open combine through the Pallas secure_matmul
+    kernel and is ignored by 3pc."""
+    x, y, out_fb = _forced_operands(x, y, key)
+    z = x.backend.matmul(x, y, key, combine_impl=combine_impl)
+    return z.with_scale(z.sh, out_fb)

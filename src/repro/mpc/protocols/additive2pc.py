@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.mpc.ring import RingSpec
-from repro.mpc import comm, fusion
+from repro.mpc import comm
 from repro.mpc.protocols.base import numel
 
 
@@ -76,18 +76,23 @@ def matmul_triple(key: jax.Array, a_shape, b_shape, ring: RingSpec,
             Share(_share_raw(k3, c, ring), ring))
 
 
-def trunc_pair(key: jax.Array, shape, ring: RingSpec):
-    """Dealer-assisted truncation pair (r, r >> f) — SecureML-style.
+def trunc_pair(key: jax.Array, shape, ring: RingSpec,
+               shift: int | None = None):
+    """Dealer-assisted truncation pair (r, r >> shift) — SecureML-style.
 
     Exact (±1 LSB) truncation for the int32 TPU ring where local
-    truncation's wrap probability is too high.
+    truncation's wrap probability is too high. `shift` defaults to one
+    canonical scale (frac_bits); scale-carrying shares hand in their
+    whole accumulated excess (e.g. f+5 after a folded mean) so ONE pair
+    clears what eager mode paid as several.
     """
     from repro.mpc.sharing import Share
+    shift = ring.frac_bits if shift is None else shift
     kr, k1, k2 = jax.random.split(key, 3)
     # r drawn from the "safe" range [0, 2**(bits-2)) to avoid sign wrap
     r = (ring.rand(kr, shape).astype(jnp.uint32 if ring.bits == 32 else jnp.uint64)
          >> 2).astype(ring.dtype)
-    r_t = r >> ring.frac_bits    # arithmetic shift of non-negative r
+    r_t = r >> shift             # arithmetic shift of non-negative r
     _record_offline("offline.trunc_pair", ring, 2 * numel(shape))
     return (Share(_share_raw(k1, r, ring), ring),
             Share(_share_raw(k2, r_t, ring), ring))
@@ -138,32 +143,39 @@ class Additive2PC:
         return tuple(t[0] + t[1] for t in tensors)
 
     # -- truncation -----------------------------------------------------
-    def trunc(self, x, key: jax.Array | None):
-        """RING64: local arithmetic shift of both components — correct up
-        to ±1 LSB w.p. 1 - |v|/2**(bits-1) per element (CrypTen's
-        choice). RING32: dealer-assisted pair (exact): open (x+r), shift
-        publicly, subtract the dealer's share of r>>f. Costs one opening
-        round plus the pair's offline bytes."""
+    def trunc(self, x, key: jax.Array | None, *, shift: int | None = None):
+        """Divide shares by 2**shift (default: one canonical scale).
+
+        RING64 (or keyless boundary trunc): local arithmetic shift of
+        both components — correct up to ±1 LSB w.p. 1 - |v|/2**(bits-1)
+        per element (CrypTen's choice). RING32: dealer-assisted pair
+        (exact): open (x+r), shift publicly, subtract the dealer's share
+        of r>>shift. Costs one opening round plus the pair's offline
+        bytes — the SAME cost for any shift, which is why folding a
+        chain of deferred rescales into one trunc(shift=excess) is a
+        straight win for the dealer channel."""
         ring = x.ring
+        shift = ring.frac_bits if shift is None else shift
+        out_fb = x.fb - shift
         if ring.bits >= 64 or key is None:
-            s0 = x.sh[0] >> ring.frac_bits
-            s1 = -((-x.sh[1]) >> ring.frac_bits)
-            return x.with_sh(jnp.stack([s0, s1]))
+            s0 = x.sh[0] >> shift
+            s1 = -((-x.sh[1]) >> shift)
+            return x.with_scale(jnp.stack([s0, s1]), out_fb)
         # dealer-assisted exact truncation (TPU ring)
-        r, r_t = trunc_pair(key, x.shape, ring)
+        r, r_t = trunc_pair(key, x.shape, ring, shift)
         masked = x.sh + r.sh
         m = masked[0] + masked[1]                # open
         comm.record("trunc_open", rounds=1,
                     nbytes=2 * ring.elem_bytes * numel(x.shape),
                     numel=numel(x.shape), tag="bw")
-        m_t = m >> ring.frac_bits
+        m_t = m >> shift
         pub = jnp.stack([m_t, jnp.zeros_like(m_t)])
-        return x.with_sh(pub - r_t.sh)
+        return x.with_scale(pub - r_t.sh, out_fb)
 
     # -- multiplication -------------------------------------------------
-    def mul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
-            lazy: bool = False):
-        """Beaver multiply. One opening round for (eps, delta)."""
+    def mul(self, x, y, key: jax.Array):
+        """Beaver multiply. One opening round for (eps, delta); returns
+        the raw product — `mpc/ops.py` owns the scale bookkeeping."""
         ring = x.ring
         shape = jnp.broadcast_shapes(x.shape, y.shape)
         xb = jnp.broadcast_to(x.sh, (2,) + shape)
@@ -176,16 +188,10 @@ class Additive2PC:
                                          n=n, flops=4 * n)
         z = c.sh + eps_o * b.sh + dlt_o * a.sh
         z = z.at[0].add(eps_o * dlt_o)
-        out = x.with_sh(z)
-        if not do_trunc:
-            return out
-        tkey = jax.random.fold_in(key, 7)
-        if lazy:
-            return fusion.PendingShare(out, tkey)
-        return self.trunc(out, tkey)
+        return x.with_sh(z)
 
-    def matmul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
-               lazy: bool = False, combine_impl: str | None = None):
+    def matmul(self, x, y, key: jax.Array, *,
+               combine_impl: str | None = None):
         """Beaver matrix-triple matmul. One opening round.
 
         Bytes on the wire: |eps| + |delta| per party = (numel(x)+numel(y))
@@ -226,9 +232,4 @@ class Additive2PC:
             ed = jnp.matmul(eps_o, dlt_o, preferred_element_type=ring.dtype)
             z = z.at[0].add(ed)
             out = x.with_sh(z)
-        if not do_trunc:
-            return out
-        tkey = jax.random.fold_in(key, 11)
-        if lazy:
-            return fusion.PendingShare(out, tkey)
-        return self.trunc(out, tkey)
+        return out

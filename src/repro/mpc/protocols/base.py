@@ -50,16 +50,19 @@ class ProtocolBackend(Protocol):
         """Wire bytes for opening n ring elements (1 round)."""
         ...
 
-    def mul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
-            lazy: bool = False):
-        """Elementwise secure multiply (broadcasting)."""
+    def mul(self, x, y, key: jax.Array):
+        """Elementwise secure multiply (broadcasting). Returns the RAW
+        product — scale bookkeeping (the summed exponent, any forced
+        input truncation) lives in `mpc/ops.py`."""
         ...
 
-    def matmul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
-               lazy: bool = False, combine_impl: str | None = None):
-        """Batched secure matmul."""
+    def matmul(self, x, y, key: jax.Array, *,
+               combine_impl: str | None = None):
+        """Batched secure matmul (raw product; see `mul`)."""
         ...
 
-    def trunc(self, x, key: jax.Array | None):
-        """Divide by 2**frac_bits after a fixed-point product."""
+    def trunc(self, x, key: jax.Array | None, *, shift: int | None = None):
+        """Divide by 2**shift (default: frac_bits, one canonical scale)
+        and lower the carried exponent accordingly — the generalized
+        `trunc(shift=)` that resolves any accumulated excess in one op."""
         ...

@@ -21,14 +21,17 @@ elements — note the wire cost scales with the output, not the inputs,
 the opposite of Beaver-matmul's (|x|+|y|) profile.
 
 Truncation is probabilistic and local (zero rounds, zero offline
-bytes): regroup the three components as the 2-of-2 sharing
+bytes, any shift): regroup the three components as the 2-of-2 sharing
 (sh[0]+sh[1], sh[2]) — party 1 holds the first sum, parties 2 and 3
 both hold sh[2] — apply the SecureML local-shift trick to that pair
 (correct to ±1 LSB w.p. 1 - |v|/2**(bits-1)), and re-randomize the
-result back into three components with the correlated PRNG. In
-deployment the re-replication message rides the next resharing flight
-(ABY3 fuses truncation into multiplication's resharing), so no flight
-is recorded here.
+result back into three components with the correlated PRNG. The
+re-replication message that restores the 2-of-3 pair invariant rides
+the next resharing flight (ABY3 fuses truncation into
+multiplication's resharing) — zero extra rounds, but its bytes ARE
+priced: `trunc` emits a 0-round `trunc_reshare` bw record of one
+output component, folded into the enclosing fused flight by the
+batcher and mirrored by `costs.trunc_cost(protocol="3pc")`.
 
 There are NO offline records in this backend — `Ledger.offline_nbytes`
 of any pure-3PC execution is exactly 0, which is the headline advantage
@@ -46,7 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.mpc.ring import RingSpec
-from repro.mpc import comm, fusion
+from repro.mpc import comm
 from repro.mpc.protocols.base import numel
 
 
@@ -78,19 +81,35 @@ class Replicated3PC:
         return r - jnp.roll(r, -1, axis=0)
 
     # -- truncation -----------------------------------------------------
-    def trunc(self, x, key: jax.Array | None):
+    def trunc(self, x, key: jax.Array | None, *, shift: int | None = None):
         """Probabilistic local truncation via the 2-of-2 regrouping —
-        both rings, zero rounds, zero dealer bytes. On the TPU ring this
-        trades additive2pc's exact dealer pair for a |v|/2**(bits-1)
-        per-element wrap probability; RING64 keeps the same guarantee as
-        2PC local truncation."""
+        both rings, zero rounds, zero dealer bytes, any shift. On the
+        TPU ring this trades additive2pc's exact dealer pair for a
+        |v|/2**(bits-1) per-element wrap probability; RING64 keeps the
+        same guarantee as 2PC local truncation.
+
+        The regrouped result is re-randomized back into three components
+        and RE-REPLICATED: party 1's fresh component must reach party 0
+        to restore the 2-of-3 pair invariant. ABY3 folds that message
+        into the next multiplication's resharing flight, so it costs no
+        extra round — but it is NOT free bytes: one component of the
+        output rides the wire, recorded here as a 0-round bw record the
+        flight batcher folds into the enclosing fused flight (the
+        ROADMAP PR 4 follow-up; previously modeled as free). Keyless
+        boundary truncs skip re-randomization and the message."""
         ring = x.ring
-        hi = (x.sh[0] + x.sh[1]) >> ring.frac_bits
-        lo = -((-x.sh[2]) >> ring.frac_bits)
+        shift = ring.frac_bits if shift is None else shift
+        out_fb = x.fb - shift
+        hi = (x.sh[0] + x.sh[1]) >> shift
+        lo = -((-x.sh[2]) >> shift)
         if key is None:
-            return x.with_sh(jnp.stack([hi, jnp.zeros_like(hi), lo]))
+            return x.with_scale(jnp.stack([hi, jnp.zeros_like(hi), lo]),
+                                out_fb)
         r = ring.rand(key, hi.shape)
-        return x.with_sh(jnp.stack([hi - r, r, lo]))
+        n = numel(x.shape)
+        comm.record("trunc_reshare", rounds=0, nbytes=ring.elem_bytes * n,
+                    numel=n, tag="bw")
+        return x.with_scale(jnp.stack([hi - r, r, lo]), out_fb)
 
     # -- multiplication -------------------------------------------------
     def _cross_terms(self, xs: jax.Array, ys: jax.Array, key: jax.Array,
@@ -105,10 +124,10 @@ class Replicated3PC:
             z = xs * ys + xs * y_n + x_n * ys
         return z + self._zero_share(key, z.shape[1:], ring)
 
-    def mul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
-            lazy: bool = False):
+    def mul(self, x, y, key: jax.Array):
         """Elementwise multiply: local cross-terms + one resharing
-        flight (no triple, no opening)."""
+        flight (no triple, no opening). Raw product — scale bookkeeping
+        lives in `mpc/ops.py`."""
         ring = x.ring
         shape = jnp.broadcast_shapes(x.shape, y.shape)
         xb = jnp.broadcast_to(x.sh, (3,) + shape)
@@ -118,16 +137,10 @@ class Replicated3PC:
         n = numel(shape)
         comm.record("reshare_mul", rounds=1, nbytes=3 * ring.elem_bytes * n,
                     numel=n, flops=6 * n, tag="bw")
-        out = x.with_sh(z)
-        if not do_trunc:
-            return out
-        tkey = jax.random.fold_in(key, 7)
-        if lazy:
-            return fusion.PendingShare(out, tkey)
-        return self.trunc(out, tkey)
+        return x.with_sh(z)
 
-    def matmul(self, x, y, key: jax.Array, *, do_trunc: bool = True,
-               lazy: bool = False, combine_impl: str | None = None):
+    def matmul(self, x, y, key: jax.Array, *,
+               combine_impl: str | None = None):
         """Batched matmul: three local matmuls per party + one resharing
         flight of the OUTPUT (bytes ~ batch*m*n, vs 2PC's |x|+|y|).
         `combine_impl` is a 2PC Beaver-combine knob and is ignored."""
@@ -141,10 +154,4 @@ class Replicated3PC:
         comm.record("reshare_matmul", rounds=1,
                     nbytes=3 * ring.elem_bytes * n, numel=n,
                     flops=6 * batch * m * k * n_out, tag="bw")
-        out = x.with_sh(z)
-        if not do_trunc:
-            return out
-        tkey = jax.random.fold_in(key, 11)
-        if lazy:
-            return fusion.PendingShare(out, tkey)
-        return self.trunc(out, tkey)
+        return x.with_sh(z)

@@ -20,7 +20,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.mpc.sharing import AShare
-from repro.mpc import compare, fusion
+from repro.mpc import compare, fusion, ops as mops
 
 
 def _cmp_batch(scores: AShare, idx_a: np.ndarray, pivot: int,
@@ -56,7 +56,17 @@ def top_k_indices(scores: AShare, k: int, seed: int = 0,
     per-wave batches and coalesced into one flight per partition (see
     `_cmp_batch`). The selected set is invariant to `wave` — chunking
     moves messages, never outcomes.
+
+    Scale-carrying inputs are FORCED to canonical scale up front — one
+    truncation for the whole pool, before any partition slices — so
+    every `reveal_lt` compares canonical encodings and the per-wave
+    comparison ledger is byte-identical no matter what exponent the
+    producer left on the scores (the engine's entropy head already
+    emits canonical; this guards externally supplied pools).
     """
+    if scores.excess != 0:
+        import jax
+        scores = mops.force(scores, jax.random.key(seed ^ 0x5e1ec7))
     n = scores.shape[0]
     if k >= n:
         return np.arange(n)

@@ -37,14 +37,25 @@ class RingSpec:
         return self.bits // 8
 
     def encode(self, x: jax.Array) -> jax.Array:
-        """float -> ring element."""
-        return jnp.round(jnp.asarray(x, jnp.float64 if self.bits == 64 else jnp.float32)
-                         * self.scale).astype(self.dtype)
+        """float -> ring element at the canonical scale."""
+        return self.encode_at(x, self.frac_bits)
+
+    def encode_at(self, x: jax.Array, fb: int) -> jax.Array:
+        """float -> ring element carrying `fb` fractional bits (the
+        scale-carrying shares of mpc/scale.py; fb may exceed frac_bits
+        or be negative)."""
+        ftype = jnp.float64 if self.bits == 64 else jnp.float32
+        return jnp.round(jnp.asarray(x, ftype)
+                         * ftype(2.0) ** fb).astype(self.dtype)
 
     def decode(self, r: jax.Array) -> jax.Array:
-        """ring element -> float."""
+        """ring element -> float (canonical scale)."""
+        return self.decode_at(r, self.frac_bits)
+
+    def decode_at(self, r: jax.Array, fb: int) -> jax.Array:
+        """ring element carrying `fb` fractional bits -> float."""
         ftype = jnp.float64 if self.bits == 64 else jnp.float32
-        return r.astype(ftype) / self.scale
+        return r.astype(ftype) / ftype(2.0) ** fb
 
     def rand(self, key: jax.Array, shape) -> jax.Array:
         """Uniform random ring element (a fresh additive mask)."""

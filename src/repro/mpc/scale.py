@@ -1,0 +1,100 @@
+"""The fixed-point scale lattice — one algebra for execution AND mirror.
+
+A scale-carrying share encodes value v as round(v * 2**fb) where `fb`
+(the carried frac-bits exponent, `Share.fb`) is static pytree aux data.
+Canonical scale is the ring's `frac_bits` (f); a product of f-scale
+operands sits at 2f, and instead of forcing a truncation at every op
+boundary (the PR 3 `PendingShare` regime) the exponent simply flows
+through downstream ops:
+
+  lift        (exact, local, free)   int * 2**k        fb += k
+  pow2 fold   (exact, local, free)   reinterpretation  fb -= k  for * 2**k
+  trunc       (a protocol op)        int >> shift      fb -= shift
+
+The lattice cap is 2f: any op that GROWS integer magnitude (lifting an
+operand for alignment, multiplying two shares) must keep the result's
+exponent at or below 2f so |v1*v2| < 2**(bits-1-2f) — the same headroom
+contract eager truncation maintained. Pure reinterpretations (pow2
+folds) may push fb beyond 2f because the integers never move; the next
+magnitude-growing consumer truncates by the accumulated excess in one
+shot.
+
+This module is the decision procedure only — pure functions of static
+exponents, shared verbatim by the executable ops (`mpc/ops.py`) and the
+analytic mirror (`mpc/costs.proxy_exec_cost`), so "where does a forced
+truncation fire" exists exactly once and the record-for-record mirror
+tests catch any drift.
+"""
+from __future__ import annotations
+
+import math
+
+
+def cap(f: int) -> int:
+    """Max exponent a magnitude-growing op may produce (2f)."""
+    return 2 * f
+
+
+def pow2_exponent(v) -> int | None:
+    """k such that v == ±2**k for a python/numpy scalar, else None.
+
+    Multiplying by ±2**k is a pure exponent adjustment (fb -= k) plus at
+    most a negation — zero arithmetic on the fraction, zero rounding,
+    zero truncation. Non-scalars and non-powers return None (the general
+    encode-at-f path)."""
+    try:
+        x = float(v)
+    except (TypeError, ValueError):
+        return None
+    if x == 0.0 or math.isinf(x) or math.isnan(x):
+        return None
+    m, e = math.frexp(abs(x))       # |x| = m * 2**e, m in [0.5, 1)
+    return e - 1 if m == 0.5 else None
+
+
+def align_target(sa: int, sb: int, f: int) -> int:
+    """Common exponent for add/sub/concat operands at exponents sa, sb.
+
+    Equal scales pass through (even above 2f: adding two reinterpreted
+    tensors moves no integers). Otherwise the lower operand LIFTS to the
+    higher exponent — exact and free — capped at 2f: a lift beyond 2f
+    would overflow the headroom contract, so the higher operand truncs
+    down to the cap instead."""
+    if sa == sb:
+        return sa
+    return min(max(sa, sb), cap(f))
+
+
+def mul_plan(sx: int, sy: int, f: int) -> tuple[int, int, int]:
+    """(shift_x, shift_y, out_exponent) for a share*share product.
+
+    The product's exponent is sx + sy; while that exceeds the 2f cap,
+    the larger operand is truncated — by exactly the excess when that
+    suffices, never below canonical f. Two f-scale inputs emit at 2f
+    untruncated; a 2f-scale input against an exponent-0 input (a
+    comparison bit) multiplies for free; 2f x f and 2f x 2f force the
+    carried truncation that eager mode paid per-product."""
+    s = [sx, sy]
+    shift = [0, 0]
+    while s[0] + s[1] > cap(f):
+        i = 0 if s[0] >= s[1] else 1
+        if s[i] <= f:
+            break                   # both canonical: 2f is legal by cap
+        red = min(s[i] - f, s[0] + s[1] - cap(f))
+        shift[i] += red
+        s[i] -= red
+    return shift[0], shift[1], s[0] + s[1]
+
+
+def mul_public_plan(s: int, v, f: int) -> tuple[int | None, int, int]:
+    """(fold_exponent, force_shift, out_exponent) for share * public v.
+
+    Power-of-two scalars fold into the exponent (fold_exponent = k,
+    force_shift = 0, out = s - k). General constants encode at f and
+    multiply: if the input already sits above canonical the product
+    would pass 2f, so the input forces down by `force_shift` first."""
+    k = pow2_exponent(v)
+    if k is not None:
+        return k, 0, s - k
+    shift = max(0, s - f)           # bring the share back to canonical
+    return None, shift, (s - shift) + f

@@ -13,12 +13,22 @@ lives on its own pod and every `open` is an inter-pod collective. On a
 single pod the components are co-located ("simulation mode"). Either
 way the arithmetic is identical.
 
-The share container itself is protocol-agnostic: it carries the ring
-and the protocol name (both static pytree aux data), and every op that
-depends on the sharing scheme — `share`, `open_`, multiplication,
-truncation — routes through the backend registered under `proto`.
+The share container itself is protocol-agnostic: it carries the ring,
+the protocol name, AND the fixed-point scale it is currently encoded at
+(`fb`, the carried frac-bits exponent of mpc/scale.py) — all three are
+static pytree aux data. Every op that depends on the sharing scheme —
+`share`, `open_`, multiplication, truncation — routes through the
+backend registered under `proto`; every op that changes the scale
+adjusts `fb`, so "this tensor still owes a truncation" is a tracked
+property of the value instead of an implicit calling convention.
 `open_` no longer hard-codes the 2-party wire model: bytes-on-wire come
 from `backend.open_bytes`.
+
+Opening is the one scale boundary that resolves for free: a revealed
+ring element is public, so the receiver applies the exact division by
+2**fb during decode — truncation protocols exist only because SECRET
+values cannot be shifted exactly, and `reveal` therefore never forces
+one (see ops.force for the consumers that must).
 """
 from __future__ import annotations
 
@@ -37,15 +47,21 @@ class Share:
     sh: jax.Array                 # (n_parties, *shape) ring ints
     ring: RingSpec                # static
     proto: str = "2pc"            # static: protocol backend name
+    fb: int | None = None         # static: carried frac-bits exponent
+                                  # (None normalizes to ring.frac_bits)
+
+    def __post_init__(self):
+        if self.fb is None:
+            self.fb = self.ring.frac_bits
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
-        return (self.sh,), (self.ring, self.proto)
+        return (self.sh,), (self.ring, self.proto, self.fb)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        ring, proto = aux
-        return cls(children[0], ring, proto)
+        ring, proto, fb = aux
+        return cls(children[0], ring, proto, fb)
 
     # -- convenience ----------------------------------------------------
     @property
@@ -61,24 +77,44 @@ class Share:
         return self.sh.shape[0]
 
     @property
+    def excess(self) -> int:
+        """Frac bits above canonical — the truncation this value owes."""
+        return self.fb - self.ring.frac_bits
+
+    @property
     def backend(self):
         from repro.mpc import protocols
         return protocols.get(self.proto)
 
     def with_sh(self, sh: jax.Array) -> "Share":
-        """Same ring/protocol, new share components — THE way to rebuild
-        a share from transformed components (preserves the protocol tag;
-        a bare Share(sh, ring) would silently re-label 3PC shares as
-        2PC)."""
-        return Share(sh, self.ring, self.proto)
+        """Same ring/protocol/SCALE, new share components — THE way to
+        rebuild a share from a scale-preserving transform (a bare
+        Share(sh, ring) would silently re-label 3PC shares as 2PC and
+        re-stamp a 2f-scale tensor as canonical)."""
+        return Share(sh, self.ring, self.proto, self.fb)
+
+    def with_scale(self, sh: jax.Array, fb: int) -> "Share":
+        """Rebuild at a different carried exponent (product emission,
+        truncation, lifts)."""
+        return Share(sh, self.ring, self.proto, fb)
+
+    def derive(self, fn) -> "Share":
+        """Scale-preserving LAYOUT transform (reshape/moveaxis/broadcast
+        ...) that remembers its source: `ops.force` walks this lineage
+        so a forced truncation fires once on the pre-layout tensor (at
+        its smaller element count, for broadcasts) and the cheap layout
+        replays on the truncated components."""
+        out = self.with_sh(fn(self.sh))
+        out._lineage = (self, fn)
+        return out
 
     def __getitem__(self, idx) -> "Share":
         idx = idx if isinstance(idx, tuple) else (idx,)
         return self.with_sh(self.sh[(slice(None),) + idx])
 
     def reshape(self, *shape) -> "Share":
-        return self.with_sh(
-            self.sh.reshape((self.sh.shape[0],) + tuple(shape)))
+        return self.derive(
+            lambda sh: sh.reshape((sh.shape[0],) + tuple(shape)))
 
     def astuple(self) -> tuple:
         return tuple(self.sh[i] for i in range(self.sh.shape[0]))
@@ -107,23 +143,30 @@ def share(key: jax.Array, x: jax.Array, ring: RingSpec = RING64,
 
 
 def share_encoded(key: jax.Array, enc: jax.Array, ring: RingSpec = RING64,
-                  proto: str = "2pc") -> Share:
+                  proto: str = "2pc", fb: int | None = None) -> Share:
+    """Split an already-encoded ring tensor; `fb` tags the scale the
+    encoding carries (comparison bits are shared at fb=0, making the
+    b*(x-y) selection multiply exact and truncation-free)."""
     from repro.mpc import protocols
     return Share(protocols.get(proto).share_encoded(key, enc, ring), ring,
-                 proto)
+                 proto, fb)
 
 
 def open_(x: Share, op: str = "open") -> jax.Array:
     """Reconstruct the ring element (each party sends the component(s)
-    the others lack: 1 round, backend-defined bytes)."""
+    the others lack: 1 round, backend-defined bytes). The element is
+    returned AT THE CARRIED SCALE (x.fb) — decode with
+    `ring.decode_at(v, x.fb)`; once public, the scale resolves exactly
+    for free."""
     comm.record(op, rounds=1, nbytes=x.backend.open_bytes(x.ring, _numel(x)),
                 numel=_numel(x), tag="bw")
     return reconstruct(x.sh)
 
 
 def reveal(x: Share) -> jax.Array:
-    """Open and decode to float."""
-    return x.ring.decode(open_(x))
+    """Open and decode to float at the carried scale (exact — deferred
+    truncation costs a revealed value nothing)."""
+    return x.ring.decode_at(open_(x), x.fb)
 
 
 def zeros_like(x: Share) -> Share:
@@ -131,11 +174,12 @@ def zeros_like(x: Share) -> Share:
 
 
 def from_public(v: jax.Array, ring: RingSpec = RING64,
-                proto: str = "2pc") -> Share:
+                proto: str = "2pc", fb: int | None = None) -> Share:
     """A public constant as a (trivial) share: component 0 holds it all."""
     from repro.mpc import protocols
-    return Share(protocols.get(proto).from_public(ring.encode(v)), ring,
-                 proto)
+    fb = ring.frac_bits if fb is None else fb
+    return Share(protocols.get(proto).from_public(ring.encode_at(v, fb)),
+                 ring, proto, fb)
 
 
 def _numel(x: Share) -> int:

@@ -135,27 +135,36 @@ class TestBatcher:
 
 
 # ---------------------------------------------------------------------------
-# lazy mode: pending-trunc shares
+# cross-op deferred truncation: scale-carrying shares retired PendingShare
 # ---------------------------------------------------------------------------
 
-class TestLazyTrunc:
+class TestScaleCarriedTrunc:
+    def test_pending_share_is_retired(self):
+        """`lazy=True`/PendingShare is gone: the carried exponent on
+        Share itself (mpc/scale.py) is the pending-trunc state now."""
+        assert not hasattr(fusion, "PendingShare")
+        assert not hasattr(fusion, "force")
+
     @pytest.mark.parametrize("ring", list(RINGS.values()),
                              ids=list(RINGS))
-    def test_lazy_force_bitwise_equals_eager(self, ring):
+    def test_mul_emits_summed_scale_force_resolves(self, ring):
         with _ring_ctx(ring):
             k = jax.random.fold_in(K, 11)
             x = share(jax.random.fold_in(K, 12),
                       jnp.linspace(-2.0, 2.0, 12).reshape(3, 4), ring)
             y = share(jax.random.fold_in(K, 13),
                       jnp.linspace(0.5, 1.5, 12).reshape(3, 4), ring)
-            eager = mops.mul(x, y, k)
-            pend = mops.mul(x, y, k, lazy=True)
-            assert isinstance(pend, fusion.PendingShare)
-            forced = fusion.force(pend)
-            assert np.array_equal(np.asarray(eager.sh),
-                                  np.asarray(forced.sh))
-            # force() passes materialized shares through
-            assert fusion.force(eager) is eager
+            z = mops.mul(x, y, k)
+            assert z.fb == 2 * ring.frac_bits      # raw product scale
+            forced = mops.force(z, jax.random.fold_in(K, 14))
+            assert forced.fb == ring.frac_bits
+            # decode-at-scale: both views reveal the same product
+            from repro.mpc.sharing import reveal
+            assert np.allclose(np.asarray(reveal(z)),
+                               np.asarray(reveal(forced)),
+                               atol=4.0 / ring.scale)
+            # the memo: forcing twice truncates once
+            assert mops.force(z, jax.random.fold_in(K, 15)) is forced
 
 
 # ---------------------------------------------------------------------------

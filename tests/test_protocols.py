@@ -136,10 +136,18 @@ class TestReplicatedSharing:
 
 class TestOfflineChannel:
     def test_2pc_mul_records_dealer_bytes(self, x64):
+        """A scale-carrying mul records the triple + opening only; the
+        dealer trunc pair arrives when a consumer FORCES the carried
+        2f exponent (mpc/scale.py) — one pair per forced value."""
         x = share(_k(20), jnp.ones((6,)), RING32)
         y = share(_k(21), jnp.ones((6,)), RING32)
         with ledger_scope() as led:
-            mops.mul(x, y, _k(22))
+            z = mops.mul(x, y, _k(22))
+            assert z.excess == RING32.frac_bits     # rides at 2f
+            zc = mops.force(z, _k(23))
+            assert zc.excess == 0
+            # the force memo: a second consumer pays nothing
+            assert mops.force(z, _k(24)) is zc
         tags = [r.tag for r in led.records]
         assert tags == ["offline", "bw", "offline", "bw"]
         # triple: 3 tensors of 6 elems; trunc pair: 2 tensors of 6

@@ -1,0 +1,357 @@
+"""Scale-carrying shares: the cross-op deferred-truncation IR.
+
+Contracts (ISSUE 5):
+  1. LATTICE — mpc/scale.py's pure decision procedure: pow2 detection,
+     the 2f headroom cap, largest-first forced-trunc planning.
+  2. METADATA — `Share.fb` is static pytree aux like `proto`: preserved
+     by with_sh / layout ops / flatten-unflatten on BOTH protocol
+     backends; `reveal` decodes exactly at any carried exponent.
+  3. FOLDS — mul_public by ±2**k is free (no records, no rounding);
+     negative and general public scalars stay correct.
+  4. GUARD — double-mul chains that would overflow RING32 at 3f hit the
+     forced-trunc guard (a real dealer trunc fires, values stay right);
+     squares and repeated consumers truncate ONCE (the force memo);
+     forcing a broadcast bills the pre-broadcast element count
+     (lineage); ReLU is truncation-free (bits at exponent 0).
+  5. QUICKSELECT — comparisons force to canonical scale before
+     reveal_lt: the selected set and the per-wave comparison ledger are
+     pinned bitwise against the canonical-input run.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.engine import MPCEngine
+from repro.mpc import compare, ops as mops, quickselect, scale
+from repro.mpc.comm import ledger_scope
+from repro.mpc.ring import RING32, RING64
+from repro.mpc.sharing import Share, reveal, share
+
+K = jax.random.key(7)
+
+
+def _k(i):
+    return jax.random.fold_in(K, i)
+
+
+# ---------------------------------------------------------------------------
+# 1. the lattice algebra
+# ---------------------------------------------------------------------------
+
+class TestLattice:
+    def test_pow2_exponent(self):
+        assert scale.pow2_exponent(2.0) == 1
+        assert scale.pow2_exponent(0.25) == -2
+        assert scale.pow2_exponent(-0.5) == -1
+        assert scale.pow2_exponent(1.0) == 0
+        assert scale.pow2_exponent(1 / 32) == -5
+        for not_pow2 in (1.5, 0.3, 0.0, 3.0, float("inf"), float("nan"),
+                         np.ones(3), "x", None):
+            assert scale.pow2_exponent(not_pow2) is None, not_pow2
+
+    @pytest.mark.parametrize("f", [12, 16])
+    def test_mul_plan(self, f):
+        # canonical inputs ride to 2f untruncated
+        assert scale.mul_plan(f, f, f) == (0, 0, 2 * f)
+        # one deferred operand: exactly its excess is forced
+        assert scale.mul_plan(2 * f, f, f) == (f, 0, 2 * f)
+        assert scale.mul_plan(f, 2 * f, f) == (0, f, 2 * f)
+        # both deferred: both force back to canonical
+        assert scale.mul_plan(2 * f, 2 * f, f) == (f, f, 2 * f)
+        # a comparison bit (exponent 0) multiplies for free
+        assert scale.mul_plan(2 * f, 0, f) == (0, 0, 2 * f)
+        # folded exponent above 2f: only the overhang is forced
+        assert scale.mul_plan(2 * f + 3, 0, f) == (3, 0, 2 * f)
+        # square at equal exponents plans equal shifts (one memoized
+        # trunc when the operands are the same object)
+        px, py, out = scale.mul_plan(f + 5, f + 5, f)
+        assert px == py == 5 and out == 2 * f
+
+    def test_align_target(self):
+        f = 12
+        assert scale.align_target(f, f, f) == f
+        assert scale.align_target(f, f + 5, f) == f + 5        # lift
+        assert scale.align_target(2 * f, f, f) == 2 * f
+        # equal above-cap exponents pass through (pure reinterpretation)
+        assert scale.align_target(2 * f + 5, 2 * f + 5, f) == 2 * f + 5
+        # unequal above-cap clamps to the 2f headroom cap
+        assert scale.align_target(2 * f, 2 * f + 5, f) == 2 * f
+
+
+# ---------------------------------------------------------------------------
+# 2. scale metadata through the container
+# ---------------------------------------------------------------------------
+
+class TestScaleMetadata:
+    @pytest.mark.parametrize("proto", ["2pc", "3pc"])
+    def test_pytree_roundtrip_preserves_scale(self, proto, x64):
+        s = share(_k(0), jnp.ones((2, 3)), RING64, proto)
+        z = mops.mul(s, s, _k(1))            # rides at 2f
+        leaves, treedef = jax.tree.flatten(z)
+        z2 = jax.tree.unflatten(treedef, leaves)
+        assert (z2.fb, z2.proto) == (2 * RING64.frac_bits, proto)
+        assert np.array_equal(np.asarray(z.sh), np.asarray(z2.sh))
+
+    @pytest.mark.parametrize("proto", ["2pc", "3pc"])
+    def test_with_sh_preserves_proto_and_scale(self, proto, x64):
+        s = share(_k(2), jnp.ones((4,)), RING64, proto)
+        z = mops.mul(s, s, _k(3))
+        rebuilt = z.with_sh(-z.sh)
+        assert (rebuilt.proto, rebuilt.fb, rebuilt.n_parties) == \
+            (proto, 2 * RING64.frac_bits, z.n_parties)
+
+    @pytest.mark.parametrize("proto", ["2pc", "3pc"])
+    def test_layout_ops_propagate_scale(self, proto, x64):
+        v = np.random.default_rng(0).normal(size=(2, 3, 4)) * 0.5
+        eng = MPCEngine(protocol=proto).with_key(_k(4))
+        s = share(_k(5), jnp.asarray(v, jnp.float32), RING64, proto)
+        z = mops.mul(s, s, _k(6))            # 2f
+        want = (v * v)
+        for got, ref in (
+                (eng.moveaxis(z, -1, 0), np.moveaxis(want, -1, 0)),
+                (eng.swapaxes(z, -1, -2), np.swapaxes(want, -1, -2)),
+                (eng.reshape(z, (6, 4)), want.reshape(6, 4)),
+                (eng.broadcast(eng.reshape(z, (2, 3, 4)), (2, 2, 3, 4)),
+                 np.broadcast_to(want, (2, 2, 3, 4)))):
+            assert got.fb == 2 * RING64.frac_bits
+            assert np.allclose(np.asarray(reveal(got)), ref, atol=1e-3)
+
+    def test_reveal_decodes_at_carried_scale_exactly(self, x64):
+        s = share(_k(7), jnp.asarray([1.5, -2.25, 0.125]), RING64)
+        z = mops.mul_public(s, 0.25)         # free fold, no rounding
+        assert z.fb == RING64.frac_bits + 2
+        got = np.asarray(reveal(z))
+        assert np.array_equal(got, np.asarray([0.375, -0.5625, 0.03125]))
+
+
+# ---------------------------------------------------------------------------
+# 3. public rescales
+# ---------------------------------------------------------------------------
+
+class TestPublicScalars:
+    def test_pow2_fold_is_free(self, x64):
+        s = share(_k(10), jnp.asarray([2.0, -3.0]), RING64)
+        with ledger_scope() as led:
+            z = mops.mul_public(s, 1 / 32, key=_k(11))
+        assert not led.records                # no wire, no dealer
+        assert z.fb == RING64.frac_bits + 5
+        assert np.allclose(np.asarray(reveal(z)), [0.0625, -0.09375])
+
+    def test_negative_pow2_folds_with_negation(self, x64):
+        s = share(_k(12), jnp.asarray([2.0, -3.0]), RING64)
+        z = mops.mul_public(s, -0.5, key=_k(13))
+        assert z.fb == RING64.frac_bits + 1
+        assert np.allclose(np.asarray(reveal(z)), [-1.0, 1.5])
+
+    def test_negative_general_scalar(self, x64):
+        s = share(_k(14), jnp.asarray([2.0, -3.0]), RING64)
+        z = mops.mul_public(s, -1.5, key=_k(15))
+        assert z.fb == 2 * RING64.frac_bits   # encoded at f, emitted 2f
+        assert np.allclose(np.asarray(reveal(z)), [-3.0, 4.5], atol=1e-3)
+
+    def test_general_scalar_on_deferred_input_forces_once(self):
+        s = share(_k(16), jnp.asarray([1.0, 2.0]), RING32)
+        z = mops.mul(s, s, _k(17))            # 2f
+        with ledger_scope() as led:
+            out = mops.mul_public(z, 1.5, key=_k(18))
+        assert [r.op for r in led.records] == ["offline.trunc_pair",
+                                               "trunc_open"]
+        assert out.fb == 2 * RING32.frac_bits
+        assert np.allclose(np.asarray(reveal(out)), [1.5, 6.0], atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# 4. the forced-trunc guard
+# ---------------------------------------------------------------------------
+
+class TestForcedGuard:
+    def test_double_mul_chain_fires_guard_on_ring32(self):
+        """f -> 2f -> 3f would overflow the 32-bit ring (3f = 36 bits):
+        the headroom plan forces the 2f operand back to canonical with
+        a REAL dealer trunc, and the product lands correct at 2f."""
+        vals = jnp.asarray([3.0, -2.5, 1.25])
+        x = share(_k(20), vals, RING32)
+        y = share(_k(21), vals, RING32)
+        z = share(_k(22), vals, RING32)
+        a = mops.mul(x, y, _k(23))
+        assert a.excess == RING32.frac_bits
+        with ledger_scope() as led:
+            b = mops.mul(a, z, _k(24))
+        trunc_ops = [r.op for r in led.records if "trunc" in r.op]
+        assert trunc_ops == ["offline.trunc_pair", "trunc_open"], \
+            "the forced-trunc guard must fire exactly once"
+        assert b.fb == 2 * RING32.frac_bits
+        want = np.asarray(vals) ** 3
+        assert np.allclose(np.asarray(reveal(b)), want, atol=2e-2)
+
+    def test_square_of_deferred_value_truncs_once(self):
+        s = share(_k(25), jnp.asarray([1.5, 0.5]), RING32)
+        z = mops.mul(s, s, _k(26))
+        with ledger_scope() as led:
+            z2 = mops.mul(z, z, _k(27))       # (2f, 2f) same object
+        assert sum(1 for r in led.records if r.op == "trunc_open") == 1
+        assert np.allclose(np.asarray(reveal(z2)),
+                           np.asarray([1.5, 0.5]) ** 4, atol=2e-2)
+
+    def test_force_memo_spans_consumers(self):
+        """Two independent consumers of one deferred tensor pay ONE
+        truncation (the ops.force cache) — the event reduction the
+        acceptance gate counts."""
+        s = share(_k(28), jnp.asarray([1.0, -1.0, 2.0]), RING32)
+        z = mops.mul(s, s, _k(29))
+        w = share(_k(30), jnp.asarray([0.5, 0.5, 0.5]), RING32)
+        with ledger_scope() as led:
+            mops.mul(z, w, _k(31))
+            mops.mul(z, w, _k(32))
+        assert sum(1 for r in led.records if r.op == "trunc_open") == 1
+
+    def test_broadcast_force_bills_preblast_numel(self):
+        """Lineage: forcing a broadcast truncates the SOURCE (n elems),
+        not the broadcast (n * rows) — fewer dealer pair bytes for the
+        same event."""
+        eng = MPCEngine(RING32).with_key(_k(33))
+        s = share(_k(34), jnp.asarray([1.0, 2.0]), RING32)
+        z = mops.mul(s, s, _k(35))            # (2,) at 2f
+        zb = eng.broadcast(eng.reshape(z, (1, 2)), (64, 2))
+        with ledger_scope() as led:
+            mops.force(zb, _k(36))
+        (pair, opn) = led.records
+        assert (pair.op, pair.numel) == ("offline.trunc_pair", 4)
+        assert (opn.op, opn.numel) == ("trunc_open", 2)   # NOT 128
+
+    def test_relu_is_truncation_free_on_deferred_input(self):
+        """Comparison bits share at exponent 0: ReLU of a 2f tensor
+        records a comparison and a multiply — no truncation anywhere —
+        and keeps the carried exponent."""
+        s = share(_k(37), jnp.asarray([1.5, -0.5, 2.0]), RING32)
+        z = mops.mul(s, s, _k(38))
+        with ledger_scope() as led:
+            r = compare.relu(z, _k(39))
+        assert not any("trunc" in rec.op for rec in led.records)
+        assert r.fb == z.fb
+        assert np.allclose(np.asarray(reveal(r)),
+                           np.maximum(np.asarray([1.5, -0.5, 2.0]) ** 2, 0),
+                           atol=2e-2)
+
+    def test_3pc_force_prices_rereplication_bytes(self, x64):
+        """The PR 4 follow-up: a keyed 3PC truncation is no longer free
+        — one output component rides the resharing flight (0 rounds)."""
+        s = share(_k(40), jnp.asarray([1.0, 2.0, 3.0]), RING64, "3pc")
+        z = mops.mul(s, s, _k(41))
+        with ledger_scope() as led:
+            mops.force(z, _k(42))
+        (rec,) = led.records
+        assert (rec.op, rec.rounds, rec.tag) == ("trunc_reshare", 0, "bw")
+        assert rec.nbytes == RING64.elem_bytes * 3
+        assert led.offline_nbytes == 0        # still dealer-free
+
+
+# ---------------------------------------------------------------------------
+# 4b. multi-layer RING32: the above-cap align-down must be a KEYED trunc
+# ---------------------------------------------------------------------------
+
+class TestMultiLayerRing32:
+    """Layer >= 2 is where the 2f residual meets a pow2-folded mean
+    above the cap: the centering sub must down-trunc the mean with the
+    dealer (exact), never a keyless local shift whose share-wrap
+    probability at fb > 2f corrupts rows silently. Pinned by parity AND
+    by the mirror (the align-down is a real, mirrored trunc event)."""
+
+    L = 2
+
+    def _setup(self):
+        import dataclasses
+        from repro.configs.paper_targets import TINY_TARGET
+        from repro.core import proxy as proxy_mod
+        from repro.core.proxy import ProxySpec
+        cfg = dataclasses.replace(TINY_TARGET, vocab_size=64, n_layers=2,
+                                  d_model=32, n_heads=2, n_kv_heads=2,
+                                  d_head=16, d_ff=64)
+        spec = ProxySpec(self.L, 2, 4)
+        pp = proxy_mod.random_proxy(_k(60), cfg, spec, seq_len=8,
+                                    n_classes=3)
+        return cfg, spec, pp
+
+    def test_two_layer_ring32_parity(self):
+        from repro.core import proxy as proxy_mod
+        from repro.engine import ClearEngine, proxy_entropy
+        cfg, spec, pp = self._setup()
+        tok = jnp.asarray(np.random.default_rng(8).integers(
+            0, cfg.vocab_size, (32, 8)))
+        clear = np.asarray(proxy_entropy(ClearEngine(), pp, cfg, tok, spec))
+        pp_sh = proxy_mod.share_proxy(_k(61), pp, RING32)
+        x = jnp.take(pp["embed"], tok, axis=0) * (cfg.d_model ** 0.5)
+        x_sh = share(_k(62), x.astype(jnp.float32), RING32)
+        eng = MPCEngine(RING32).with_key(_k(63))
+        got = np.asarray(reveal(proxy_entropy(eng, pp_sh, cfg, x_sh, spec)))
+        # every row, not just the max: wrap corruption is row-sparse
+        assert np.abs(got - clear).max() < 5e-3, np.abs(got - clear).max()
+
+    @pytest.mark.parametrize("proto", ["2pc", "3pc"])
+    def test_two_layer_mirror_holds(self, proto):
+        from repro.engine import TraceEngine, abstract_shares
+        from repro.mpc import costs
+        cfg, spec, pp = self._setup()
+        pp_sh = abstract_shares(cfg, spec, 8, 3, RING32, proto)
+        led = TraceEngine(RING32, protocol=proto).probe(
+            pp_sh, cfg, spec, (6, 8, cfg.d_model))
+        ana = costs.proxy_exec_cost(6, 8, cfg.d_model, spec.n_heads,
+                                    cfg.n_kv_heads, cfg.d_head,
+                                    spec.mlp_dim, 3, spec.n_layers,
+                                    ring=RING32, protocol=proto)
+        assert len(led.records) == len(ana.records)
+        for got, want in zip(led.records, ana.records):
+            assert (got.rounds, got.nbytes, got.numel, got.flops, got.tag) \
+                == (want.rounds, want.nbytes, want.numel, want.flops,
+                    want.tag), (got, want)
+
+
+# ---------------------------------------------------------------------------
+# 5. quickselect under scale-carrying scores
+# ---------------------------------------------------------------------------
+
+class TestQuickselectScale:
+    N, TOPK = 48, 16
+
+    @pytest.fixture
+    def canonical(self, x64):
+        vals = jnp.asarray(np.random.default_rng(5).normal(size=self.N),
+                           jnp.float32)
+        return share(_k(50), vals)
+
+    def test_deferred_scores_select_same_set(self, canonical, x64):
+        """`lift` is value-preserving, so the top-k of the 2f-scale pool
+        must equal the canonical run's — comparisons force first."""
+        deferred = mops.lift(canonical, RING64.frac_bits)
+        assert deferred.excess == RING64.frac_bits
+        base = quickselect.top_k_indices(canonical, self.TOPK, seed=3)
+        got = quickselect.top_k_indices(deferred, self.TOPK, seed=3)
+        assert np.array_equal(base, got)
+
+    @pytest.mark.parametrize("wave", [1, 4])
+    def test_per_wave_comparison_ledger_pinned(self, canonical, wave, x64):
+        """Regression pin: after the entry force, every per-wave
+        reveal_lt batch records EXACTLY the canonical run's flights —
+        bitwise ledger agreement per wave (RING64 entry force is a free
+        local shift, so the streams are identical end to end)."""
+        deferred = mops.lift(canonical, RING64.frac_bits)
+        with ledger_scope() as led_c:
+            quickselect.top_k_indices(canonical, self.TOPK, seed=3,
+                                      wave=wave)
+        with ledger_scope() as led_d:
+            quickselect.top_k_indices(deferred, self.TOPK, seed=3,
+                                      wave=wave)
+        recs_c = [(r.op, r.rounds, r.nbytes, r.numel, r.tag)
+                  for r in led_c.records]
+        recs_d = [(r.op, r.rounds, r.nbytes, r.numel, r.tag)
+                  for r in led_d.records]
+        assert recs_c == recs_d
+
+    def test_entry_force_restores_canonical_compare_encoding(self, x64):
+        """reveal_lt consumes canonical encodings: the pool is forced
+        once up front, not per comparison batch."""
+        vals = jnp.asarray([0.5, -1.0, 2.0, 1.0])
+        deferred = mops.lift(share(_k(51), vals), RING64.frac_bits)
+        idx = quickselect.top_k_indices(deferred, 2, seed=0)
+        assert np.array_equal(idx, np.asarray([2, 3]))
