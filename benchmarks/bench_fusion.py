@@ -26,6 +26,15 @@ gating:
   * ZERO dealer/offline events in every 3PC ledger (the dealer is dead)
   * costs.proxy_exec_cost(protocol="3pc") mirrors record-for-record
   * fused 3PC rounds strictly below eager at identical bytes
+
+`--protocol aby3trunc` runs the dealer-free gates above under the exact
+trunc2 backend; `--protocol spdz2pc` (the CI malicious smoke job) gates
+the malicious tier instead: MAC'd offline bytes present, the boundary
+mac_key/mac_check records in the eager stream, and fused rounds still
+strictly below eager. Every run also emits `malicious_overhead` — the
+semi-honest -> malicious cost curve (rounds, online/offline bytes,
+truncation events) of each hardened backend against its semi-honest
+baseline (spdz2pc vs 2pc, aby3trunc vs 3pc), per ring and fusion mode.
 """
 from __future__ import annotations
 
@@ -52,6 +61,14 @@ from repro.mpc.comm import WAN  # noqa: E402
 from repro.mpc.ring import RING32, RING64  # noqa: E402
 
 RINGS = {"ring64": RING64, "ring32": RING32}
+
+# protocols with no trusted dealer: their ledgers must never carry an
+# offline channel or dealer-op records
+DEALER_FREE = ("3pc", "aby3trunc")
+
+# each hardened backend and the semi-honest baseline its overhead curve
+# is measured against
+SEMI_HONEST_OF = {"spdz2pc": "2pc", "aby3trunc": "3pc"}
 
 
 def probe_grid(cfg: ArchConfig, spec: ProxySpec, *, batch: int, seq: int,
@@ -123,18 +140,36 @@ def smoke_execute(protocol: str = "2pc") -> dict:
             == (w.rounds, w.nbytes, w.numel, w.flops, w.tag)
             for g, w in zip(pb.records, ana.records)), \
             f"{protocol}/{rname}: proxy_exec_cost(fused=True) mirror diverged"
-        if protocol == "3pc":
+        if protocol in DEALER_FREE:
             # the headline gate: the dealer is DEAD — no offline channel,
             # no dealer ops, anywhere in the executed phase ledger
             for mode, rep in reports.items():
                 led = rep.ledger
                 assert led.offline_nbytes == 0, \
-                    f"3pc/{rname}/{mode}: offline bytes in a 3pc ledger"
+                    f"{protocol}/{rname}/{mode}: offline bytes in a " \
+                    f"dealer-free ledger"
                 bad = [r.op for r in led.records
                        if r.tag == "offline" or r.op.startswith("offline")
                        or r.op.startswith("beaver")
                        or r.op.startswith("trunc_open")]
-                assert not bad, f"3pc/{rname}/{mode}: dealer events {bad}"
+                assert not bad, \
+                    f"{protocol}/{rname}/{mode}: dealer events {bad}"
+        if protocol == "spdz2pc":
+            # the malicious gates: MAC'd dealer randomness present, and
+            # the boundary MAC check + key shipment on every ledger (op
+            # names survive fusion only on the offline channel and the
+            # eager stream — check each where it is visible)
+            for mode, rep in reports.items():
+                led = rep.ledger
+                assert led.offline_nbytes > 0, \
+                    f"spdz2pc/{rname}/{mode}: no MAC'd offline bytes"
+                assert any(r.op.endswith("mac_key") for r in led.records), \
+                    f"spdz2pc/{rname}/{mode}: no MAC-key shipment record"
+            eager_ops = [r.op for r in reports["eager"].per_batch.records]
+            assert "mac_check" in eager_ops, \
+                f"spdz2pc/{rname}: no boundary mac_check in eager stream"
+            assert "sacrifice" in eager_ops, \
+                f"spdz2pc/{rname}: no triple-sacrifice flight"
         e = reports["eager"].per_batch
         red = 1.0 - pb.rounds / e.rounds
         assert pb.nbytes == e.nbytes, \
@@ -164,9 +199,10 @@ def smoke_execute(protocol: str = "2pc") -> dict:
             assert trunc_pair_bytes < base_bytes, \
                 f"trunc-pair bytes {trunc_pair_bytes} not below PR4 " \
                 f"baseline {base_bytes}"
-        if protocol == "3pc":
+        if protocol in DEALER_FREE:
             assert pb.offline_nbytes == 0, \
-                f"3pc/{rname}: folded 3PC probe carries offline bytes"
+                f"{protocol}/{rname}: folded dealer-free probe carries " \
+                f"offline bytes"
         out[rname] = {"eager_rounds": e.rounds, "fused_rounds": pb.rounds,
                       "round_reduction": red, "bitwise_identical": True,
                       "ledger_agrees": True, "mirror_exact": True,
@@ -179,13 +215,63 @@ def smoke_execute(protocol: str = "2pc") -> dict:
     return out
 
 
+def _trunc_events(led) -> int:
+    """Protocol-level truncation events in an EAGER stream (trunc_open /
+    trunc2 / trunc_reshare); fused streams fold bw op names into their
+    flights, so the count is always taken from the eager probe — the
+    events themselves are mode-invariant."""
+    return sum(1 for r in led.records if r.tag == "bw" and "trunc" in r.op)
+
+
+def malicious_overhead(cfg: ArchConfig, spec: ProxySpec, *, batch: int,
+                       seq: int, classes: int) -> dict:
+    """The semi-honest -> hardened cost curve: per-batch TraceEngine
+    probes of each hardened backend against its baseline (spdz2pc vs
+    2pc, aby3trunc vs 3pc) on both rings and both fusion modes —
+    rounds, online bytes, offline (dealer) bytes, truncation events.
+    This is what malicious security costs on the wire."""
+    out = {}
+    for mal, base in SEMI_HONEST_OF.items():
+        for rname, ring in RINGS.items():
+            pp_m = abstract_shares(cfg, spec, seq, classes, ring, mal)
+            pp_b = abstract_shares(cfg, spec, seq, classes, ring, base)
+            shape = (batch, seq, cfg.d_model)
+            leds = {}
+            for proto, pp_sh in ((mal, pp_m), (base, pp_b)):
+                for mode, fused in (("eager", False), ("fused", True)):
+                    leds[proto, mode] = TraceEngine(
+                        ring, protocol=proto).probe(pp_sh, cfg, spec,
+                                                    shape, fused=fused)
+            te_m = _trunc_events(leds[mal, "eager"])
+            te_b = _trunc_events(leds[base, "eager"])
+            for mode in ("eager", "fused"):
+                lm, lb = leds[mal, mode], leds[base, mode]
+                out[f"{mal}_{rname}_{mode}"] = {
+                    "baseline": base,
+                    "rounds": lm.rounds,
+                    "rounds_base": lb.rounds,
+                    "rounds_overhead": lm.rounds - lb.rounds,
+                    "online_nbytes": lm.nbytes,
+                    "online_nbytes_base": lb.nbytes,
+                    "online_overhead": lm.nbytes - lb.nbytes,
+                    "offline_nbytes": lm.offline_nbytes,
+                    "offline_nbytes_base": lb.offline_nbytes,
+                    "trunc_events": te_m,
+                    "trunc_events_base": te_b,
+                }
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny geometry + executed acceptance gates (CI)")
-    ap.add_argument("--protocol", choices=["2pc", "3pc"], default="2pc",
-                    help="secret-sharing backend to bench; 3pc also "
-                         "re-runs the 2pc gates (CI 3pc smoke job)")
+    ap.add_argument("--protocol",
+                    choices=["2pc", "3pc", "spdz2pc", "aby3trunc"],
+                    default="2pc",
+                    help="secret-sharing backend to bench; any non-2pc "
+                         "choice also re-runs the 2pc gates (the CI 3pc "
+                         "and malicious smoke jobs)")
     ap.add_argument("--csv", action="store_true",
                     help="emit benchmarks.run CSV rows instead of summary")
     ap.add_argument("--out", default="BENCH_fusion.json")
@@ -211,25 +297,58 @@ def main(argv=None) -> int:
         "probe": probe_grid(cfg, spec, batch=batch, seq=seq,
                             classes=classes, n_batches=n_batches,
                             protocol=args.protocol),
+        # the semi-honest -> malicious overhead curve always ships with
+        # the benchmark: it is the trajectory the malicious smoke job
+        # gates and the number the threat-model docs quote
+        "malicious_overhead": malicious_overhead(cfg, spec, batch=batch,
+                                                 seq=seq, classes=classes),
     }
     if args.smoke:
-        # the 2pc gates always run (a 3pc job must not regress 2pc);
-        # --protocol 3pc adds the dealer-free gates on top
+        # the 2pc gates always run (a hardened job must not regress
+        # 2pc); any other --protocol adds its own gates on top
         result["smoke"] = smoke_execute("2pc")
-        if args.protocol == "3pc":
-            result["smoke_3pc"] = smoke_execute("3pc")
+        if args.protocol != "2pc":
+            result[f"smoke_{args.protocol}"] = smoke_execute(args.protocol)
 
-    if args.protocol == "3pc":
-        off = sum(v["offline_nbytes"] for k, v in result["probe"].items()
+    for key, curve in result["malicious_overhead"].items():
+        if curve["rounds_overhead"] < 0:
+            print(f"FAIL: {key}: hardened backend claims FEWER rounds "
+                  f"than its semi-honest baseline", file=sys.stderr)
+            return 1
+    if args.protocol == "spdz2pc":
+        off = sum(v["offline_nbytes"] for v in result["probe"].values()
+                  if isinstance(v, dict))
+        if off == 0:
+            print("FAIL: spdz2pc probe carries no MAC'd offline bytes",
+                  file=sys.stderr)
+            return 1
+        for rname in RINGS:
+            curve = result["malicious_overhead"][f"spdz2pc_{rname}_eager"]
+            if curve["rounds_overhead"] <= 0:
+                print(f"FAIL: spdz2pc/{rname}: malicious hardening shows "
+                      f"no round overhead (sacrifice/mac_check missing?)",
+                      file=sys.stderr)
+                return 1
+            if curve["offline_nbytes"] <= curve["offline_nbytes_base"]:
+                print(f"FAIL: spdz2pc/{rname}: MAC'd offline bytes not "
+                      f"above the semi-honest dealer's", file=sys.stderr)
+                return 1
+        r32 = result["probe"]["ring32_round_reduction"]
+        if r32 <= 0.0:
+            print("FAIL: fused spdz2pc probe shows no round reduction",
+                  file=sys.stderr)
+            return 1
+    elif args.protocol in DEALER_FREE:
+        off = sum(v["offline_nbytes"] for v in result["probe"].values()
                   if isinstance(v, dict))
         if off != 0:
-            print(f"FAIL: 3pc probe carries {off} offline dealer bytes",
-                  file=sys.stderr)
+            print(f"FAIL: {args.protocol} probe carries {off} offline "
+                  f"dealer bytes", file=sys.stderr)
             return 1
         r32 = result["probe"]["ring32_round_reduction"]
         if r32 <= 0.0:
-            print("FAIL: fused 3pc probe shows no round reduction",
-                  file=sys.stderr)
+            print(f"FAIL: fused {args.protocol} probe shows no round "
+                  f"reduction", file=sys.stderr)
             return 1
     else:
         r32 = result["probe"]["ring32_round_reduction"]

@@ -200,8 +200,10 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
                 top_local = quickselect.top_k_indices(ent_sh, keep,
                                                       seed=1234 + pi,
                                                       wave=qs_wave)
+                # backend-aware reconstruction: pass the Share (MAC'd
+                # schemes' extra rows are not value components)
                 appraisal = float(jnp.mean(
-                    reconstruct(ent_sh[np.asarray(top_local)].sh)
+                    reconstruct(ent_sh[np.asarray(top_local)])
                     .astype(jnp.float64) / ent_sh.ring.scale))
         else:
             ents = _score_clear(sel.engine, pp, cfg, tok, ph, sel.variant)

@@ -73,8 +73,9 @@ class MPCEngine:
         self.variant = variant
         self._key = key
         self._ctr = 0
-        # protocol backend: "2pc" (additive + trusted dealer) or "3pc"
-        # (replicated 2-of-3, dealer-free) — mpc/protocols/
+        # protocol backend: "2pc" (additive + trusted dealer), "3pc"
+        # (replicated 2-of-3, dealer-free), "spdz2pc" (malicious, MAC'd)
+        # or "aby3trunc" (3pc + exact trunc2) — mpc/protocols/
         self.protocol = protocol
         self.backend = protocols.get(protocol)
         # Beaver post-open combine for 2-D RING32 2PC matmuls: the fused
@@ -208,7 +209,15 @@ class MPCEngine:
             out = self.mlp(pp["mlp_se"], logits).reshape(b)
         else:
             out = nonlinear.entropy_from_logits(logits, self._k())
-        return mops.force(out, self._k())
+        out = mops.force(out, self._k())
+        # Malicious backends (spdz2pc) verify every partial opening of
+        # the forward with ONE batched MAC check at this boundary — the
+        # constant-size flight that makes the whole forward abort on
+        # tamper. Semi-honest backends have no hook; nothing fires.
+        check = getattr(self.backend, "mac_check_flight", None)
+        if check is not None:
+            check(self.ring)
+        return out
 
     # -- Table-3 baseline softmaxes over shares --------------------------
     def _quad_softmax(self, scores):
@@ -236,10 +245,13 @@ class MPCEngine:
         """
         mx = compare.max_(scores, axis=-1, key=self._k())
         mb = mx.with_sh(jnp.broadcast_to(mx.sh, scores.sh.shape))
-        t = mops.sub(scores, mb)
+        # keyed subs: the max-shift may align carried exponents DOWN a
+        # real truncation (keyless degrades to the local-shift path —
+        # absent for MAC'd shares, wrap-prone on RING32)
+        t = mops.sub(scores, mb, key=self._k())
         lo = mops.add_public(compare.relu(mops.add_public(t, 8.0), self._k()),
                              -8.0)
-        t = mops.sub(lo, compare.relu(lo, self._k()))
+        t = mops.sub(lo, compare.relu(lo, self._k()), key=self._k())
         # Horner: e = 1 + t(1 + t(1/2 + t(1/6 + t/24))) — one fused
         # flight: every message is a mask component, the public parts of
         # the chained openings reconstruct locally (fusion.py legality).

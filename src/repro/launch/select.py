@@ -14,9 +14,11 @@ executable share-level path, evaluated at the paper's geometry.
 --mode mpc runs Stage 2 through the wave executor (core/executor.py)
 with an MPCEngine interpreting the unified proxy forward; --ring 32
 switches the same code path onto the TPU-native RING32 ring and
---protocol {2pc,3pc} picks the secret-sharing backend (2pc: additive +
-trusted-dealer Beaver triples, offline bytes reported separately; 3pc:
-replicated 2-of-3, dealer-free — zero offline bytes).
+--protocol {2pc,3pc,spdz2pc,aby3trunc} picks the secret-sharing backend
+(2pc: additive + trusted-dealer Beaver triples, offline bytes reported
+separately; 3pc: replicated 2-of-3, dealer-free — zero offline bytes;
+spdz2pc: the malicious tier, MAC'd shares that abort on tamper;
+aby3trunc: 3pc with ABY3's exact 2-round truncation).
 --wave/--no-coalesce/--no-overlap select among Fig 7's four schedule
 variants at runtime; openings/reshares are round-compressed into fused
 flights by default (mpc/fusion.py) — --eager disables the batcher. The
@@ -178,10 +180,14 @@ def main() -> None:
                          "compression is the default; mpc/fusion.py)")
     ap.add_argument("--ring", type=int, choices=[64, 32], default=64,
                     help="MPC ring: 64 (CrypTen oracle) or 32 (TPU)")
-    ap.add_argument("--protocol", choices=["2pc", "3pc"], default="2pc",
+    ap.add_argument("--protocol",
+                    choices=["2pc", "3pc", "spdz2pc", "aby3trunc"],
+                    default="2pc",
                     help="secret-sharing backend: 2pc (additive + "
-                         "trusted-dealer Beaver) or 3pc (replicated "
-                         "2-of-3, dealer-free)")
+                         "trusted-dealer Beaver), 3pc (replicated "
+                         "2-of-3, dealer-free), spdz2pc (malicious: "
+                         "MAC'd shares, aborts on tamper) or aby3trunc "
+                         "(3pc with exact ABY3 truncation)")
     ap.add_argument("--no-resume", action="store_true",
                     help="ignore existing phase checkpoints")
     args = ap.parse_args()

@@ -45,7 +45,7 @@ def lt_zero(x: Share, key: jax.Array) -> Share:
     n = _numel(x.shape)
     comm.record("secure_cmp", rounds=CMP_ROUNDS, nbytes=CMP_BYTES * n,
                 numel=n, tag="lat")
-    v = reconstruct(x.sh)                      # functionality boundary
+    v = reconstruct(x)                         # functionality boundary
     bit = (v < 0).astype(x.ring.dtype)
     return share_encoded(key, bit, x.ring, x.proto, fb=0)
 
@@ -60,7 +60,7 @@ def reveal_lt(x: Share, y: Share) -> jax.Array:
     n = _numel(d.shape)
     comm.record("secure_cmp_reveal", rounds=CMP_ROUNDS, nbytes=CMP_BYTES * n,
                 numel=n, tag="lat")
-    return reconstruct(d.sh) < 0
+    return reconstruct(d) < 0
 
 
 def relu(x: Share, key: jax.Array) -> Share:
@@ -84,10 +84,13 @@ def max_(x: Share, axis: int, key: jax.Array) -> Share:
         lo = cur.with_sh(jax.lax.slice_in_dim(cur.sh, 0, half, axis=ax))
         hi = cur.with_sh(jax.lax.slice_in_dim(cur.sh, half, 2 * half,
                                               axis=ax))
-        kb, km, key = jax.random.split(jax.random.fold_in(key, i), 3)
+        kb, km, ka, key = jax.random.split(jax.random.fold_in(key, i), 4)
         b = le(lo, hi, kb)                      # [lo < hi]
         diff = ops.sub(hi, lo)
-        mx = ops.add(lo, ops.mul(b, diff, km))  # lo + b*(hi-lo)
+        # keyed: the align clamp may FORCE lo down a real truncation
+        # (keyless would be the local-shift path — wrap-prone on RING32
+        # and nonexistent for MAC'd shares)
+        mx = ops.add(lo, ops.mul(b, diff, km), key=ka)  # lo + b*(hi-lo)
         if m % 2:
             tail = cur.with_sh(jax.lax.slice_in_dim(cur.sh, 2 * half, m,
                                                     axis=ax))

@@ -15,16 +15,26 @@ RING32 (the TPU ring) uses dealer-assisted truncation: every fixed-point
 product pays one extra opening round (`trunc_open`), mirrored here
 record-for-record against the dealer path of `Additive2PC.trunc`.
 
-Protocol parameterization: the same primitives take `protocol=`
-("2pc"/"3pc") and mirror the chosen backend's records exactly:
-  2pc  Beaver opening flights (bytes ~ inputs) + dealer bytes in the
-       OFFLINE channel (tag="offline", 0 rounds: triples and, on
-       RING32, truncation pairs) in the positions the executable dealer
-       records them.
-  3pc  one resharing flight per mul/matmul (bytes ~ OUTPUT) and, per
-       forced truncation, a 0-round `trunc_reshare` record pricing the
-       re-replication component on the resharing flight; zero offline
-       records — the dealer-free cost profile.
+Protocol parameterization: the same primitives take `protocol=` and
+mirror the chosen backend's records exactly:
+  2pc       Beaver opening flights (bytes ~ inputs) + dealer bytes in
+            the OFFLINE channel (tag="offline", 0 rounds: triples and,
+            on RING32, truncation pairs) in the positions the
+            executable dealer records them.
+  3pc       one resharing flight per mul/matmul (bytes ~ OUTPUT) and,
+            per forced truncation, a 0-round `trunc_reshare` record
+            pricing the re-replication component on the resharing
+            flight; zero offline records — the dealer-free cost
+            profile.
+  spdz2pc   the malicious tier: MAC'd dealer randomness (4 components
+            per element — DOUBLE the semi-honest offline bytes), a
+            sacrifice flight before every Beaver open, dealer
+            truncation pairs on BOTH rings, and the constant-size
+            batched MAC check + MAC-key shipment at the forward
+            boundary (`proxy_exec_cost` tail).
+  aby3trunc 3pc resharing costs everywhere, except each forced
+            truncation is one exact `trunc2` subprotocol: rounds=2
+            (a batcher barrier), 6 components of wire.
 """
 from __future__ import annotations
 
@@ -53,6 +63,17 @@ def _offline(n_elems: int, op: str, ring: RingSpec) -> CostRecord:
                       "offline")
 
 
+def _offline_mac(n_elems: int, op: str, ring: RingSpec) -> CostRecord:
+    """MAC'd dealer randomness (mirrors spdz2pc._record_offline_mac):
+    4 components per element (value + MAC, both parties)."""
+    return CostRecord(op, 0, 4 * ring.elem_bytes * n_elems, n_elems, 0,
+                      "offline")
+
+
+# protocols sharing the replicated-3pc wire profile for mul/matmul
+_P3 = ("3pc", "aby3trunc")
+
+
 def merge(*ledgers: Ledger) -> Ledger:
     out = Ledger()
     for led in ledgers:
@@ -66,7 +87,7 @@ def merge(*ledgers: Ledger) -> Ledger:
 
 def open_cost(n: int, op: str = "open", *, ring: RingSpec = RING64,
               protocol: str = "2pc") -> Ledger:
-    parties = 3 if protocol == "3pc" else 2
+    parties = 3 if protocol in _P3 else 2
     return _led(CostRecord(op, 1, parties * ring.elem_bytes * n, n, 0, "bw"))
 
 
@@ -80,10 +101,21 @@ def trunc_cost(n: int, op: str = "trunc_open", *,
       3pc both     local regrouped shift + the re-replication message
                    riding the next resharing flight: 0 rounds, one
                    output component's bytes (the ROADMAP PR 4 follow-up
-                   — previously modeled as free, now priced)."""
+                   — previously modeled as free, now priced)
+      spdz2pc both MAC'd dealer pair + one partial-open flight — local
+                   shifting is not MAC-preserving, so even RING64 pays
+                   (the malicious overhead curve's truncation story)
+      aby3trunc    one exact trunc2 subprotocol: rounds=2 (the masked
+                   open depends on the pair-generation messages — a
+                   batcher barrier), 6 components of wire, both rings."""
+    if protocol == "aby3trunc":
+        return _led(CostRecord(op, 2, 6 * ring.elem_bytes * n, n, 0, "bw"))
     if protocol == "3pc":
         return _led(CostRecord(op + ".reshare", 0, ring.elem_bytes * n, n,
                                0, "bw"))
+    if protocol == "spdz2pc":
+        return _led(_offline_mac(2 * n, op + ".pair", ring),
+                    CostRecord(op, 1, 2 * ring.elem_bytes * n, n, 0, "bw"))
     if ring.bits >= 64:
         return Ledger()
     return _led(_offline(2 * n, op + ".pair", ring),
@@ -98,9 +130,19 @@ def mul_cost(n: int, op: str = "beaver_mul", *,
     the executable scale-carrying ops emit the RAW product
     (`inline_trunc=False`) and `proxy_exec_cost` places the forced
     truncations where `mpc/scale.py` actually fires them."""
-    if protocol == "3pc":
+    if protocol in _P3:
         led = _led(CostRecord(op, 1, 3 * ring.elem_bytes * n, n,
                               6 * n, "bw"))
+    elif protocol == "spdz2pc":
+        # MAC'd triple + sacrificed triple (offline), the 1-round
+        # sacrifice correlation open, then the Beaver open — in the
+        # exact order spdz2pc.mul records them
+        led = _led(_offline_mac(3 * n, op + ".triple", ring),
+                   _offline_mac(3 * n, op + ".sacrifice_triple", ring),
+                   CostRecord(op + ".sacrifice", 1,
+                              4 * ring.elem_bytes * n, n, 0, "bw"),
+                   CostRecord(op, 1, 4 * ring.elem_bytes * n, n,
+                              4 * n, "bw"))
     else:
         led = _led(_offline(3 * n, op + ".triple", ring),
                    CostRecord(op, 1, 4 * ring.elem_bytes * n, n,
@@ -115,12 +157,22 @@ def matmul_cost(batch: int, m: int, k: int, n: int,
                 op: str = "beaver_matmul", *,
                 ring: RingSpec = RING64, protocol: str = "2pc",
                 inline_trunc: bool = True) -> Ledger:
-    if protocol == "3pc":
+    if protocol in _P3:
         # resharing flight of the OUTPUT: bytes ~ batch*m*n (the inverse
         # of Beaver's input-proportional wire profile)
         out_elems = batch * m * n
         led = _led(CostRecord(op, 1, 3 * ring.elem_bytes * out_elems,
                               out_elems, 6 * batch * m * k * n, "bw"))
+    elif protocol == "spdz2pc":
+        in_elems = batch * (m * k + k * n)
+        trip = in_elems + batch * m * n
+        led = _led(_offline_mac(trip, op + ".triple", ring),
+                   _offline_mac(trip, op + ".sacrifice_triple", ring),
+                   CostRecord(op + ".sacrifice", 1,
+                              2 * ring.elem_bytes * in_elems, in_elems,
+                              0, "bw"),
+                   CostRecord(op, 1, 2 * ring.elem_bytes * in_elems,
+                              in_elems, 2 * batch * m * k * n, "bw"))
     else:
         in_elems = batch * (m * k + k * n)
         nbytes = 2 * ring.elem_bytes * in_elems
@@ -341,7 +393,11 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
     flights (output-proportional bytes) in place of Beaver openings,
     0-round `trunc_reshare` bytes wherever a truncation is forced (the
     re-replication component riding the resharing flight), and an
-    empty offline channel on both rings.
+    empty offline channel on both rings. `protocol="spdz2pc"` mirrors
+    the malicious tier (doubled MAC'd offline bytes, a sacrifice flight
+    per multiply, dealer truncation on both rings, and the boundary
+    mac_key/mac_check tail); `protocol="aby3trunc"` swaps every forced
+    truncation for the 2-round exact `trunc2` record.
 
     `fused=True` mirrors the round-compressed stream instead: the eager
     event stream below — with GroupBegin/GroupEnd markers placed exactly
@@ -469,6 +525,14 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
     # the engine's entropy head forces its output canonical — the
     # forward's public boundary (QuickSelect consumes fb == frac_bits)
     forced(ent, "entropy.force", f)
+    if protocol == "spdz2pc":
+        # the malicious boundary: dealer MAC-key shipment + ONE batched
+        # MAC check for every partial open of the forward (constant
+        # size), in the order spdz2pc.mac_check_flight records them
+        events.append(CostRecord(f"{op}.mac_key", 0, 2 * ring.elem_bytes,
+                                 1, 0, "offline"))
+        events.append(CostRecord(f"{op}.mac_check", 1,
+                                 4 * ring.elem_bytes, 1, 0, "bw"))
     if fused:
         return fusion.compress_events(events)
     led = Ledger()

@@ -142,10 +142,13 @@ def neg(x: Share) -> Share:
 
 
 def add_public(x: Share, v) -> Share:
-    """Add a public constant: component 0 absorbs it (every backend's
-    `from_public` convention), encoded at the carried exponent."""
+    """Add a public constant, encoded at the carried exponent. Affine,
+    not linear in the components — dispatches to the backend: component
+    0 absorbs it (the `from_public` convention), and MAC'd schemes also
+    update their MAC rows by alpha_i * c to keep the authenticated
+    invariant."""
     enc = x.ring.encode_at(jnp.asarray(v), x.fb)
-    return x.with_sh(x.sh.at[0].add(jnp.broadcast_to(enc, x.shape)))
+    return x.with_sh(x.backend.add_public_encoded(x.sh, enc))
 
 
 def mul_public(x: Share, v, *, key: jax.Array | None = None) -> Share:

@@ -15,13 +15,25 @@ file. This package makes the scheme a backend:
                 a correlated-PRNG zero-share resharing flight, and
                 truncation is probabilistic and local — NO dealer, zero
                 offline bytes.
+  spdz2pc       MALICIOUS-security 2PC: SPDZ-style MAC'd additive
+                shares (4 leading-axis rows: value + MAC components),
+                sacrifice-authenticated Beaver triples, partial opens
+                with a batched boundary MAC check, dealer truncation on
+                BOTH rings — tampering aborts (MacCheckError).
+  aby3trunc     replicated3pc with ABY3's EXACT two-phase `trunc2` in
+                place of the probabilistic regrouped shift: <= 1 ulp
+                always, zero wraps, 2 rounds per forced truncation.
 
 A backend owns exactly the operations where the schemes differ:
 
-  n_parties      leading party-axis size of every `Share`
+  n_parties      leading component-axis size of every `Share` (4 for
+                 spdz2pc: 2 value + 2 MAC rows)
   share_encoded  layout of a fresh sharing (uniform components)
   from_public    trivial sharing of a public ring element
-  open_bytes     wire bytes to open n elements (n_parties * elem_bytes)
+  open_bytes     wire bytes to open n elements
+  reconstruct    value from stacked components (MAC'd schemes also
+                 enqueue a check obligation)
+  add_public_encoded  affine constant injection (MAC rows update too)
   mul / matmul   ring multiplication incl. its wire flights
   trunc          fixed-point truncation after a product
 
@@ -38,13 +50,17 @@ routes through `get(name)`.
 """
 from __future__ import annotations
 
-from repro.mpc.protocols.base import ProtocolBackend
+from repro.mpc.protocols.base import BackendDefaults, ProtocolBackend
 from repro.mpc.protocols.additive2pc import Additive2PC
 from repro.mpc.protocols.replicated3pc import Replicated3PC
+from repro.mpc.protocols.spdz2pc import SPDZ2PC
+from repro.mpc.protocols.aby3trunc import ABY3Trunc
 
 PROTOCOLS: dict[str, ProtocolBackend] = {
     "2pc": Additive2PC(),
     "3pc": Replicated3PC(),
+    "spdz2pc": SPDZ2PC(),
+    "aby3trunc": ABY3Trunc(),
 }
 
 
@@ -57,5 +73,5 @@ def get(name: str) -> ProtocolBackend:
             f"{sorted(PROTOCOLS)})") from None
 
 
-__all__ = ["ProtocolBackend", "Additive2PC", "Replicated3PC", "PROTOCOLS",
-           "get"]
+__all__ = ["ProtocolBackend", "BackendDefaults", "Additive2PC",
+           "Replicated3PC", "SPDZ2PC", "ABY3Trunc", "PROTOCOLS", "get"]

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.mpc.ring import RingSpec
 from repro.mpc import comm
-from repro.mpc.protocols.base import numel
+from repro.mpc.protocols.base import BackendDefaults, numel
 
 
 def _share_raw(key: jax.Array, enc: jax.Array, ring: RingSpec) -> jax.Array:
@@ -110,7 +110,7 @@ def triple_bytes(a_shape, b_shape, c_shape, ring: RingSpec) -> int:
 # the backend
 # ---------------------------------------------------------------------------
 
-class Additive2PC:
+class Additive2PC(BackendDefaults):
     name = "2pc"
     n_parties = 2
 

@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 
 from repro.mpc.ring import RingSpec
 
@@ -23,6 +24,25 @@ def numel(shape) -> int:
     return n
 
 
+class BackendDefaults:
+    """Default implementations of the affine share transforms that most
+    schemes share: reconstruction is the plain sum over the leading
+    axis, and a public constant lands on component 0 (`from_public`'s
+    convention). Schemes whose leading axis carries NON-value rows — the
+    MAC components of spdz2pc — override both: summing all rows there
+    would yield value + alpha*value, and a constant must also update the
+    MAC rows to keep the authenticated invariant."""
+
+    def reconstruct(self, sh: jax.Array) -> jax.Array:
+        out = sh[0]
+        for i in range(1, sh.shape[0]):
+            out = out + sh[i]
+        return out
+
+    def add_public_encoded(self, sh: jax.Array, enc: jax.Array) -> jax.Array:
+        return sh.at[0].add(jnp.broadcast_to(enc, sh.shape[1:]))
+
+
 @runtime_checkable
 class ProtocolBackend(Protocol):
     """Scheme-dependent share operations.
@@ -31,7 +51,14 @@ class ProtocolBackend(Protocol):
     their own wire flights (and, for dealer-based schemes, their offline
     bytes) into the ambient ledger; `trunc` implements the scheme's
     fixed-point truncation. Everything linear is protocol-generic and
-    lives in `mpc/ops`.
+    lives in `mpc/ops` — with two affine exceptions (`reconstruct`,
+    `add_public_encoded`) that dispatch here because MAC'd schemes
+    interpret their extra leading-axis rows differently.
+
+    Backends targeting MALICIOUS security may additionally expose
+    `mac_check_flight(ring)`: the engine calls it once at the forward's
+    public boundary (`MPCEngine.entropy_head`) to price — and, when a
+    verification scope is ambient, run — the batched MAC check.
     """
 
     name: str                     # registry key, also Share.proto
@@ -48,6 +75,15 @@ class ProtocolBackend(Protocol):
 
     def open_bytes(self, ring: RingSpec, n: int) -> int:
         """Wire bytes for opening n ring elements (1 round)."""
+        ...
+
+    def reconstruct(self, sh: jax.Array) -> jax.Array:
+        """Value from the stacked components (the functionality-boundary
+        reconstruction; MAC'd schemes also enqueue a check obligation)."""
+        ...
+
+    def add_public_encoded(self, sh: jax.Array, enc: jax.Array) -> jax.Array:
+        """Add an already-encoded public constant to the sharing."""
         ...
 
     def mul(self, x, y, key: jax.Array):

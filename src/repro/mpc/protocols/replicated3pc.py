@@ -50,10 +50,10 @@ import jax.numpy as jnp
 
 from repro.mpc.ring import RingSpec
 from repro.mpc import comm
-from repro.mpc.protocols.base import numel
+from repro.mpc.protocols.base import BackendDefaults, numel
 
 
-class Replicated3PC:
+class Replicated3PC(BackendDefaults):
     name = "3pc"
     n_parties = 3
 

@@ -126,9 +126,17 @@ class Share:
 AShare = Share
 
 
-def reconstruct(sh: jax.Array) -> jax.Array:
-    """Ring sum over the leading party axis (the functionality-boundary
-    reconstruction every backend shares)."""
+def reconstruct(sh) -> jax.Array:
+    """Functionality-boundary reconstruction.
+
+    Pass a `Share` to dispatch to its backend — REQUIRED for schemes
+    whose extra leading-axis rows are not value components (spdz2pc's
+    MAC rows: summing all four rows would yield value + alpha*value),
+    and what lets MAC'd backends enqueue the check obligation for every
+    opened value. A raw stacked array still sums its rows (the legacy
+    additive path, correct for 2pc/3pc component arrays)."""
+    if isinstance(sh, Share):
+        return sh.backend.reconstruct(sh.sh)
     out = sh[0]
     for i in range(1, sh.shape[0]):
         out = out + sh[i]
@@ -160,7 +168,7 @@ def open_(x: Share, op: str = "open") -> jax.Array:
     for free."""
     comm.record(op, rounds=1, nbytes=x.backend.open_bytes(x.ring, _numel(x)),
                 numel=_numel(x), tag="bw")
-    return reconstruct(x.sh)
+    return reconstruct(x)
 
 
 def reveal(x: Share) -> jax.Array:

@@ -1,0 +1,325 @@
+"""Cross-backend conformance suite — every registered protocol backend
+satisfies the same executable contracts.
+
+Parametrized over ALL of `protocols.PROTOCOLS` (2pc, 3pc, spdz2pc,
+aby3trunc) x both rings:
+
+  1. ROUNDTRIP    share -> open reconstructs the encoded value exactly.
+  2. WIRE MODEL   `open_` records 1 round of `backend.open_bytes`,
+                  matching `costs.open_cost` tuple-for-tuple.
+  3. ARITHMETIC   mul / matmul match the clear product within the
+                  ring's fixed-point tolerance.
+  4. SCALE LATTICE add/sub/concat/stack align mixed-exponent operands
+                  (canonical vs 2f products) exactly — the carried-
+                  scale contract is backend-independent.
+  5. TRUNCATION   trunc(shift=) holds each scheme's error bound: <= a
+                  few ulp for every backend on small-range values
+                  (exact schemes by construction; probabilistic ones
+                  because the wrap term vanishes at small |v|).
+  6. MIRROR       each sampled op's executed ledger records equal the
+                  analytic `costs.*_cost` records (rounds, bytes,
+                  numel, flops, tag).
+  7. TAMPER       semi-honest backends accept a flipped share bit
+                  SILENTLY (documented here); only spdz2pc aborts
+                  (pinned in tests/test_malicious.py).
+
+The property-based cases sample values/shapes with hypothesis; when
+hypothesis is not installed they skip via the conftest shim (CI fails
+if that happens in the tier-1 job — see .github/workflows/ci.yml).
+"""
+import contextlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.mpc import costs, ops as mops, protocols
+from repro.mpc.comm import ledger_scope
+from repro.mpc.ring import RING32, RING64, x64_scope
+from repro.mpc.sharing import open_, reveal, share
+
+PROTOS = sorted(protocols.PROTOCOLS)
+RINGS = {"ring64": RING64, "ring32": RING32}
+K = jax.random.key(11)
+
+
+def _k(i):
+    return jax.random.fold_in(K, i)
+
+
+def ring_scope(ring):
+    """RING64 arithmetic needs x64; RING32 must run WITHOUT global x64
+    (jnp reductions would silently promote int32 sums to int64)."""
+    return x64_scope() if ring.bits >= 64 else contextlib.nullcontext()
+
+
+def tol(ring, ulp=4):
+    return ulp / ring.scale
+
+
+def _wrap_prone(proto, ring):
+    """3pc on RING32 truncates by probabilistic share-regroup: each
+    element wraps with probability |enc|/2^32, landing a 2^(32-2f)
+    error when it does. Every other scheme/ring combo is exact (dealer
+    pair, trunc2) or wraps with ~2^-50 probability (RING64 shifts)."""
+    return proto == "3pc" and ring.bits == 32
+
+
+def _assert_close(got, want, ring, proto, ulp=8):
+    err = np.abs(got - want)
+    if _wrap_prone(proto, ring):
+        wrapped = err > 1.0
+        # bounded-probability wraps are this scheme's documented error
+        # mode (quantified in test_malicious's statistical wrap test)
+        assert wrapped.mean() < 0.5, proto
+        err = err[~wrapped]
+        if err.size == 0:
+            return
+    assert err.max() < tol(ring, ulp), (proto, ring.bits)
+
+
+def _vals(i, shape, scale=3.0):
+    return np.asarray(jax.random.normal(_k(i), shape)) * scale
+
+
+ring_params = pytest.mark.parametrize("ring", list(RINGS.values()),
+                                      ids=list(RINGS))
+proto_params = pytest.mark.parametrize("proto", PROTOS)
+
+
+# ---------------------------------------------------------------------------
+# 1-2. roundtrip + wire model
+# ---------------------------------------------------------------------------
+
+@proto_params
+@ring_params
+def test_share_open_roundtrip(proto, ring):
+    v = _vals(1, (5, 3))
+    with ring_scope(ring):
+        x = share(_k(2), jnp.asarray(v, jnp.float32), ring, proto)
+        assert x.sh.shape[0] == protocols.get(proto).n_parties
+        got = np.asarray(reveal(x))
+    assert np.abs(got - v).max() < tol(ring, 2), proto
+
+
+@proto_params
+@ring_params
+def test_open_wire_model_matches_mirror(proto, ring):
+    n = 12
+    with ring_scope(ring):
+        x = share(_k(3), jnp.ones((n,), jnp.float32), ring, proto)
+        with ledger_scope() as led:
+            open_(x)
+    assert len(led.records) == 1
+    r = led.records[0]
+    assert r.rounds == 1
+    assert r.nbytes == protocols.get(proto).open_bytes(ring, n)
+    (w,) = costs.open_cost(n, ring=ring, protocol=proto).records
+    assert (r.rounds, r.nbytes, r.numel, r.flops, r.tag) == \
+        (w.rounds, w.nbytes, w.numel, w.flops, w.tag)
+
+
+# ---------------------------------------------------------------------------
+# 3. secure arithmetic vs clear
+# ---------------------------------------------------------------------------
+
+@proto_params
+@ring_params
+def test_mul_matches_clear(proto, ring):
+    a, b = _vals(4, (4, 5)), _vals(5, (4, 5))
+    with ring_scope(ring):
+        x = share(_k(6), jnp.asarray(a, jnp.float32), ring, proto)
+        y = share(_k(7), jnp.asarray(b, jnp.float32), ring, proto)
+        z = mops.force(mops.mul(x, y, _k(8)), _k(9))
+        got = np.asarray(reveal(z))
+    _assert_close(got, a * b, ring, proto)
+
+
+@proto_params
+@ring_params
+def test_matmul_matches_clear(proto, ring):
+    a, b = _vals(10, (3, 4), 1.0), _vals(11, (4, 2), 1.0)
+    with ring_scope(ring):
+        x = share(_k(12), jnp.asarray(a, jnp.float32), ring, proto)
+        y = share(_k(13), jnp.asarray(b, jnp.float32), ring, proto)
+        z = mops.force(mops.matmul(x, y, _k(14)), _k(15))
+        got = np.asarray(reveal(z))
+    _assert_close(got, a @ b, ring, proto, ulp=16)
+
+
+# ---------------------------------------------------------------------------
+# 4. scale-lattice alignment of linear ops
+# ---------------------------------------------------------------------------
+
+@proto_params
+@ring_params
+def test_linear_ops_align_mixed_exponents(proto, ring):
+    """A canonical-f operand meets a 2f product in add/sub/concat/stack:
+    the lattice lifts the lower exponent exactly on EVERY backend."""
+    a, b, c = _vals(16, (6,)), _vals(17, (6,)), _vals(18, (6,))
+    with ring_scope(ring):
+        x = share(_k(19), jnp.asarray(a, jnp.float32), ring, proto)
+        y = share(_k(20), jnp.asarray(b, jnp.float32), ring, proto)
+        w = share(_k(21), jnp.asarray(c, jnp.float32), ring, proto)
+        p = mops.mul(x, y, _k(22))            # rides at 2f
+        assert p.excess > 0
+        add = np.asarray(reveal(mops.add(p, w)))
+        sub = np.asarray(reveal(mops.sub(p, w)))
+        cat = np.asarray(reveal(mops.concat([p, w], axis=0)))
+        stk = np.asarray(reveal(mops.stack([w, p], axis=0)))
+    t = tol(ring, 16)
+    assert np.abs(add - (a * b + c)).max() < t, proto
+    assert np.abs(sub - (a * b - c)).max() < t, proto
+    assert np.abs(cat - np.concatenate([a * b, c])).max() < t, proto
+    assert np.abs(stk - np.stack([c, a * b])).max() < t, proto
+
+
+# ---------------------------------------------------------------------------
+# 5. truncation error bound per scheme
+# ---------------------------------------------------------------------------
+
+@proto_params
+@ring_params
+def test_trunc_shift_error_bound(proto, ring):
+    """force(product) truncates the 2f excess in ONE trunc(shift=).
+    Exact schemes (2pc dealer pair on RING32, spdz2pc's MAC'd pair,
+    aby3trunc's trunc2) and the RING64 shifts stay within a few ulp
+    everywhere; 3pc on RING32 additionally wraps with probability
+    |enc|/2^32 per element — its non-wrapped elements still meet the
+    same ulp bound (the wrap RATE itself is gated statistically in
+    test_malicious)."""
+    a, b = _vals(23, (64,)), _vals(24, (64,))
+    with ring_scope(ring):
+        x = share(_k(25), jnp.asarray(a, jnp.float32), ring, proto)
+        y = share(_k(26), jnp.asarray(b, jnp.float32), ring, proto)
+        p = mops.mul(x, y, _k(27))
+        f = mops.force(p, _k(28))
+        assert f.fb == ring.frac_bits
+        got = np.asarray(reveal(f))
+    _assert_close(got, a * b, ring, proto)
+
+
+# ---------------------------------------------------------------------------
+# 6. executed ledger == analytic mirror, per sampled op
+# ---------------------------------------------------------------------------
+
+def _tuples(records):
+    return [(r.rounds, r.nbytes, r.numel, r.flops, r.tag) for r in records]
+
+
+@proto_params
+@ring_params
+@pytest.mark.parametrize("opname", ["mul", "matmul", "force"])
+def test_op_ledger_matches_mirror(proto, ring, opname):
+    with ring_scope(ring):
+        if opname == "matmul":
+            x = share(_k(29), jnp.ones((3, 4), jnp.float32), ring, proto)
+            y = share(_k(30), jnp.ones((4, 2), jnp.float32), ring, proto)
+            with ledger_scope() as led:
+                mops.matmul(x, y, _k(31))
+            want = costs.matmul_cost(1, 3, 4, 2, ring=ring, protocol=proto,
+                                     inline_trunc=False)
+        elif opname == "mul":
+            x = share(_k(32), jnp.ones((7,), jnp.float32), ring, proto)
+            with ledger_scope() as led:
+                mops.mul(x, x, _k(33))
+            want = costs.mul_cost(7, ring=ring, protocol=proto,
+                                  inline_trunc=False)
+        else:
+            x = share(_k(34), jnp.ones((7,), jnp.float32), ring, proto)
+            p = mops.mul(x, x, _k(35))
+            with ledger_scope() as led:
+                mops.force(p, _k(36))
+            want = costs.trunc_cost(7, ring=ring, protocol=proto)
+    assert _tuples(led.records) == _tuples(want.records), \
+        (proto, ring.bits, opname,
+         [r.op for r in led.records], [r.op for r in want.records])
+
+
+# ---------------------------------------------------------------------------
+# 7. semi-honest backends accept tampering SILENTLY
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proto", [p for p in PROTOS if p != "spdz2pc"])
+def test_semi_honest_backends_accept_tamper_silently(proto):
+    """The documented gap malicious security closes: flip one bit of a
+    share component and every semi-honest backend opens the corrupted
+    value without complaint — there is no authentication to trip. The
+    spdz2pc abort on the identical flip is pinned in test_malicious."""
+    v = np.asarray([1.5, -2.25], np.float32)
+    with x64_scope():
+        x = share(_k(37), jnp.asarray(v), RING64, proto)
+        honest = np.asarray(reveal(x))
+        bad = x.with_sh(x.sh.at[0, 0].add(1 << 8))
+        tampered = np.asarray(reveal(bad))   # no exception: accepted
+    assert np.abs(honest - v).max() < tol(RING64, 2)
+    assert tampered[0] != honest[0], "tamper must corrupt the opening"
+    assert tampered[1] == honest[1]
+
+
+# ---------------------------------------------------------------------------
+# property-based cases (hypothesis; skip via conftest shim when absent)
+# ---------------------------------------------------------------------------
+
+@proto_params
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(-8, 8, allow_nan=False, allow_infinity=False,
+                          width=32), min_size=1, max_size=8))
+def test_prop_roundtrip_any_values(proto, vs):
+    v = np.asarray(vs, np.float32)
+    with x64_scope():
+        got = np.asarray(reveal(share(_k(38), jnp.asarray(v), RING64,
+                                      proto)))
+    assert np.abs(got - v).max() < tol(RING64, 2), proto
+
+
+@proto_params
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(-4, 4, allow_nan=False, allow_infinity=False,
+                          width=32), min_size=1, max_size=6),
+       st.floats(-4, 4, allow_nan=False, allow_infinity=False, width=32))
+def test_prop_affine_public_constant(proto, vs, c):
+    """add_public is exact on every backend (MAC'd schemes must update
+    their MAC rows too, or the next open would be rejected)."""
+    v = np.asarray(vs, np.float32)
+    with x64_scope():
+        x = share(_k(39), jnp.asarray(v), RING64, proto)
+        got = np.asarray(reveal(mops.add_public(x, float(c))))
+    assert np.abs(got - (v + np.float32(c))).max() < tol(RING64, 4), proto
+
+
+@proto_params
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.floats(-4, 4, allow_nan=False, allow_infinity=False,
+                          width=32), min_size=2, max_size=6),
+       st.integers(min_value=1, max_value=6))
+def test_prop_trunc_any_shift(proto, vs, shift):
+    """trunc(shift=) divides by 2**shift within a few ulp of the OUTPUT
+    exponent, for any sampled shift, on every backend."""
+    v = np.asarray(vs, np.float32)
+    with x64_scope():
+        x = share(_k(40), jnp.asarray(v), RING64, proto)
+        z = mops.trunc(x, key=_k(41), shift=shift)
+        assert z.fb == RING64.frac_bits - shift
+        got = np.asarray(reveal(z))
+    assert np.abs(got - v).max() < 4 * 2.0 ** -(RING64.frac_bits - shift), \
+        proto
+
+
+@proto_params
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=1, max_value=5),
+       st.integers(min_value=1, max_value=5))
+def test_prop_mirror_any_shape(proto, rows, cols):
+    """Ledger/mirror agreement holds for SAMPLED shapes, not just the
+    hand-picked ones above."""
+    with x64_scope():
+        x = share(_k(42), jnp.ones((rows, cols), jnp.float32), RING64,
+                  proto)
+        with ledger_scope() as led:
+            mops.mul(x, x, _k(43))
+    want = costs.mul_cost(rows * cols, ring=RING64, protocol=proto,
+                          inline_trunc=False)
+    assert _tuples(led.records) == _tuples(want.records), proto
