@@ -57,7 +57,7 @@ from repro.core import iosched  # noqa: E402
 from repro.core.proxy import ProxySpec  # noqa: E402
 from repro.engine import TraceEngine, abstract_shares  # noqa: E402
 from repro.mpc import costs  # noqa: E402
-from repro.mpc.comm import WAN  # noqa: E402
+from repro.mpc.comm import PROFILES, WAN, NetProfile  # noqa: E402
 from repro.mpc.ring import RING32, RING64  # noqa: E402
 
 RINGS = {"ring64": RING64, "ring32": RING32}
@@ -73,10 +73,12 @@ SEMI_HONEST_OF = {"spdz2pc": "2pc", "aby3trunc": "3pc"}
 
 def probe_grid(cfg: ArchConfig, spec: ProxySpec, *, batch: int, seq: int,
                classes: int, n_batches: int,
-               protocol: str = "2pc") -> dict:
+               protocol: str = "2pc", net: NetProfile = WAN) -> dict:
     """{ring}_{eager|fused} -> per-batch ledger totals + modeled delay.
     The offline (dealer) channel is reported separately — it is the axis
-    on which the 3pc backend's zero sits."""
+    on which the 3pc backend's zero sits. `net` prices the net_* keys
+    (the same profile the socket pacer emulates under --wire); the
+    legacy wan_* keys stay pinned to WAN for trajectory comparability."""
     out = {}
     sched = iosched.SchedConfig()
     for rname, ring in RINGS.items():
@@ -94,6 +96,10 @@ def probe_grid(cfg: ArchConfig, spec: ProxySpec, *, batch: int, seq: int,
                 "flights": len(led.records),
                 "wan_serial_s": led.serial_time(WAN),
                 "wan_makespan_s": iosched.makespan(led, n_batches, WAN,
+                                                   sched),
+                "net": net.name,
+                "net_serial_s": led.serial_time(net),
+                "net_makespan_s": iosched.makespan(led, n_batches, net,
                                                    sched),
                 "probe_ms": (time.time() - t0) * 1e3,
             }
@@ -215,6 +221,65 @@ def smoke_execute(protocol: str = "2pc") -> dict:
     return out
 
 
+def wire_smoke(wire: str, net: str,
+               wire_protocols=("2pc", "3pc")) -> dict:
+    """Execute the smoke phase over a REAL transport (repro/net/) and
+    enforce the real-wire acceptance gates, per protocol:
+      * entropy shares bitwise identical to the ledger-only default path
+        (coalesced + fused — the wire run forces the eager schedule, so
+        this doubles as a schedule-invariance check)
+      * transport-counted bytes == ledger nbytes (record-for-record via
+        net.reconcile inside the executor, totals re-asserted here)
+      * every party's received-payload digest matches the flight tape
+    `wire_makespan_s` is MEASURED wall-clock between the parties' SYNC
+    barrier and the last party finishing — under --wire socket the links
+    are paced/delayed to emulate `net`, so the number sits next to the
+    modeled makespan as an experiment vs its model."""
+    from benchmarks.common import tiny_exec_setup
+    from repro.core.executor import ExecConfig, WaveExecutor
+
+    seq, classes, pool_n, batch, wave = 8, 2, 24, 8, 2
+    cfg, spec, pp = tiny_exec_setup(0, seq=seq, n_classes=classes)
+    pool = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                             (pool_n, seq))
+    key = jax.random.key(7)
+    profile = PROFILES[net]
+    out = {"mode": wire, "net": net}
+    for proto in wire_protocols:
+        ex0 = WaveExecutor(ExecConfig(wave=wave, batch=batch,
+                                      protocol=proto))
+        ref = np.asarray(ex0.score_phase(key, pp, cfg, pool, spec).sh)
+        ex = WaveExecutor(ExecConfig(wave=wave, batch=batch, protocol=proto,
+                                     wire=wire, net=net))
+        ent = ex.score_phase(key, pp, cfg, pool, spec)
+        rep = ex.reports[-1]
+        w = rep.wire
+        assert w is not None, f"{proto}: wire run produced no WireReport"
+        assert np.array_equal(ref, np.asarray(ent.sh)), \
+            f"{proto}: wire execution changed entropy scores"
+        assert w.bytes_match, \
+            f"{proto}: wire bytes {w.wire_nbytes} != tape {w.tape_nbytes}"
+        assert w.wire_nbytes == rep.ledger.nbytes, \
+            f"{proto}: wire bytes {w.wire_nbytes} != ledger " \
+            f"{rep.ledger.nbytes}"
+        assert w.digests_ok, f"{proto}: received-payload digests diverged"
+        out[proto] = {
+            "wire_makespan_s": w.wire_makespan_s,
+            "modeled_makespan_s": rep.makespan(profile),
+            "nbytes": w.wire_nbytes,
+            "flights": w.n_flights,
+            "msgs": w.n_msgs,
+            "frames": w.n_frames,
+            "beats_seen": w.beats_seen,
+            "suspects": w.suspects,
+            "n_parties": w.n_parties,
+            "bitwise_identical": True,
+            "bytes_match": True,
+            "digests_ok": True,
+        }
+    return out
+
+
 def _trunc_events(led) -> int:
     """Protocol-level truncation events in an EAGER stream (trunc_open /
     trunc2 / trunc_reshare); fused streams fold bw op names into their
@@ -272,10 +337,25 @@ def main(argv=None) -> int:
                     help="secret-sharing backend to bench; any non-2pc "
                          "choice also re-runs the 2pc gates (the CI 3pc "
                          "and malicious smoke jobs)")
+    ap.add_argument("--wire", choices=["none", "local", "socket"],
+                    default="none",
+                    help="execute the smoke phase over a real transport "
+                         "(repro/net/): 'local' = one thread per party "
+                         "over in-process queues, 'socket' = one process "
+                         "per party over paced localhost TCP emulating "
+                         "--net; measures wire_makespan_s and reconciles "
+                         "transport bytes against the ledger "
+                         "(requires --smoke)")
+    ap.add_argument("--net", choices=sorted(PROFILES), default="wan",
+                    help="NetProfile for BOTH the delay model (net_* "
+                         "probe keys) and the socket pacer")
     ap.add_argument("--csv", action="store_true",
                     help="emit benchmarks.run CSV rows instead of summary")
     ap.add_argument("--out", default="BENCH_fusion.json")
     args = ap.parse_args(argv)
+    if args.wire != "none" and not args.smoke:
+        ap.error("--wire requires --smoke (the paper-scale geometry is "
+                 "probed analytically, never executed)")
 
     if args.smoke:
         cfg = ArchConfig(name="fusion-smoke", family="dense", n_layers=1,
@@ -293,10 +373,11 @@ def main(argv=None) -> int:
     result = {
         "geometry": {"arch": cfg.name, "proxy": dataclasses.asdict(spec),
                      "batch": batch, "seq": seq, "classes": classes,
-                     "n_batches": n_batches, "protocol": args.protocol},
+                     "n_batches": n_batches, "protocol": args.protocol,
+                     "net": args.net, "wire": args.wire},
         "probe": probe_grid(cfg, spec, batch=batch, seq=seq,
                             classes=classes, n_batches=n_batches,
-                            protocol=args.protocol),
+                            protocol=args.protocol, net=PROFILES[args.net]),
         # the semi-honest -> malicious overhead curve always ships with
         # the benchmark: it is the trajectory the malicious smoke job
         # gates and the number the threat-model docs quote
@@ -309,6 +390,10 @@ def main(argv=None) -> int:
         result["smoke"] = smoke_execute("2pc")
         if args.protocol != "2pc":
             result[f"smoke_{args.protocol}"] = smoke_execute(args.protocol)
+        if args.wire != "none":
+            # real-wire gates: both party counts (2pc duplex pair, 3pc
+            # ring) cross the transport; wire_makespan_s is measured
+            result["wire"] = wire_smoke(args.wire, args.net)
 
     for key, curve in result["malicious_overhead"].items():
         if curve["rounds_overhead"] < 0:
@@ -372,6 +457,13 @@ def main(argv=None) -> int:
                   f"wan_makespan={v['wan_makespan_s']:.1f}s")
         else:
             print(f"{k}: {v:.2%}")
+    if "wire" in result and not args.csv:
+        for proto in ("2pc", "3pc"):
+            wv = result["wire"][proto]
+            print(f"wire[{result['wire']['mode']}/{result['wire']['net']}] "
+                  f"{proto}: measured={wv['wire_makespan_s']:.3f}s "
+                  f"modeled={wv['modeled_makespan_s']:.3f}s "
+                  f"bytes={wv['nbytes']} flights={wv['flights']}")
     if not args.csv:
         print(f"wrote {args.out}")
     return 0

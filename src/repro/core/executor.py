@@ -75,6 +75,16 @@ class ExecConfig:
     # fig7/table4 report both modes; pass fuse=False (launch --eager)
     # for the uncompressed stream.
     fuse: bool = True
+    # real-wire execution (repro/net/): "none" keeps flights modeled;
+    # "local" replays the captured flight tape as one thread per party
+    # over in-process queues; "socket" spawns one PROCESS per party over
+    # paced localhost TCP emulating `net`'s profile and measures
+    # wall-clock (PhaseReport.wire). Wire capture needs concrete message
+    # tensors, so the executor forces coalesce=False under wire modes —
+    # scores are schedule-invariant (run_variants proves it bitwise).
+    wire: str = "none"
+    # which comm.PROFILES entry prices the model AND paces the socket
+    net: str = "wan"
 
     def sched(self) -> iosched.SchedConfig:
         return iosched.SchedConfig(coalesce=self.coalesce,
@@ -97,6 +107,10 @@ class PhaseReport:
     ring: RingSpec = RING64
     protocol: str = "2pc"
     fused: bool = True
+    # real-wire outcome (net.WireReport) when the phase ran with
+    # ExecConfig.wire != "none": measured wire_makespan_s, reconciled
+    # byte counts, payload digests
+    wire: object | None = None
 
     def agrees(self) -> bool:
         """Realized flights == the makespan model's inputs, exactly."""
@@ -113,6 +127,14 @@ class WaveExecutor:
     """Runs the Stage-2 multiphase sieve through the §4.4 schedule."""
 
     def __init__(self, cfg: ExecConfig):
+        if cfg.wire not in ("none", "local", "socket"):
+            raise ValueError(f"unknown wire mode {cfg.wire!r}")
+        if cfg.wire != "none" and cfg.coalesce:
+            # capturing real message tensors requires the eager per-lane
+            # path (vmap abstracts the payloads away); the schedule is
+            # score-invariant, so this changes WHEN flights happen, not
+            # what they carry
+            cfg = dataclasses.replace(cfg, coalesce=False)
         self.cfg = cfg
         self.reports: list[PhaseReport] = []
 
@@ -165,6 +187,11 @@ class WaveExecutor:
 
         outer = comm.get_ledger()
         phase_led = Ledger()
+        # --wire: capture every executed flight's actual messages; the
+        # tape is sized by the WIRE party count (spdz2pc stacks 4 share
+        # rows but runs 2 parties)
+        tape = (comm.WireTape(protocols.get(proto).n_wire_parties)
+                if cfg.wire != "none" else None)
         scale = jnp.asarray(arch_cfg.d_model ** 0.5, jnp.float32)
         results: list[jax.Array] = []
         pending: jax.Array | None = None
@@ -180,7 +207,7 @@ class WaveExecutor:
             sh = sharding.shard(x_sh.sh, "pod", "wave", "batch", None, None)
             keys = batch_keys[b0:b1]
 
-            with comm.ledger_scope() as wave_led:
+            with comm.ledger_scope() as wave_led, comm.wire_tape_scope(tape):
                 if cfg.coalesce:
                     with comm.wave_scope(lanes):
                         ent = jax.vmap(fwd, in_axes=(1, 0), out_axes=1)(
@@ -207,10 +234,21 @@ class WaveExecutor:
             jax.block_until_ready(pending)
 
         out = jnp.concatenate(results, axis=1)[:, :n]
+        wall_s = time.time() - t0
+        wire_rep = None
+        if tape is not None:
+            # replay the captured flight plan as real parties: reconcile
+            # record-for-record against the phase ledger, then measure
+            from repro import net
+            net.reconcile(phase_led, tape)
+            wire_rep = net.PartyRuntime(
+                tape, mode=cfg.wire,
+                profile=(comm.PROFILES[cfg.net] if cfg.wire == "socket"
+                         else None)).execute()
         self.reports.append(PhaseReport(
             ledger=phase_led, per_batch=per_batch, n_batches=n_batches,
-            n_waves=n_waves, wall_s=time.time() - t0, sched=self.cfg.sched(),
-            ring=ring, protocol=proto, fused=cfg.fuse))
+            n_waves=n_waves, wall_s=wall_s, sched=self.cfg.sched(),
+            ring=ring, protocol=proto, fused=cfg.fuse, wire=wire_rep))
         return AShare(out, ring, proto)
 
 

@@ -91,7 +91,8 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         mode: str = "clear", finetune_steps: int = 250, *,
         wave: int = 8, coalesce: bool = True, overlap: bool = True,
         fuse: bool = True, score_batch: int = 64, ring_bits: int = 64,
-        protocol: str = "2pc", resume: bool = True) -> dict:
+        protocol: str = "2pc", resume: bool = True,
+        wire: str = "none", net: str = "wan") -> dict:
     task = make_classification_task(seed, n_pool=n_pool, n_test=400,
                                     seq=16, vocab=256, n_classes=4)
     cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
@@ -110,7 +111,8 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         score_batch=score_batch,
         checkpoint_dir=ckpt_dir, resume=resume,
         executor=ExecConfig(wave=wave, coalesce=coalesce, overlap=overlap,
-                            fuse=fuse, protocol=protocol))
+                            fuse=fuse, protocol=protocol,
+                            wire=wire, net=net))
     t0 = time.time()
     res = run_selection(key, params0, cfg, task.pool_tokens, sel,
                         n_classes=task.n_classes,
@@ -137,7 +139,10 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
                 "nbytes": rep.ledger.nbytes,
                 "offline_nbytes": rep.ledger.offline_nbytes,
                 "makespan_wan_s": rep.makespan(WAN),
-                "wall_s": rep.wall_s})
+                "wall_s": rep.wall_s,
+                # real-wire measurement when ExecConfig.wire != "none"
+                "wire": rep.wire.as_dict() if rep.wire is not None
+                        else None})
 
     def finetune_and_eval(idx, tag):
         p, _ = tgt.finetune(jax.random.fold_in(key, 7), params0, cfg,
@@ -190,13 +195,24 @@ def main() -> None:
                          "(3pc with exact ABY3 truncation)")
     ap.add_argument("--no-resume", action="store_true",
                     help="ignore existing phase checkpoints")
+    ap.add_argument("--wire", choices=["none", "local", "socket"],
+                    default="none",
+                    help="execute MPC flights over a real transport "
+                         "(repro/net/): 'local' = party threads over "
+                         "in-process queues, 'socket' = party processes "
+                         "over paced localhost TCP; each phase report "
+                         "gains a measured wire_makespan_s (mode=mpc)")
+    ap.add_argument("--net", choices=["wan", "pod_dcn", "ici"],
+                    default="wan",
+                    help="NetProfile the socket transport emulates "
+                         "(pacing + injected latency)")
     args = ap.parse_args()
     out = run(args.seed, args.pool, args.budget, args.mode,
               wave=args.wave, coalesce=not args.no_coalesce,
               overlap=not args.no_overlap, fuse=not args.eager,
               score_batch=args.score_batch,
               ring_bits=args.ring, protocol=args.protocol,
-              resume=not args.no_resume)
+              resume=not args.no_resume, wire=args.wire, net=args.net)
     if out["executed"] is not None:
         ex = out["executed"]
         ph = ex["phases"]
@@ -208,6 +224,11 @@ def main() -> None:
             print(f"[select] executed {len(ph)} MPC phases, ledger_agrees="
                   f"{ex['ledger_agrees']}; per-phase makespan(WAN) "
                   + ", ".join(f"{p['makespan_wan_s']:.1f}s" for p in ph))
+        wired = [p["wire"] for p in ph if p.get("wire")]
+        if wired:
+            print("[select] real wire (" + wired[0]["mode"] + "): measured "
+                  + ", ".join(f"{w['wire_makespan_s']:.3f}s" for w in wired)
+                  + f"; bytes reconciled={all(w['bytes_match'] for w in wired)}")
     print(f"[select] ours={out['acc_ours']:.3f} random={out['acc_random']:.3f} "
           f"(+{out['gain']:.3f}); modeled WAN delay "
           f"{out['paper_scale_delay']['wan']['ours_hours']:.1f}h vs oracle "

@@ -36,7 +36,7 @@ class ServeConfig:
 class Request:
     rid: int
     prompt: np.ndarray             # (S,) tokens
-    out: list = dataclasses.field(default_factory=list)
+    out: list[int] = dataclasses.field(default_factory=list)
 
 
 class Server:
@@ -88,14 +88,28 @@ class Server:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2_0_5b", choices=ARCH_IDS)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="synthetic requests to enqueue")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent decode slots (continuous batching "
+                         "granularity)")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="prefill/KV-cache length budget per slot")
+    ap.add_argument("--max-new", type=int, default=8,
+                    help="tokens decoded per request")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="parameter-init and synthetic-prompt seed")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size architecture (default is the smoke "
+                         "geometry)")
     args = ap.parse_args()
-    sc = ServeConfig(arch=args.arch, max_new=args.max_new)
+    sc = ServeConfig(arch=args.arch, smoke=not args.full, slots=args.slots,
+                     max_len=args.max_len, max_new=args.max_new,
+                     seed=args.seed)
     srv = Server(sc)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(sc.seed)
     reqs = [Request(i, rng.integers(0, srv.cfg.vocab_size,
                                     size=rng.integers(4, 12)))
             for i in range(args.requests)]

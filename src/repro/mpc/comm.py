@@ -36,6 +36,11 @@ POD_DCN = NetProfile("pod_dcn", 25e9, 50e-6)
 # Intra-pod ICI (per-link), used by roofline collective term.
 ICI = NetProfile("ici", 50e9, 1e-6)
 
+# name -> profile, for CLI flags (--net) and ExecConfig.net: one registry
+# so the delay model and the socket pacer are always parameterized by
+# the same profile object.
+PROFILES = {"wan": WAN, "pod_dcn": POD_DCN, "ici": ICI}
+
 
 @dataclasses.dataclass
 class CostRecord:
@@ -116,11 +121,152 @@ class Ledger:
         return led
 
 
+# ---------------------------------------------------------------------------
+# wire capture — the record execution hook (repro/net)
+# ---------------------------------------------------------------------------
+#
+# When a WireTape is ambient (the executor's --wire mode), every ONLINE
+# record ALSO captures the flight's actual message payloads: which party
+# sends how many bytes to whom, in which sub-round. The PartyRuntime
+# (net/runtime.py) then executes the captured flights over a real
+# Transport — one framed exchange per flight — and the transport-counted
+# bytes must equal the ledger's `nbytes` record-for-record
+# (net.reconcile). Flights whose protocol hands concrete share tensors
+# to `record(payload=...)` ship those exact bytes; modeled
+# functionalities (the §4.1 comparison, the SPDZ sacrifice open) ship
+# deterministic filler of exactly the modeled size — the wire carries
+# real frames either way, only the *content* is synthetic.
+
+@dataclasses.dataclass(frozen=True)
+class WireMsg:
+    """One point-to-point message of a flight: src -> dst, in sub-round
+    `rnd` (multi-round flights — comparisons, ABY3 trunc2 — serialize
+    their sub-rounds on the wire)."""
+    src: int
+    dst: int
+    data: bytes
+    rnd: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFlight:
+    """One captured flight: the ledger record it mirrors plus the
+    per-party messages that realize it on a transport."""
+    op: str
+    rounds: int
+    nbytes: int
+    tag: str
+    msgs: tuple[WireMsg, ...]
+
+
+def _data_bytes(x) -> bytes | None:
+    """Serialize one payload entry; None when the value is abstract
+    (a tracer under vmap/eval_shape) — the caller falls back to
+    synthesized filler of the recorded size."""
+    if isinstance(x, (bytes, bytearray, memoryview)):
+        return bytes(x)
+    try:
+        import numpy as np
+        return np.asarray(x).tobytes()
+    except Exception:
+        return None
+
+
+def synth_msgs(nbytes: int, rounds: int, n_parties: int) -> tuple[WireMsg, ...]:
+    """Deterministic filler messages summing to EXACTLY nbytes, spread
+    over the flight's sub-rounds and the canonical directed-link pattern
+    (duplex pair for 2 parties, the ring for 3+). Used for modeled
+    functionalities that record wire cost without materializing message
+    tensors."""
+    if n_parties >= 3:
+        links = [(i, (i + 1) % n_parties) for i in range(n_parties)]
+    else:
+        links = [(0, 1), (1, 0)]
+    rounds = max(1, rounds)
+    msgs: list[WireMsg] = []
+    left = nbytes
+    cells = rounds * len(links)
+    per = nbytes // cells
+    for r in range(rounds):
+        for li, (s, d) in enumerate(links):
+            size = per
+            if r == rounds - 1 and li == len(links) - 1:
+                size = left                    # remainder on the last cell
+            msgs.append(WireMsg(s, d, b"\x00" * size, r))
+            left -= size
+    return tuple(msgs)
+
+
+def normalize_payload(payload, nbytes: int, rounds: int,
+                      n_parties: int) -> tuple[WireMsg, ...]:
+    """Payload entries ((src, dst, data[, rnd]) tuples or WireMsg) ->
+    serialized WireMsg tuple whose sizes MUST sum to the recorded nbytes
+    — the capture-time half of the byte reconciliation contract. Falls
+    back to `synth_msgs` when any entry is abstract."""
+    if payload is None:
+        return synth_msgs(nbytes, rounds, n_parties)
+    msgs: list[WireMsg] = []
+    for e in payload:
+        if isinstance(e, WireMsg):
+            msgs.append(e)
+            continue
+        src, dst, data = e[0], e[1], e[2]
+        rnd = e[3] if len(e) > 3 else 0
+        raw = _data_bytes(data)
+        if raw is None:                        # abstract value: synthesize
+            return synth_msgs(nbytes, rounds, n_parties)
+        msgs.append(WireMsg(int(src), int(dst), raw, int(rnd)))
+    total = sum(len(m.data) for m in msgs)
+    if total != nbytes:
+        raise ValueError(
+            f"wire payload carries {total} bytes but the ledger record "
+            f"prices {nbytes}: the protocol's payload and its cost model "
+            f"have diverged")
+    return tuple(msgs)
+
+
+class WireTape:
+    """Ordered capture of every online flight of an execution — the
+    flight plan `net.PartyRuntime` replays over a real transport.
+    `n_parties` is the WIRE party count (backend.n_wire_parties — spdz2pc
+    stacks 4 share rows but runs 2 parties)."""
+
+    def __init__(self, n_parties: int):
+        self.n_parties = n_parties
+        self.flights: list[WireFlight] = []
+
+    def add(self, op: str, rounds: int, nbytes: int, tag: str,
+            payload=None) -> None:
+        msgs = normalize_payload(payload, nbytes, rounds, self.n_parties)
+        self.flights.append(WireFlight(op, rounds, nbytes, tag, msgs))
+
+    @property
+    def nbytes(self) -> int:
+        return sum(f.nbytes for f in self.flights)
+
+
 _state = threading.local()
 
 
 def get_ledger() -> Ledger | None:
     return getattr(_state, "ledger", None)
+
+
+def get_wire_tape() -> WireTape | None:
+    return getattr(_state, "wire_tape", None)
+
+
+@contextlib.contextmanager
+def wire_tape_scope(tape: WireTape | None) -> Iterator[WireTape | None]:
+    """Capture every online flight recorded inside into `tape` (pass
+    None to explicitly suppress an outer capture, e.g. hermetic analytic
+    replays)."""
+    prev = get_wire_tape()
+    _state.wire_tape = tape
+    try:
+        yield tape
+    finally:
+        _state.wire_tape = prev
 
 
 def get_wave() -> int:
@@ -140,7 +286,7 @@ def set_batcher(batcher):
 
 
 def record(op: str, rounds: int, nbytes: int, numel: int = 0,
-           flops: int = 0, tag: str = "bw") -> None:
+           flops: int = 0, tag: str = "bw", payload=None) -> None:
     """Record one wire interaction into the ambient Ledger.
 
     Inside a wave_scope(W) the op services W coalesced batches in a
@@ -151,18 +297,31 @@ def record(op: str, rounds: int, nbytes: int, numel: int = 0,
     openings ("bw") stay one flight per batch: their wire time is what
     the overlap stage hides, and serializing them costs no extra RTTs
     on a saturated link.
+
+    `payload` is the record's EXECUTION hook: the flight's actual
+    messages as (src, dst, tensor_or_bytes[, rnd]) entries. It is only
+    consulted when a WireTape is ambient (`--wire` runs, which execute
+    eagerly at wave 1 so tensors are concrete); modeled records pass
+    None and capture as synthesized filler of the exact recorded size.
     """
     led = get_ledger()
     if led is None:
         return
+    tape = get_wire_tape()
     fb = get_batcher()
-    if fb is not None and fb.absorb(op, rounds, nbytes, numel, flops, tag):
+    if fb is not None and fb.absorb(op, rounds, nbytes, numel, flops, tag,
+                                    payload=payload):
         return                        # deferred: rides a fused flight
     w = get_wave()
     if w > 1 and tag != "lat":
         rounds = rounds * w
     led.add(CostRecord(op, rounds, nbytes * w, numel * w, flops * w, tag,
                        wave=w))
+    if tape is not None and tag != "offline":
+        # offline (dealer) bytes never ride the online wire — the tape
+        # mirrors exactly the records Ledger.nbytes counts
+        tape.add(op, rounds, nbytes * w, tag,
+                 payload if w == 1 else None)
 
 
 @contextlib.contextmanager

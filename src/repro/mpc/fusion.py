@@ -66,13 +66,20 @@ from repro.mpc import comm
 
 @dataclasses.dataclass(frozen=True)
 class PendingOpen:
-    """One deferred opening: the record it would have landed eagerly."""
+    """One deferred opening: the record it would have landed eagerly.
+
+    `msgs` are the opening's captured wire messages (comm.WireMsg) when
+    a WireTape is ambient — serialized at ABSORB time, while the share
+    tensors are alive, and re-emitted on the fused flight so a fused
+    group becomes ONE framed message per link carrying every deferred
+    opening's bytes back to back."""
     op: str
     nbytes: int
     numel: int
     flops: int
     rounds: int = 1
     tag: str = "bw"
+    msgs: tuple = ()
 
 
 # NOTE: PR 3's `PendingShare` (the op-boundary pending-trunc container
@@ -108,19 +115,28 @@ class FlightBatcher:
 
     # -- interception ----------------------------------------------------
     def absorb(self, op: str, rounds: int, nbytes: int, numel: int,
-               flops: int, tag: str) -> bool:
+               flops: int, tag: str, payload=None) -> bool:
         """Offer one record. True -> deferred (caller must not ledger it);
-        False -> caller records eagerly (after any barrier flush)."""
+        False -> caller records eagerly (after any barrier flush).
+
+        When a WireTape is ambient the deferred opening's payload is
+        serialized HERE (the tensors are only guaranteed alive at absorb
+        time) and carried on the PendingOpen until the flush emits it."""
         if self._suspended:
             return False
         if tag == "offline":
             # dealer bytes never ride the online wire: not a flight, not
             # a barrier — land in the ledger's offline channel as-is
             return False
+        tape = comm.get_wire_tape()
+        msgs = comm.normalize_payload(payload, nbytes, rounds,
+                                      tape.n_parties) if tape is not None \
+            else ()
         if tag == "lat":
             if self._in_lat_group:
                 self.pending_lat.append(
-                    PendingOpen(op, nbytes, numel, flops, rounds, tag))
+                    PendingOpen(op, nbytes, numel, flops, rounds, tag,
+                                msgs))
                 self.n_deferred += 1
                 return True
             # comparisons are real interaction: barrier, then pass through
@@ -130,7 +146,7 @@ class FlightBatcher:
             # rounds == 0: a piggyback message (3pc trunc re-replication)
             # that rides whatever flight the segment flushes as
             self.pending.append(PendingOpen(op, nbytes, numel, flops,
-                                            rounds))
+                                            rounds, "bw", msgs))
             self.n_deferred += 1
             return True
         self.flush()                  # unknown multi-round op: be safe
@@ -142,10 +158,15 @@ class FlightBatcher:
         nbytes = sum(p.nbytes for p in batch)
         numel = sum(p.numel for p in batch)
         flops = sum(p.flops for p in batch)
+        # fused flight payload: every deferred opening's messages, in
+        # deferral order — the PartyRuntime frames them as ONE message
+        # per link (only meaningful when a WireTape was ambient at
+        # absorb time; empty tuples merge to an empty payload -> None)
+        msgs = [m for p in batch for m in p.msgs]
         self._suspended = True        # don't re-absorb our own flush
         try:
             comm.record(op, rounds=rounds, nbytes=nbytes, numel=numel,
-                        flops=flops, tag=tag)
+                        flops=flops, tag=tag, payload=msgs or None)
         finally:
             self._suspended = False
 
@@ -283,7 +304,11 @@ def compress_events(events) -> comm.Ledger:
     the per-batch records it predicts.
     """
     with comm.ledger_scope() as led:
-        with comm.wave_scope(1), flight_scope() as fb:
+        # hermetic also against wire capture: the replay is an analytic
+        # mirror, not an execution — it must never append to an ambient
+        # WireTape
+        with comm.wave_scope(1), comm.wire_tape_scope(None), \
+                flight_scope() as fb:
             for e in events:
                 if isinstance(e, GroupBegin):
                     fb.flush()

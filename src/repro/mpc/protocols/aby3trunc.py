@@ -66,9 +66,17 @@ class ABY3Trunc(Replicated3PC):
         r_t = r >> shift
         rsh = self.share_encoded(k1, r, ring)
         rtsh = self.share_encoded(k2, r_t, ring)
-        comm.record("trunc2", rounds=2, nbytes=6 * ring.elem_bytes * n,
-                    numel=n, tag="bw")
         masked = x.sh + rsh
+        # wire payload, phased like the protocol: sub-round 0 is the
+        # pair-generation resharing (one component per party), sub-round
+        # 1 the dependent masked open (neighbour sends the component
+        # party i lacks) — 2 phases x 3 messages = the priced 6 tensors
+        comm.record("trunc2", rounds=2, nbytes=6 * ring.elem_bytes * n,
+                    numel=n, tag="bw",
+                    payload=[(i, (i - 1) % 3, rsh[i], 0)
+                             for i in range(3)]
+                    + [((i + 1) % 3, i, masked[(i + 2) % 3], 1)
+                       for i in range(3)])
         m = masked[0] + masked[1] + masked[2]        # open x + r
         m_t = m >> shift                              # public exact shift
         out = jnp.stack([m_t - rtsh[0], -rtsh[1], -rtsh[2]])

@@ -113,6 +113,7 @@ def triple_bytes(a_shape, b_shape, c_shape, ring: RingSpec) -> int:
 class Additive2PC(BackendDefaults):
     name = "2pc"
     n_parties = 2
+    n_wire_parties = 2
 
     # -- sharing --------------------------------------------------------
     def share_encoded(self, key: jax.Array, enc: jax.Array,
@@ -136,10 +137,16 @@ class Additive2PC(BackendDefaults):
         the unit the wave executor schedules: under comm.wave_scope the
         flight's bytes scale with the wave while latency-bound flights
         keep their rounds.
+
+        The record's payload IS the flight: party p's masked components
+        of every tensor, routed to the peer — what `--wire` runs
+        serialize onto the real transport (comm.WireTape).
         """
         wire_elems = sum(numel(t.shape[1:]) for t in tensors)
         comm.record(op, rounds=1, nbytes=2 * ring.elem_bytes * wire_elems,
-                    numel=n, flops=flops, tag="bw")
+                    numel=n, flops=flops, tag="bw",
+                    payload=[(p, 1 - p, t[p])
+                             for t in tensors for p in (0, 1)])
         return tuple(t[0] + t[1] for t in tensors)
 
     # -- truncation -----------------------------------------------------
@@ -167,7 +174,8 @@ class Additive2PC(BackendDefaults):
         m = masked[0] + masked[1]                # open
         comm.record("trunc_open", rounds=1,
                     nbytes=2 * ring.elem_bytes * numel(x.shape),
-                    numel=numel(x.shape), tag="bw")
+                    numel=numel(x.shape), tag="bw",
+                    payload=[(0, 1, masked[0]), (1, 0, masked[1])])
         m_t = m >> shift
         pub = jnp.stack([m_t, jnp.zeros_like(m_t)])
         return x.with_scale(pub - r_t.sh, out_fb)

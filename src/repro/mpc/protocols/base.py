@@ -31,7 +31,16 @@ class BackendDefaults:
     convention). Schemes whose leading axis carries NON-value rows — the
     MAC components of spdz2pc — override both: summing all rows there
     would yield value + alpha*value, and a constant must also update the
-    MAC rows to keep the authenticated invariant."""
+    MAC rows to keep the authenticated invariant.
+
+    `n_wire_parties` is the number of PHYSICAL protocol parties on the
+    wire — the process count `net.PartyRuntime` spawns. It equals
+    `n_parties` for plain schemes but NOT for MAC'd ones (spdz2pc stacks
+    4 share rows across 2 parties), which is why the wire layer must
+    never size itself off the component axis.
+    """
+
+    n_wire_parties = 2
 
     def reconstruct(self, sh: jax.Array) -> jax.Array:
         out = sh[0]
@@ -41,6 +50,15 @@ class BackendDefaults:
 
     def add_public_encoded(self, sh: jax.Array, enc: jax.Array) -> jax.Array:
         return sh.at[0].add(jnp.broadcast_to(enc, sh.shape[1:]))
+
+    def open_msgs(self, sh: jax.Array):
+        """The messages an opening of `sh` puts on the wire, as
+        (src, dst, tensor) entries for `comm.record(payload=...)` —
+        MUST serialize to exactly `open_bytes` bytes. Default: the
+        2-party duplex exchange of value components (rows 0 and 1 —
+        also correct for spdz2pc, whose partial opens send value rows
+        only)."""
+        return [(0, 1, sh[0]), (1, 0, sh[1])]
 
 
 @runtime_checkable
@@ -63,6 +81,7 @@ class ProtocolBackend(Protocol):
 
     name: str                     # registry key, also Share.proto
     n_parties: int                # leading party-axis size of Share.sh
+    n_wire_parties: int           # physical parties on the wire (net/)
 
     def share_encoded(self, key: jax.Array, enc: jax.Array,
                       ring: RingSpec) -> jax.Array:

@@ -56,6 +56,7 @@ from repro.mpc.protocols.base import BackendDefaults, numel
 class Replicated3PC(BackendDefaults):
     name = "3pc"
     n_parties = 3
+    n_wire_parties = 3
 
     # -- sharing --------------------------------------------------------
     def share_encoded(self, key: jax.Array, enc: jax.Array,
@@ -71,6 +72,12 @@ class Replicated3PC(BackendDefaults):
     def open_bytes(self, ring: RingSpec, n: int) -> int:
         # party i lacks component i+2; one neighbour sends it: 3 messages
         return 3 * ring.elem_bytes * n
+
+    def open_msgs(self, sh: jax.Array):
+        # party i holds pair (i, i+1) and lacks component i+2, which its
+        # neighbour i+1 (holder of (i+1, i+2)) sends — the 3 messages
+        # open_bytes prices
+        return [((i + 1) % 3, i, sh[(i + 2) % 3]) for i in range(3)]
 
     # -- correlated-PRNG zero sharing -----------------------------------
     def _zero_share(self, key: jax.Array, shape, ring: RingSpec) -> jax.Array:
@@ -107,8 +114,10 @@ class Replicated3PC(BackendDefaults):
                                 out_fb)
         r = ring.rand(key, hi.shape)
         n = numel(x.shape)
+        # the re-replication message: party 1's fresh component r reaches
+        # party 0 to restore the 2-of-3 pair invariant
         comm.record("trunc_reshare", rounds=0, nbytes=ring.elem_bytes * n,
-                    numel=n, tag="bw")
+                    numel=n, tag="bw", payload=[(1, 0, r)])
         return x.with_scale(jnp.stack([hi - r, r, lo]), out_fb)
 
     # -- multiplication -------------------------------------------------
@@ -136,7 +145,8 @@ class Replicated3PC(BackendDefaults):
                               mm=False)
         n = numel(shape)
         comm.record("reshare_mul", rounds=1, nbytes=3 * ring.elem_bytes * n,
-                    numel=n, flops=6 * n, tag="bw")
+                    numel=n, flops=6 * n, tag="bw",
+                    payload=[(i, (i - 1) % 3, z[i]) for i in range(3)])
         return x.with_sh(z)
 
     def matmul(self, x, y, key: jax.Array, *,
@@ -153,5 +163,6 @@ class Replicated3PC(BackendDefaults):
         n = batch * m * n_out
         comm.record("reshare_matmul", rounds=1,
                     nbytes=3 * ring.elem_bytes * n, numel=n,
-                    flops=6 * batch * m * k * n_out, tag="bw")
+                    flops=6 * batch * m * k * n_out, tag="bw",
+                    payload=[(i, (i - 1) % 3, z[i]) for i in range(3)])
         return x.with_sh(z)

@@ -226,6 +226,10 @@ class SPDZ2PC(BackendDefaults):
     # generic (abstract_shares, the executor's reshape, vmap) treats it
     # as an opaque component count.
     n_parties = 4
+    # ... but the WIRE has exactly 2 physical parties: rows are p0/p1
+    # value + p0/p1 MAC, and partial opens exchange value rows only
+    # (BackendDefaults.open_msgs already routes rows 0<->1)
+    n_wire_parties = 2
 
     # -- sharing --------------------------------------------------------
     def share_encoded(self, key: jax.Array, enc: jax.Array,
@@ -264,7 +268,9 @@ class SPDZ2PC(BackendDefaults):
         tensor's MAC obligation for the batched boundary check."""
         wire_elems = sum(numel(t.shape[1:]) for t in tensors)
         comm.record(op, rounds=1, nbytes=2 * ring.elem_bytes * wire_elems,
-                    numel=n, flops=flops, tag="bw")
+                    numel=n, flops=flops, tag="bw",
+                    payload=[(p, 1 - p, t[p])
+                             for t in tensors for p in (0, 1)])
         out = []
         for t in tensors:
             t = _maybe_tamper(t)

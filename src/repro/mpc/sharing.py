@@ -165,9 +165,10 @@ def open_(x: Share, op: str = "open") -> jax.Array:
     the others lack: 1 round, backend-defined bytes). The element is
     returned AT THE CARRIED SCALE (x.fb) — decode with
     `ring.decode_at(v, x.fb)`; once public, the scale resolves exactly
-    for free."""
+    for free. The record's payload is the backend's actual message set
+    (`open_msgs`), so `--wire` runs serialize the real components."""
     comm.record(op, rounds=1, nbytes=x.backend.open_bytes(x.ring, _numel(x)),
-                numel=_numel(x), tag="bw")
+                numel=_numel(x), tag="bw", payload=x.backend.open_msgs(x.sh))
     return reconstruct(x)
 
 

@@ -1,0 +1,26 @@
+"""Real-wire party runtime: transports + multi-process MPC execution.
+
+`mpc/comm.py` captures each online flight's actual messages into a
+WireTape; this package replays the tape as real parties — threads over
+in-process queues (`LocalTransport`) or spawned processes over paced
+localhost TCP (`SocketTransport`) — reconciling transport-counted bytes
+against the ledger and measuring wall-clock (`wire_makespan_s`).
+"""
+from repro.net.transport import (          # noqa: F401
+    BEAT,
+    DATA,
+    SYNC,
+    LocalTransport,
+    SocketTransport,
+    TokenBucket,
+    Transport,
+    WireError,
+    free_ports,
+)
+from repro.net.runtime import (            # noqa: F401
+    PartyRuntime,
+    WireReport,
+    compile_plan,
+    expected_digests,
+    reconcile,
+)

@@ -1,0 +1,350 @@
+"""PartyRuntime: execute a captured flight plan as real parties.
+
+The MPC engine computes every party's share components in one process
+(the simulation layout of mpc/sharing.py) while `comm.WireTape` captures
+each online flight's actual point-to-point messages. This module closes
+the loop: it compiles the tape into one flight plan PER PARTY and runs
+one worker per party — threads over a `LocalTransport` (`mode="local"`,
+deterministic) or spawned processes over `SocketTransport` meshes
+(`mode="socket"`, paced + latency-injected localhost TCP) — so every
+recorded flight becomes an actual framed exchange.
+
+What executing the plan proves, per run:
+
+  bytes    transport-counted DATA bytes == the tape's (== the ledger's)
+           `nbytes`, link by link — `reconcile()` and the post-run check
+           both fail loudly on divergence;
+  content  each party digests every payload it receives, in order; the
+           digests must match what the tape says it should receive
+           (BLAKE2b over the concatenated payloads);
+  time     `wire_makespan_s` is measured wall-clock between the SYNC
+           start barrier and the last party finishing — on the socket
+           backend under a `comm.NetProfile` pacer this is an emulated-
+           network MEASUREMENT to put next to the modeled
+           `wan_makespan_s` (the model charges rounds x RTT serially;
+           simultaneous exchanges on a real duplex wire overlap, so the
+           measurement may legitimately undercut the model).
+
+Liveness rides along: workers emit BEAT frames to party 0 every
+`beat_every` flights and party 0 drains them into a
+`runtime.ft.HeartbeatMonitor` (via `ft.TransportHeartbeat`), so the
+fault-tolerance heartbeat path is exercised by the same wire as the
+protocol traffic.
+
+Deadlock-freedom: every party walks the SAME tape in the same flight
+order, sends are non-blocking enqueues, and multi-sub-round flights
+(comparisons, ABY3 trunc2) order their dependent messages via the
+WireMsg `rnd` field — a party never blocks on a message whose sender
+has not already been able to enqueue it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import multiprocessing
+import threading
+import time
+
+from repro.net import transport as tp
+from repro.runtime import ft
+
+# flights between BEAT frames (and beat-queue drains on party 0)
+DEFAULT_BEAT_EVERY = 8
+
+
+# ---------------------------------------------------------------------------
+# plan compilation — tape -> per-party send/recv schedule
+# ---------------------------------------------------------------------------
+# A plan is pickle-plain (lists/tuples/bytes/ints) because socket-mode
+# children receive theirs through multiprocessing spawn args:
+#   plan   = [flight, ...]
+#   flight = [(sends, recvs), ...]      one entry per sub-round, in order
+#   sends  = [(dst, payload_bytes), ...]
+#   recvs  = [(src, expected_nbytes), ...]
+
+def compile_plan(tape, party: int) -> list:
+    plan = []
+    for f in tape.flights:
+        rounds = sorted({m.rnd for m in f.msgs}) or [0]
+        subs = []
+        for r in rounds:
+            sends = [(m.dst, m.data) for m in f.msgs
+                     if m.rnd == r and m.src == party]
+            recvs = [(m.src, len(m.data)) for m in f.msgs
+                     if m.rnd == r and m.dst == party]
+            subs.append((sends, recvs))
+        plan.append(subs)
+    return plan
+
+
+def expected_digests(tape, n_parties: int) -> list[str]:
+    """Per-party BLAKE2b over every payload the party receives, in the
+    order the party loop receives them — the content half of the
+    reconciliation contract."""
+    hs = [hashlib.blake2b(digest_size=16) for _ in range(n_parties)]
+    for f in tape.flights:
+        for r in sorted({m.rnd for m in f.msgs} or {0}):
+            for m in f.msgs:
+                if m.rnd == r:
+                    hs[m.dst].update(m.data)
+    return [h.hexdigest() for h in hs]
+
+
+# ---------------------------------------------------------------------------
+# the party loop (shared by thread and process workers)
+# ---------------------------------------------------------------------------
+
+def _sync_barrier(t: tp.Transport, party: int, n: int, timeout: float):
+    """All-parties start gate: workers report to party 0, party 0
+    releases everyone. Timing starts only after release, so connection
+    setup and plan unpickling never pollute the makespan."""
+    if party == 0:
+        for p in range(1, n):
+            t.recv(0, p, kind=tp.SYNC, timeout=timeout)
+        for p in range(1, n):
+            t.send(0, p, b"", kind=tp.SYNC)
+    else:
+        t.send(party, 0, b"", kind=tp.SYNC)
+        t.recv(party, 0, kind=tp.SYNC, timeout=timeout)
+
+
+def _party_loop(t: tp.Transport, party: int, n: int, plan: list,
+                beat_every: int, timeout: float,
+                heartbeat_timeout_s: float) -> dict:
+    hb = ft.TransportHeartbeat(
+        t, party, n,
+        monitor=(ft.HeartbeatMonitor(n, timeout_s=heartbeat_timeout_s)
+                 if party == 0 else None),
+        kind=tp.BEAT)
+    digest = hashlib.blake2b(digest_size=16)
+    _sync_barrier(t, party, n, timeout)
+    t0 = time.monotonic()
+    for i, flight in enumerate(plan):
+        for sends, recvs in flight:
+            for dst, data in sends:
+                t.send(party, dst, data)
+            for src, want in recvs:
+                data = t.recv(party, src, timeout=timeout)
+                if len(data) != want:
+                    raise tp.WireError(
+                        f"party {party} flight {i}: expected {want} bytes "
+                        f"from {src}, got {len(data)}")
+                digest.update(data)
+        if beat_every and (i + 1) % beat_every == 0:
+            hb.emit()
+            hb.drain()
+    hb.emit()
+    hb.drain()
+    t1 = time.monotonic()
+    sent = {link: nb for link, nb in t.data_bytes.items()
+            if link[0] == party}
+    return {"party": party, "t0": t0, "t1": t1,
+            "elapsed_s": t1 - t0, "digest": digest.hexdigest(),
+            "sent_bytes": sent,
+            "beats_seen": hb.beats_seen,
+            "suspects": hb.monitor.suspects() if hb.monitor else []}
+
+
+def _party_main(party: int, n: int, ports: list, profile, plan: list,
+                beat_every: int, timeout: float, heartbeat_timeout_s: float,
+                q) -> None:
+    """Socket-mode child entry point (module-level: spawn imports it by
+    reference — `repro.net.runtime._party_main`)."""
+    t = tp.SocketTransport(n, party, ports, profile,
+                           connect_timeout=timeout)
+    try:
+        res = _party_loop(t, party, n, plan, beat_every, timeout,
+                          heartbeat_timeout_s)
+        res["n_frames"] = t.n_frames
+        q.put(res)
+    except BaseException as e:                     # surface to the parent
+        q.put({"party": party, "error": f"{type(e).__name__}: {e}"})
+        raise
+    finally:
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# reconciliation + report
+# ---------------------------------------------------------------------------
+
+def reconcile(ledger, tape) -> dict:
+    """Record-for-record check that the captured flight plan IS the
+    ledger's online cost model: same flight count, same op / rounds /
+    nbytes per flight, message sizes summing to each flight's nbytes.
+    Raises WireError on any divergence; returns a summary dict."""
+    online = [r for r in ledger.records if r.tag != "offline"]
+    if len(online) != len(tape.flights):
+        raise tp.WireError(
+            f"ledger has {len(online)} online records but the tape "
+            f"captured {len(tape.flights)} flights")
+    for i, (r, f) in enumerate(zip(online, tape.flights)):
+        if (r.op, r.rounds, r.nbytes) != (f.op, f.rounds, f.nbytes):
+            raise tp.WireError(
+                f"flight {i} diverges: ledger ({r.op}, rounds={r.rounds}, "
+                f"nbytes={r.nbytes}) vs tape ({f.op}, rounds={f.rounds}, "
+                f"nbytes={f.nbytes})")
+        msg_total = sum(len(m.data) for m in f.msgs)
+        if msg_total != f.nbytes:
+            raise tp.WireError(
+                f"flight {i} ({f.op}): messages carry {msg_total} bytes, "
+                f"record prices {f.nbytes}")
+    return {"n_flights": len(online), "nbytes": tape.nbytes}
+
+
+@dataclasses.dataclass
+class WireReport:
+    """Outcome of one real-wire execution of a tape."""
+    mode: str                       # "local" | "socket"
+    n_parties: int
+    n_flights: int
+    n_msgs: int
+    tape_nbytes: int                # what the ledger/tape priced
+    wire_nbytes: int                # what the transport counted
+    wire_makespan_s: float          # measured: barrier -> last party done
+    per_party_s: list
+    digests_ok: bool
+    n_frames: int
+    beats_seen: int = 0
+    suspects: list = dataclasses.field(default_factory=list)
+
+    @property
+    def bytes_match(self) -> bool:
+        return self.wire_nbytes == self.tape_nbytes
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["bytes_match"] = self.bytes_match
+        return d
+
+
+class PartyRuntime:
+    """Run a `comm.WireTape` as real parties over a transport.
+
+    mode="local"   one thread per party over a shared LocalTransport —
+                   deterministic, unpaced; the correctness path.
+    mode="socket"  one spawned process per party over a SocketTransport
+                   mesh, paced/delayed by `profile` — the measurement
+                   path.
+    """
+
+    def __init__(self, tape, mode: str = "local", profile=None,
+                 beat_every: int = DEFAULT_BEAT_EVERY,
+                 timeout_s: float = 60.0,
+                 heartbeat_timeout_s: float = 30.0):
+        if mode not in ("local", "socket"):
+            raise ValueError(f"unknown wire mode {mode!r}")
+        self.tape = tape
+        self.mode = mode
+        self.profile = profile
+        self.beat_every = beat_every
+        self.timeout_s = timeout_s
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+
+    def execute(self) -> WireReport:
+        n = self.tape.n_parties
+        plans = [compile_plan(self.tape, p) for p in range(n)]
+        want_digests = expected_digests(self.tape, n)
+        if self.mode == "local":
+            results, n_frames = self._run_local(plans, n)
+        else:
+            results, n_frames = self._run_socket(plans, n)
+        results.sort(key=lambda r: r["party"])
+        wire_nbytes = sum(nb for r in results
+                          for nb in r["sent_bytes"].values())
+        digests_ok = all(r["digest"] == want_digests[r["party"]]
+                         for r in results)
+        # CLOCK_MONOTONIC is boot-anchored on Linux, so t0/t1 are
+        # comparable across the spawned party processes
+        makespan = (max(r["t1"] for r in results)
+                    - min(r["t0"] for r in results))
+        report = WireReport(
+            mode=self.mode, n_parties=n,
+            n_flights=len(self.tape.flights),
+            n_msgs=sum(len(f.msgs) for f in self.tape.flights),
+            tape_nbytes=self.tape.nbytes, wire_nbytes=wire_nbytes,
+            wire_makespan_s=makespan,
+            per_party_s=[r["elapsed_s"] for r in results],
+            digests_ok=digests_ok, n_frames=n_frames,
+            beats_seen=sum(r["beats_seen"] for r in results),
+            suspects=sorted({s for r in results for s in r["suspects"]}))
+        if not report.bytes_match:
+            raise tp.WireError(
+                f"wire counted {report.wire_nbytes} DATA bytes but the "
+                f"tape priced {report.tape_nbytes}")
+        if not digests_ok:
+            raise tp.WireError(
+                "received payload digests diverge from the tape — the "
+                "wire did not carry the protocol's bytes")
+        return report
+
+    # -- backends -------------------------------------------------------
+    def _run_local(self, plans: list, n: int):
+        t = tp.LocalTransport(n)
+        results: list = [None] * n
+        errors: list = []
+
+        def work(p):
+            try:
+                results[p] = _party_loop(t, p, n, plans[p], self.beat_every,
+                                         self.timeout_s,
+                                         self.heartbeat_timeout_s)
+            except BaseException as e:
+                errors.append((p, e))
+
+        threads = [threading.Thread(target=work, args=(p,), daemon=True)
+                   for p in range(n)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=self.timeout_s * 2)
+        if errors:
+            p, e = errors[0]
+            raise tp.WireError(f"party {p} failed: {e}") from e
+        if any(r is None for r in results):
+            raise tp.WireError("a party thread never finished")
+        return results, t.n_frames
+
+    def _run_socket(self, plans: list, n: int):
+        ports = tp.free_ports(n)
+        ctx = multiprocessing.get_context("spawn")
+        q = ctx.Queue()
+        procs = [ctx.Process(
+            target=_party_main,
+            args=(p, n, ports, self.profile, plans[p], self.beat_every,
+                  self.timeout_s, self.heartbeat_timeout_s, q),
+            daemon=True) for p in range(n)]
+        for pr in procs:
+            pr.start()
+        results = []
+        try:
+            deadline = time.monotonic() + self.timeout_s * 4
+            while len(results) < n:
+                try:
+                    res = q.get(timeout=0.2)
+                except Exception:
+                    # a child that died without posting a result (bad
+                    # entry-point import, OOM, kill) must fail the run
+                    # NOW, not after the full protocol timeout
+                    dead = [pr.exitcode for pr in procs
+                            if not pr.is_alive() and pr.exitcode != 0]
+                    if dead:
+                        raise tp.WireError(
+                            f"party process died with exit code(s) {dead} "
+                            "before reporting a result")
+                    if time.monotonic() > deadline:
+                        raise tp.WireError(
+                            "timed out waiting for party results "
+                            f"(alive: {[pr.is_alive() for pr in procs]})")
+                    continue
+                if "error" in res:
+                    raise tp.WireError(
+                        f"party {res['party']} failed: {res['error']}")
+                results.append(res)
+        finally:
+            for pr in procs:
+                pr.join(timeout=5.0)
+                if pr.is_alive():
+                    pr.terminate()
+        n_frames = sum(r.get("n_frames", 0) for r in results)
+        return results, n_frames

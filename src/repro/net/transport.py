@@ -1,0 +1,356 @@
+"""Party-to-party transports — the real wire under the flight ledger.
+
+Two backends behind one blocking point-to-point interface:
+
+  LocalTransport   in-process queues. Deterministic, unpaced, test-grade:
+                   what the fault-tolerance tests and the `--wire local`
+                   smoke path drive.
+  SocketTransport  localhost TCP, one full-duplex connection per party
+                   pair, length-prefixed framed messages. Every directed
+                   link has a token-bucket pacer (bandwidth) and the
+                   receiver injects one-way latency from a
+                   `comm.NetProfile`, so any modeled network can be
+                   EMULATED on a real wire — the measured makespan of a
+                   flight plan is then an experiment, not a formula.
+
+Framing (SocketTransport): every message is one frame
+
+    !B  kind        DATA (payload, counted) | BEAT (heartbeat) | SYNC
+    !d  depart_ts   sender monotonic clock AFTER pacing (Linux
+                    CLOCK_MONOTONIC is boot-anchored, so it is
+                    comparable across processes on one host)
+    !I  length      payload bytes
+
+followed by `length` payload bytes. The receiver thread delays delivery
+until `depart_ts + one_way_latency`, which serializes subsequent frames
+on the link exactly like propagation delay does.
+
+Byte accounting: `data_bytes` counts DATA payloads only — frame headers
+and control frames (BEAT/SYNC) are excluded, because the reconciliation
+target is the ledger's `nbytes`, which prices share bytes, not framing.
+Framing overhead is reported separately (`frame_overhead_bytes`).
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import threading
+import time
+
+# frame kinds
+DATA, BEAT, SYNC = 0, 1, 2
+
+_HEADER = struct.Struct("!BdI")
+
+# a paced sender never sleeps longer than this per chunk, so huge frames
+# on a slow profile still make progress and ctrl-C stays responsive
+_MAX_SLEEP_S = 0.25
+
+
+class WireError(RuntimeError):
+    """Transport-level failure (timeout, short read, protocol abuse)."""
+
+
+class TokenBucket:
+    """Per-link bandwidth pacer: `throttle(n)` blocks until n bytes of
+    budget have accrued at `rate_Bps`. Burst capacity defaults to 64 KiB
+    or 50 ms of line rate, whichever is larger."""
+
+    def __init__(self, rate_Bps: float, burst: float | None = None, *,
+                 clock=time.monotonic, sleep=time.sleep):
+        self.rate = float(rate_Bps)
+        self.burst = float(burst if burst is not None
+                           else max(65536.0, self.rate * 0.05))
+        self._tokens = self.burst
+        self._t = clock()
+        self._clock, self._sleep = clock, sleep
+
+    def throttle(self, nbytes: int) -> float:
+        """Consume nbytes of budget, sleeping until the deficit is paid
+        off; returns seconds slept. Deficit-based so a frame LARGER than
+        the burst capacity still paces correctly (it waits out its own
+        line time) instead of waiting for a token level the cap can
+        never reach."""
+        now = self._clock()
+        self._tokens = min(self.burst,
+                           self._tokens + (now - self._t) * self.rate)
+        self._t = now
+        self._tokens -= nbytes
+        slept = 0.0
+        while self._tokens < 0:
+            wait = min(-self._tokens / self.rate, _MAX_SLEEP_S)
+            self._sleep(wait)
+            slept += wait
+            now = self._clock()
+            self._tokens += (now - self._t) * self.rate
+            self._t = now
+        return slept
+
+
+class Transport:
+    """Blocking point-to-point byte transport between n parties.
+
+    send() is non-blocking (enqueue); recv() blocks until the next frame
+    of the requested kind on the (src -> dst) link arrives. Per-link
+    FIFO order is guaranteed within a kind; DATA payload bytes are
+    counted in `data_bytes`.
+    """
+
+    n_parties: int
+
+    def __init__(self, n_parties: int):
+        self.n_parties = n_parties
+        self.data_bytes: dict[tuple[int, int], int] = {}
+        self.n_frames = 0
+        self._lock = threading.Lock()
+
+    def _count(self, src: int, dst: int, n: int, kind: int) -> None:
+        with self._lock:
+            self.n_frames += 1
+            if kind == DATA:
+                self.data_bytes[src, dst] = \
+                    self.data_bytes.get((src, dst), 0) + n
+
+    @property
+    def total_data_bytes(self) -> int:
+        with self._lock:
+            return sum(self.data_bytes.values())
+
+    # -- interface ------------------------------------------------------
+    def send(self, src: int, dst: int, data: bytes, kind: int = DATA) -> None:
+        raise NotImplementedError
+
+    def recv(self, dst: int, src: int, kind: int = DATA,
+             timeout: float | None = None) -> bytes:
+        raise NotImplementedError
+
+    def try_recv(self, dst: int, src: int, kind: int = DATA) -> bytes | None:
+        """Non-blocking recv: None when no frame is waiting."""
+        try:
+            return self.recv(dst, src, kind, timeout=0.0)
+        except WireError:
+            return None
+
+    def close(self) -> None:
+        pass
+
+
+class LocalTransport(Transport):
+    """In-process queue transport: deterministic and instantaneous.
+    The test-grade backend — heartbeat/straggler tests and `--wire
+    local` runs exchange the same frames as the socket backend, minus
+    pacing."""
+
+    def __init__(self, n_parties: int):
+        super().__init__(n_parties)
+        self._q: dict[tuple[int, int, int], queue.Queue] = {}
+        self._qlock = threading.Lock()
+
+    def _queue(self, src: int, dst: int, kind: int) -> queue.Queue:
+        k = (src, dst, kind)
+        with self._qlock:
+            q = self._q.get(k)
+            if q is None:
+                q = self._q[k] = queue.Queue()
+            return q
+
+    def send(self, src: int, dst: int, data: bytes, kind: int = DATA) -> None:
+        self._count(src, dst, len(data), kind)
+        self._queue(src, dst, kind).put(bytes(data))
+
+    def recv(self, dst: int, src: int, kind: int = DATA,
+             timeout: float | None = None) -> bytes:
+        try:
+            if timeout == 0.0:
+                return self._queue(src, dst, kind).get_nowait()
+            return self._queue(src, dst, kind).get(timeout=timeout)
+        except queue.Empty:
+            raise WireError(
+                f"recv timeout: party {dst} waiting on {src} (kind {kind})")
+
+
+def free_ports(n: int) -> list[int]:
+    """n distinct free loopback TCP ports (bound simultaneously so they
+    cannot collide with each other, then released for the parties)."""
+    socks, ports = [], []
+    try:
+        for _ in range(n):
+            s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            s.bind(("127.0.0.1", 0))
+            socks.append(s)
+            ports.append(s.getsockname()[1])
+        return ports
+    finally:
+        for s in socks:
+            s.close()
+
+
+def _recvall(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(min(1 << 20, n - len(buf)))
+        if not chunk:
+            raise WireError("peer closed connection mid-frame")
+        buf += chunk
+    return bytes(buf)
+
+
+class SocketTransport(Transport):
+    """Localhost TCP transport for ONE party of a full mesh.
+
+    Connection setup: party p listens on ports[p]; it accepts one
+    connection from every higher-numbered party and dials every
+    lower-numbered one (a 1-byte hello identifies the dialer), yielding
+    one full-duplex socket per pair. Each directed outgoing link gets a
+    sender thread (so protocol-level simultaneous exchanges can never
+    head-of-line deadlock on TCP buffers) that applies token-bucket
+    pacing per `profile.bandwidth_Bps`; each incoming socket gets a
+    receiver thread that demultiplexes frames by kind and delays
+    delivery to `depart_ts + profile.latency_s / 2` (one-way latency —
+    the profile's `latency_s` is a round trip).
+    """
+
+    def __init__(self, n_parties: int, party: int, ports: list[int],
+                 profile=None, *, connect_timeout: float = 20.0):
+        super().__init__(n_parties)
+        self.party = party
+        self.profile = profile
+        self.one_way_s = (profile.latency_s / 2.0) if profile else 0.0
+        self._socks: dict[int, socket.socket] = {}
+        self._inbox: dict[tuple[int, int], queue.Queue] = {
+            (peer, kind): queue.Queue()
+            for peer in range(n_parties) if peer != party
+            for kind in (DATA, BEAT, SYNC)}
+        self._outbox: dict[int, queue.Queue] = {}
+        self._senders: list[threading.Thread] = []
+        self._receivers: list[threading.Thread] = []
+        self._closed = threading.Event()
+        self._connect(ports, connect_timeout)
+        for peer, sock in self._socks.items():
+            ob: queue.Queue = queue.Queue()
+            self._outbox[peer] = ob
+            ts = threading.Thread(target=self._sender, args=(peer, sock, ob),
+                                  daemon=True)
+            tr = threading.Thread(target=self._receiver, args=(peer, sock),
+                                  daemon=True)
+            ts.start()
+            tr.start()
+            self._senders.append(ts)
+            self._receivers.append(tr)
+
+    # -- mesh setup -----------------------------------------------------
+    def _connect(self, ports: list[int], timeout: float) -> None:
+        p = self.party
+        listener = None
+        if p < self.n_parties - 1:      # someone will dial us
+            listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            listener.bind(("127.0.0.1", ports[p]))
+            listener.listen(self.n_parties)
+            listener.settimeout(timeout)
+        # dial every lower-numbered party (retry while it boots)
+        for peer in range(p):
+            deadline = time.monotonic() + timeout
+            while True:
+                s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+                try:
+                    s.connect(("127.0.0.1", ports[peer]))
+                    break
+                except OSError:
+                    s.close()
+                    if time.monotonic() > deadline:
+                        raise WireError(
+                            f"party {p} could not reach party {peer} on "
+                            f"port {ports[peer]}")
+                    time.sleep(0.02)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            s.sendall(struct.pack("!B", p))          # hello: who dials
+            self._socks[peer] = s
+        # accept every higher-numbered party
+        for _ in range(p + 1, self.n_parties):
+            try:
+                s, _addr = listener.accept()
+            except socket.timeout:
+                raise WireError(f"party {p}: accept timed out")
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            (peer,) = struct.unpack("!B", _recvall(s, 1))
+            self._socks[peer] = s
+        if listener is not None:
+            listener.close()
+
+    # -- link threads ---------------------------------------------------
+    def _sender(self, peer: int, sock: socket.socket, ob: queue.Queue):
+        bucket = TokenBucket(self.profile.bandwidth_Bps) if self.profile \
+            else None
+        while not self._closed.is_set():
+            try:
+                item = ob.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            if item is None:
+                return
+            kind, data = item
+            if bucket is not None and kind == DATA and data:
+                bucket.throttle(len(data))
+            frame = _HEADER.pack(kind, time.monotonic(), len(data)) + data
+            try:
+                sock.sendall(frame)
+            except OSError:
+                return
+
+    def _receiver(self, peer: int, sock: socket.socket):
+        while not self._closed.is_set():
+            try:
+                hdr = _recvall(sock, _HEADER.size)
+            except (WireError, OSError):
+                return
+            kind, depart, length = _HEADER.unpack(hdr)
+            try:
+                data = _recvall(sock, length) if length else b""
+            except (WireError, OSError):
+                return
+            if self.one_way_s:
+                # propagation delay: deliver no earlier than
+                # departure + one-way latency (delays this link's later
+                # frames too, exactly like a real pipe)
+                dt = depart + self.one_way_s - time.monotonic()
+                if dt > 0:
+                    time.sleep(dt)
+            self._inbox[peer, kind].put(data)
+
+    # -- interface ------------------------------------------------------
+    def send(self, src: int, dst: int, data: bytes, kind: int = DATA) -> None:
+        if src != self.party:
+            raise WireError(f"party {self.party} cannot send as {src}")
+        self._count(src, dst, len(data), kind)
+        self._outbox[dst].put((kind, bytes(data)))
+
+    def recv(self, dst: int, src: int, kind: int = DATA,
+             timeout: float | None = None) -> bytes:
+        if dst != self.party:
+            raise WireError(f"party {self.party} cannot recv as {dst}")
+        try:
+            if timeout == 0.0:
+                return self._inbox[src, kind].get_nowait()
+            return self._inbox[src, kind].get(timeout=timeout)
+        except queue.Empty:
+            raise WireError(
+                f"recv timeout: party {dst} waiting on {src} (kind {kind})")
+
+    def close(self) -> None:
+        # drain FIRST: senders exit on the None sentinel only after every
+        # already-enqueued frame is on the wire — shutting the socket
+        # before that silently drops the tail of the stream
+        for ob in self._outbox.values():
+            ob.put(None)
+        for ts in self._senders:
+            ts.join(timeout=10.0)
+        self._closed.set()
+        for s in self._socks.values():
+            try:
+                s.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            s.close()

@@ -48,12 +48,16 @@ class HeartbeatMonitor:
 
 
 class StragglerMitigator:
-    """Deadline-based backup dispatch; tracks a running p95 of task times."""
+    """Deadline-based backup dispatch; tracks a running p95 of task
+    times. `clock` is injectable so tests can drive deterministic task
+    durations without sleeping."""
 
-    def __init__(self, slack: float = 2.0, window: int = 64):
+    def __init__(self, slack: float = 2.0, window: int = 64,
+                 clock: Callable[[], float] = time.monotonic):
         self.slack = slack
         self._times: list[float] = []
         self._window = window
+        self._clock = clock
         self.backups_fired = 0
 
     def deadline(self) -> float:
@@ -63,15 +67,57 @@ class StragglerMitigator:
 
     def run(self, task: Callable[[], object],
             backup: Callable[[], object] | None = None):
-        t0 = time.monotonic()
+        t0 = self._clock()
         deadline = self.deadline()
         result = task()
-        dt = time.monotonic() - t0
+        dt = self._clock() - t0
         if dt > deadline and backup is not None:
             self.backups_fired += 1
             result = backup()          # first-finisher-wins (serial sim)
         self._times.append(dt)
         return result
+
+
+class TransportHeartbeat:
+    """Heartbeats riding a party transport as control frames.
+
+    Duck-typed over `net.transport.Transport` (anything with
+    `send(src, dst, data, kind)` / `try_recv(dst, src, kind)`) so this
+    module never imports the net package. `kind` defaults to the BEAT
+    frame kind (net.transport.BEAT == 1).
+
+    Non-zero parties `emit()` a zero-byte BEAT to party 0 between
+    flights; party 0 `drain()`s its beat queues non-blockingly into a
+    HeartbeatMonitor — a silent party ages out of the monitor exactly
+    like a dead host would, while healthy parties cost one control frame
+    per beat interval on the already-open links.
+    """
+
+    def __init__(self, transport, party: int, n_parties: int,
+                 monitor: HeartbeatMonitor | None = None, kind: int = 1):
+        self.transport = transport
+        self.party = party
+        self.n_parties = n_parties
+        self.monitor = monitor              # party 0 owns one; others None
+        self.kind = kind
+        self.beats_seen = 0
+
+    def emit(self) -> None:
+        if self.party != 0:
+            self.transport.send(self.party, 0, b"", kind=self.kind)
+
+    def drain(self) -> int:
+        """Party 0: absorb all waiting beats; returns how many."""
+        if self.monitor is None:
+            return 0
+        self.monitor.beat(0)                # party 0 vouches for itself
+        got = 0
+        for src in range(1, self.n_parties):
+            while self.transport.try_recv(0, src, kind=self.kind) is not None:
+                self.monitor.beat(src)
+                got += 1
+        self.beats_seen += got
+        return got
 
 
 def retry(fn: Callable[[], object], *, attempts: int = 3,

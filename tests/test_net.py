@@ -1,0 +1,259 @@
+"""Real-wire runtime tests: transports, wire capture, reconciliation.
+
+Everything except the `wire`-marked tests stays in-process
+(LocalTransport threads / pure plan logic); the marked tests spawn real
+party processes over localhost TCP.
+"""
+import hashlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import net
+from repro.mpc import comm, ops, sharing
+from repro.mpc.ring import RING64, x64_scope
+from repro.net import transport as tp
+
+
+# ---------------------------------------------------------------------------
+# transport primitives
+# ---------------------------------------------------------------------------
+
+def test_local_transport_roundtrip_fifo():
+    t = net.LocalTransport(2)
+    t.send(0, 1, b"first")
+    t.send(0, 1, b"second")
+    t.send(1, 0, b"back")
+    assert t.recv(1, 0) == b"first"
+    assert t.recv(1, 0) == b"second"
+    assert t.recv(0, 1) == b"back"
+    assert t.total_data_bytes == len(b"first" + b"second" + b"back")
+    assert t.data_bytes[0, 1] == 11
+
+
+def test_local_transport_kinds_demuxed():
+    t = net.LocalTransport(2)
+    t.send(1, 0, b"", kind=tp.BEAT)
+    t.send(1, 0, b"payload", kind=tp.DATA)
+    # control frames never pollute the DATA byte count
+    assert t.recv(0, 1, kind=tp.DATA) == b"payload"
+    assert t.try_recv(0, 1, kind=tp.BEAT) == b""
+    assert t.try_recv(0, 1, kind=tp.BEAT) is None
+    assert t.total_data_bytes == 7
+
+
+def test_local_transport_timeout_raises():
+    t = net.LocalTransport(2)
+    with pytest.raises(net.WireError):
+        t.recv(0, 1, timeout=0.01)
+
+
+def test_token_bucket_paces_with_fake_clock():
+    now = [0.0]
+    slept = []
+
+    def clock():
+        return now[0]
+
+    def sleep(dt):
+        slept.append(dt)
+        now[0] += dt
+
+    b = tp.TokenBucket(rate_Bps=1000.0, burst=100.0, clock=clock, sleep=sleep)
+    assert b.throttle(100) == 0.0          # burst absorbs the first frame
+    waited = b.throttle(500)               # then 500 B at 1 kB/s = 0.5 s
+    assert waited == pytest.approx(0.5, rel=1e-6)
+    assert sum(slept) == pytest.approx(0.5, rel=1e-6)
+
+
+def test_free_ports_distinct():
+    ports = tp.free_ports(3)
+    assert len(set(ports)) == 3
+    assert all(1024 <= p <= 65535 for p in ports)
+
+
+# ---------------------------------------------------------------------------
+# synthesized filler + payload normalization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nbytes,rounds,n", [
+    (432, 8, 2), (7, 3, 2), (1, 1, 3), (100, 2, 3), (0, 1, 2),
+])
+def test_synth_msgs_exact_bytes(nbytes, rounds, n):
+    msgs = comm.synth_msgs(nbytes, rounds, n)
+    assert sum(len(m.data) for m in msgs) == nbytes
+    assert {m.rnd for m in msgs} == set(range(max(1, rounds)))
+    for m in msgs:
+        assert 0 <= m.src < n and 0 <= m.dst < n and m.src != m.dst
+
+
+def test_normalize_payload_rejects_diverged_cost():
+    with pytest.raises(ValueError):
+        comm.normalize_payload([(0, 1, b"\x00" * 10)], nbytes=12, rounds=1,
+                               n_parties=2)
+
+
+def test_normalize_payload_abstract_falls_back_to_synth():
+    def f(x):
+        msgs = comm.normalize_payload([(0, 1, x)], nbytes=32, rounds=1,
+                                      n_parties=2)
+        assert sum(len(m.data) for m in msgs) == 32
+        return x
+
+    jax.eval_shape(f, jax.ShapeDtypeStruct((4,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# capture -> plan -> replay
+# ---------------------------------------------------------------------------
+
+def _capture(proto):
+    with x64_scope():
+        x = sharing.share(jax.random.PRNGKey(0),
+                          jnp.arange(12.0).reshape(3, 4), RING64, proto)
+        tape = comm.WireTape(x.backend.n_wire_parties)
+        with comm.ledger_scope() as led, comm.wire_tape_scope(tape):
+            y = ops.mul(x, x, jax.random.PRNGKey(1))
+            y = ops.force(y, jax.random.PRNGKey(2))
+            sharing.reveal(y)
+    return led, tape
+
+
+@pytest.mark.parametrize("proto", ["2pc", "3pc", "aby3trunc", "spdz2pc"])
+def test_capture_reconciles_and_replays(proto):
+    led, tape = _capture(proto)
+    rec = net.reconcile(led, tape)
+    assert rec["nbytes"] == led.nbytes
+    rep = net.PartyRuntime(tape, mode="local", beat_every=1).execute()
+    assert rep.bytes_match and rep.digests_ok
+    assert rep.wire_nbytes == led.nbytes
+    assert rep.n_flights == len(tape.flights)
+    assert rep.suspects == []
+    if tape.n_parties > 1:
+        assert rep.beats_seen > 0     # liveness rode the same transport
+
+
+def test_reconcile_detects_divergence():
+    led, tape = _capture("2pc")
+    tape.flights[0] = comm.WireFlight(
+        tape.flights[0].op, tape.flights[0].rounds,
+        tape.flights[0].nbytes + 8, tape.flights[0].tag,
+        tape.flights[0].msgs)
+    with pytest.raises(net.WireError):
+        net.reconcile(led, tape)
+
+
+def test_plan_covers_every_message_once():
+    _, tape = _capture("3pc")
+    n_msgs = sum(len(f.msgs) for f in tape.flights)
+    sends = sum(len(s) for p in range(3)
+                for fl in net.compile_plan(tape, p) for s, _ in fl)
+    recvs = sum(len(r) for p in range(3)
+                for fl in net.compile_plan(tape, p) for _, r in fl)
+    assert sends == n_msgs and recvs == n_msgs
+
+
+def test_expected_digests_match_manual():
+    _, tape = _capture("2pc")
+    want = net.expected_digests(tape, 2)
+    h = hashlib.blake2b(digest_size=16)
+    for f in tape.flights:
+        for r in sorted({m.rnd for m in f.msgs} or {0}):
+            for m in f.msgs:
+                if m.rnd == r and m.dst == 1:
+                    h.update(m.data)
+    assert want[1] == h.hexdigest()
+
+
+def test_fused_flight_is_single_merged_exchange():
+    """A fused group's payloads merge into ONE tape flight whose bytes
+    still reconcile."""
+    from repro.mpc import fusion
+    with x64_scope():
+        a = sharing.share(jax.random.PRNGKey(0), jnp.arange(4.0), RING64)
+        b = sharing.share(jax.random.PRNGKey(1), jnp.arange(4.0) + 1, RING64)
+        tape = comm.WireTape(2)
+        with comm.ledger_scope() as led, comm.wire_tape_scope(tape), \
+                fusion.flight_scope():
+            sharing.open_(a)
+            sharing.open_(b)
+    online = [r for r in led.records if r.tag != "offline"]
+    assert len(online) == 1 and len(tape.flights) == 1
+    assert tape.flights[0].nbytes == led.nbytes
+    net.reconcile(led, tape)
+
+
+# ---------------------------------------------------------------------------
+# executor integration
+# ---------------------------------------------------------------------------
+
+def _tiny_phase(protocol, wire, net_name="wan"):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
+    from common import tiny_exec_setup
+    from repro.core.executor import ExecConfig, WaveExecutor
+
+    cfg, spec, pp = tiny_exec_setup(0)
+    tokens = np.asarray(
+        jax.random.randint(jax.random.key(1), (16, 8), 0, cfg.vocab_size))
+    ex = WaveExecutor(ExecConfig(wave=2, batch=8, protocol=protocol,
+                                 wire=wire, net=net_name))
+    ent = ex.score_phase(jax.random.key(2), pp, cfg, tokens, spec)
+    return np.asarray(ent.sh), ex.reports[-1]
+
+
+@pytest.mark.parametrize("protocol", ["2pc", "3pc"])
+def test_executor_wire_local_bitwise_and_reconciled(protocol):
+    ref, rep0 = _tiny_phase(protocol, "none")
+    got, rep = _tiny_phase(protocol, "local")
+    assert np.array_equal(ref, got)
+    assert rep0.wire is None and rep.wire is not None
+    assert rep.wire.bytes_match and rep.wire.digests_ok
+    assert rep.wire.wire_nbytes == rep.ledger.nbytes
+    assert rep.wire.wire_makespan_s > 0.0
+    assert rep.agrees()               # wire capture never bends the ledger
+
+
+def test_executor_rejects_unknown_wire_mode():
+    from repro.core.executor import ExecConfig, WaveExecutor
+    with pytest.raises(ValueError):
+        WaveExecutor(ExecConfig(wire="carrier-pigeon"))
+
+
+# ---------------------------------------------------------------------------
+# socket transport — real processes, real TCP (marked)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.wire
+def test_socket_transport_pair_roundtrip():
+    import threading
+    ports = tp.free_ports(2)
+    out = {}
+
+    def party(p):
+        t = tp.SocketTransport(2, p, ports)
+        try:
+            t.send(p, 1 - p, b"hello from %d" % p)
+            out[p] = t.recv(p, 1 - p, timeout=10.0)
+        finally:
+            t.close()
+
+    ths = [threading.Thread(target=party, args=(p,)) for p in range(2)]
+    for th in ths:
+        th.start()
+    for th in ths:
+        th.join(timeout=30.0)
+    assert out == {0: b"hello from 1", 1: b"hello from 0"}
+
+
+@pytest.mark.wire
+@pytest.mark.parametrize("proto", ["2pc", "3pc"])
+def test_socket_runtime_executes_tape(proto):
+    led, tape = _capture(proto)
+    rep = net.PartyRuntime(tape, mode="socket", beat_every=1).execute()
+    assert rep.bytes_match and rep.digests_ok
+    assert rep.wire_nbytes == led.nbytes
+    assert rep.mode == "socket" and rep.n_parties == tape.n_parties
