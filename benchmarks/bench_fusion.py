@@ -280,6 +280,82 @@ def wire_smoke(wire: str, net: str,
     return out
 
 
+def chaos_smoke(wire: str, net: str, seed: int,
+                wire_protocols=("2pc", "3pc")) -> dict:
+    """Execute the wire smoke under a seeded FaultPlan (net/faults.py)
+    and enforce the chaos acceptance gates, per protocol:
+      * the replay COMPLETES despite dropped frames, latency spikes, a
+        connection reset, and (3pc) a party crash mid-phase
+      * entropy scores stay bitwise identical to the fault-free path
+      * goodput still reconciles byte-for-byte against the ledger —
+        recovery traffic rides the separate RETRANS channel
+      * `retries > 0` (losses actually recovered, not dodged) and, when
+        the plan crashes a party, `respawns >= 1` / `recovery_time_s > 0`
+      * determinism: the same seed over the same tape produces the
+        identical fault placement (2pc runs twice and compares plans)
+    """
+    from benchmarks.common import tiny_exec_setup
+    from repro.core.executor import ExecConfig, WaveExecutor
+
+    seq, classes, pool_n, batch, wave = 8, 2, 24, 8, 2
+    cfg, spec, pp = tiny_exec_setup(0, seq=seq, n_classes=classes)
+    pool = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                             (pool_n, seq))
+    key = jax.random.key(7)
+    out = {"mode": wire, "net": net, "seed": seed}
+    for proto in wire_protocols:
+        ex0 = WaveExecutor(ExecConfig(wave=wave, batch=batch,
+                                      protocol=proto))
+        ref = np.asarray(ex0.score_phase(key, pp, cfg, pool, spec).sh)
+        n_runs = 2 if proto == "2pc" else 1    # 2pc doubles as the
+        runs = []                              # determinism witness
+        for _ in range(n_runs):
+            ex = WaveExecutor(ExecConfig(wave=wave, batch=batch,
+                                         protocol=proto, wire=wire,
+                                         net=net, chaos_seed=seed))
+            ent = ex.score_phase(key, pp, cfg, pool, spec)
+            runs.append((np.asarray(ent.sh), ex.reports[-1].wire))
+        got, w = runs[0]
+        assert w is not None and w.faults_injected > 0, \
+            f"{proto}: chaos run injected no faults"
+        assert np.array_equal(ref, got), \
+            f"{proto}: chaos execution changed entropy scores"
+        assert w.bytes_match, \
+            f"{proto}: goodput {w.wire_nbytes} != tape {w.tape_nbytes} " \
+            f"under chaos"
+        assert w.digests_ok, f"{proto}: payload digests diverged under chaos"
+        assert w.retries > 0, f"{proto}: no retries — faults not exercised"
+        plan = json.loads(w.fault_plan)
+        if plan.get("crash"):
+            assert w.respawns >= 1 or w.degraded, \
+                f"{proto}: crashed party neither respawned nor degraded"
+            assert w.recovery_time_s > 0, \
+                f"{proto}: crash recovered in zero time?"
+        for _, w2 in runs[1:]:
+            assert w2.fault_plan == w.fault_plan, \
+                f"{proto}: same seed produced a different fault placement"
+        out[proto] = {
+            "faults_injected": w.faults_injected,
+            "fault_plan": plan,
+            "retries": w.retries,
+            "retrans_bytes": w.retrans_bytes,
+            "ack_bytes": w.ack_bytes,
+            "dup_frames": w.dup_frames,
+            "reconnects": w.reconnects,
+            "respawns": w.respawns,
+            "recovery_time_s": w.recovery_time_s,
+            "degraded": w.degraded,
+            "dead_parties": w.dead_parties,
+            "nbytes": w.wire_nbytes,
+            "wire_makespan_s": w.wire_makespan_s,
+            "bitwise_identical": True,
+            "bytes_match": True,
+            "digests_ok": True,
+            "deterministic": True,
+        }
+    return out
+
+
 def _trunc_events(led) -> int:
     """Protocol-level truncation events in an EAGER stream (trunc_open /
     trunc2 / trunc_reshare); fused streams fold bw op names into their
@@ -349,6 +425,16 @@ def main(argv=None) -> int:
     ap.add_argument("--net", choices=sorted(PROFILES), default="wan",
                     help="NetProfile for BOTH the delay model (net_* "
                          "probe keys) and the socket pacer")
+    ap.add_argument("--chaos", action="store_true",
+                    help="re-run the wire smoke under a seeded FaultPlan "
+                         "(drops, spikes, a connection reset, a party "
+                         "crash) and gate recovery: scores bitwise "
+                         "identical, goodput reconciled, retries > 0; "
+                         "lands in BENCH_fusion.json['chaos'] "
+                         "(requires --smoke and --wire)")
+    ap.add_argument("--chaos-seed", type=int, default=123,
+                    help="FaultPlan seed (same seed + tape = identical "
+                         "fault placement)")
     ap.add_argument("--csv", action="store_true",
                     help="emit benchmarks.run CSV rows instead of summary")
     ap.add_argument("--out", default="BENCH_fusion.json")
@@ -356,6 +442,9 @@ def main(argv=None) -> int:
     if args.wire != "none" and not args.smoke:
         ap.error("--wire requires --smoke (the paper-scale geometry is "
                  "probed analytically, never executed)")
+    if args.chaos and args.wire == "none":
+        ap.error("--chaos requires --wire local|socket (faults are "
+                 "injected into a real transport)")
 
     if args.smoke:
         cfg = ArchConfig(name="fusion-smoke", family="dense", n_layers=1,
@@ -394,6 +483,9 @@ def main(argv=None) -> int:
             # real-wire gates: both party counts (2pc duplex pair, 3pc
             # ring) cross the transport; wire_makespan_s is measured
             result["wire"] = wire_smoke(args.wire, args.net)
+        if args.chaos:
+            result["chaos"] = chaos_smoke(args.wire, args.net,
+                                          args.chaos_seed)
 
     for key, curve in result["malicious_overhead"].items():
         if curve["rounds_overhead"] < 0:
@@ -464,6 +556,15 @@ def main(argv=None) -> int:
                   f"{proto}: measured={wv['wire_makespan_s']:.3f}s "
                   f"modeled={wv['modeled_makespan_s']:.3f}s "
                   f"bytes={wv['nbytes']} flights={wv['flights']}")
+    if "chaos" in result and not args.csv:
+        for proto in ("2pc", "3pc"):
+            cv = result["chaos"][proto]
+            print(f"chaos[{result['chaos']['mode']}] {proto}: "
+                  f"faults={cv['faults_injected']} retries={cv['retries']} "
+                  f"retrans={cv['retrans_bytes']}B "
+                  f"respawns={cv['respawns']} "
+                  f"recovery={cv['recovery_time_s']:.3f}s "
+                  f"degraded={cv['degraded']}")
     if not args.csv:
         print(f"wrote {args.out}")
     return 0

@@ -85,6 +85,14 @@ class ExecConfig:
     wire: str = "none"
     # which comm.PROFILES entry prices the model AND paces the socket
     net: str = "wan"
+    # chaos (net/faults.py): with a seed, derive a deterministic
+    # FaultPlan from the captured tape and replay under injected faults
+    # (reliable delivery + crash recovery engage automatically); scores
+    # must stay bitwise identical and goodput must still reconcile.
+    chaos_seed: int | None = None
+    # degraded 2-of-3: a 3PC party that dies at a phase boundary is
+    # dropped and the survivors finish the opens (replicated sharing)
+    degraded: bool = False
 
     def sched(self) -> iosched.SchedConfig:
         return iosched.SchedConfig(coalesce=self.coalesce,
@@ -129,6 +137,9 @@ class WaveExecutor:
     def __init__(self, cfg: ExecConfig):
         if cfg.wire not in ("none", "local", "socket"):
             raise ValueError(f"unknown wire mode {cfg.wire!r}")
+        if cfg.chaos_seed is not None and cfg.wire == "none":
+            raise ValueError("chaos_seed needs a real wire "
+                             "(wire='local' or 'socket')")
         if cfg.wire != "none" and cfg.coalesce:
             # capturing real message tensors requires the eager per-lane
             # path (vmap abstracts the payloads away); the schedule is
@@ -241,10 +252,19 @@ class WaveExecutor:
             # record-for-record against the phase ledger, then measure
             from repro import net
             net.reconcile(phase_led, tape)
+            fault_plan = None
+            if cfg.chaos_seed is not None:
+                from repro.net import faults
+                fault_plan = faults.FaultPlan.from_tape(
+                    cfg.chaos_seed, tape,
+                    crash_at_boundary=cfg.degraded)
             wire_rep = net.PartyRuntime(
                 tape, mode=cfg.wire,
                 profile=(comm.PROFILES[cfg.net] if cfg.wire == "socket"
-                         else None)).execute()
+                         else None),
+                fault_plan=fault_plan,
+                recover=fault_plan is not None and not cfg.degraded,
+                degraded=cfg.degraded).execute()
         self.reports.append(PhaseReport(
             ledger=phase_led, per_batch=per_batch, n_batches=n_batches,
             n_waves=n_waves, wall_s=wall_s, sched=self.cfg.sched(),

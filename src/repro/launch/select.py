@@ -92,7 +92,8 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         wave: int = 8, coalesce: bool = True, overlap: bool = True,
         fuse: bool = True, score_batch: int = 64, ring_bits: int = 64,
         protocol: str = "2pc", resume: bool = True,
-        wire: str = "none", net: str = "wan") -> dict:
+        wire: str = "none", net: str = "wan",
+        chaos_seed: int | None = None, degraded: bool = False) -> dict:
     task = make_classification_task(seed, n_pool=n_pool, n_test=400,
                                     seq=16, vocab=256, n_classes=4)
     cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
@@ -112,7 +113,8 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         checkpoint_dir=ckpt_dir, resume=resume,
         executor=ExecConfig(wave=wave, coalesce=coalesce, overlap=overlap,
                             fuse=fuse, protocol=protocol,
-                            wire=wire, net=net))
+                            wire=wire, net=net,
+                            chaos_seed=chaos_seed, degraded=degraded))
     t0 = time.time()
     res = run_selection(key, params0, cfg, task.pool_tokens, sel,
                         n_classes=task.n_classes,
@@ -206,13 +208,29 @@ def main() -> None:
                     default="wan",
                     help="NetProfile the socket transport emulates "
                          "(pacing + injected latency)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a deterministic FaultPlan derived from "
+                         "each phase's tape with this seed (drops, "
+                         "latency spikes, resets, one crash); requires "
+                         "--wire local|socket. Scores stay bitwise "
+                         "identical and goodput still reconciles.")
+    ap.add_argument("--chaos-plan", type=str, default=None,
+                    help="write each wired phase's injected FaultPlan "
+                         "as JSON to this path (phase index appended) "
+                         "for exact replay")
+    ap.add_argument("--degraded", action="store_true",
+                    help="with --chaos-seed on an honest-majority "
+                         "protocol (3pc/aby3trunc): place the crash at "
+                         "a phase boundary and complete 2-of-3 with "
+                         "the survivors instead of respawning")
     args = ap.parse_args()
     out = run(args.seed, args.pool, args.budget, args.mode,
               wave=args.wave, coalesce=not args.no_coalesce,
               overlap=not args.no_overlap, fuse=not args.eager,
               score_batch=args.score_batch,
               ring_bits=args.ring, protocol=args.protocol,
-              resume=not args.no_resume, wire=args.wire, net=args.net)
+              resume=not args.no_resume, wire=args.wire, net=args.net,
+              chaos_seed=args.chaos_seed, degraded=args.degraded)
     if out["executed"] is not None:
         ex = out["executed"]
         ph = ex["phases"]
@@ -229,6 +247,22 @@ def main() -> None:
             print("[select] real wire (" + wired[0]["mode"] + "): measured "
                   + ", ".join(f"{w['wire_makespan_s']:.3f}s" for w in wired)
                   + f"; bytes reconciled={all(w['bytes_match'] for w in wired)}")
+        chaotic = [w for w in wired if w.get("faults_injected")]
+        if chaotic:
+            print("[select] chaos: "
+                  f"{sum(w['faults_injected'] for w in chaotic)} faults, "
+                  f"{sum(w['retries'] for w in chaotic)} retries, "
+                  f"{sum(w['respawns'] for w in chaotic)} respawns, "
+                  f"{sum(w['retrans_bytes'] for w in chaotic)} retrans B, "
+                  "recovery "
+                  f"{sum(w['recovery_time_s'] for w in chaotic):.3f}s")
+            if args.chaos_plan:
+                for i, w in enumerate(chaotic):
+                    if w.get("fault_plan"):
+                        path = f"{args.chaos_plan}.phase{i}.json"
+                        with open(path, "w") as f:
+                            f.write(w["fault_plan"])
+                        print(f"[select] chaos plan -> {path}")
     print(f"[select] ours={out['acc_ours']:.3f} random={out['acc_random']:.3f} "
           f"(+{out['gain']:.3f}); modeled WAN delay "
           f"{out['paper_scale_delay']['wan']['ours_hours']:.1f}h vs oracle "

@@ -244,6 +244,29 @@ class WireTape:
     def nbytes(self) -> int:
         return sum(f.nbytes for f in self.flights)
 
+    def link_frames(self) -> dict:
+        """DATA frames per directed link, in party-loop send order —
+        the population `net.faults.FaultPlan` places faults over (a
+        deterministic function of the tape alone)."""
+        counts: dict = {}
+        for f in self.flights:
+            for r in sorted({m.rnd for m in f.msgs} or {0}):
+                for m in f.msgs:
+                    if m.rnd == r:
+                        counts[(m.src, m.dst)] = \
+                            counts.get((m.src, m.dst), 0) + 1
+        return counts
+
+    def link_nbytes(self) -> dict:
+        """Payload bytes per directed link — what each transport
+        link's goodput counter must equal after any replay, faulted or
+        not."""
+        out: dict = {}
+        for f in self.flights:
+            for m in f.msgs:
+                out[(m.src, m.dst)] = out.get((m.src, m.dst), 0) + len(m.data)
+        return out
+
 
 _state = threading.local()
 

@@ -5,15 +5,23 @@ WireTape; this package replays the tape as real parties — threads over
 in-process queues (`LocalTransport`) or spawned processes over paced
 localhost TCP (`SocketTransport`) — reconciling transport-counted bytes
 against the ledger and measuring wall-clock (`wire_makespan_s`).
+
+Chaos hardening: `net.faults.FaultPlan` injects seeded, deterministic
+failures (drops, latency spikes, connection resets, party crashes) and
+`ReliableTransport` + the supervisor in `runtime.py` recover them —
+goodput still reconciles byte-for-byte and digests stay bitwise equal.
 """
 from repro.net.transport import (          # noqa: F401
+    ACK,
     BEAT,
     DATA,
     SYNC,
     LocalTransport,
+    ReliableTransport,
     SocketTransport,
     TokenBucket,
     Transport,
+    WireDown,
     WireError,
     free_ports,
 )
@@ -22,5 +30,11 @@ from repro.net.runtime import (            # noqa: F401
     WireReport,
     compile_plan,
     expected_digests,
+    filter_tape,
     reconcile,
+)
+from repro.net.faults import (             # noqa: F401
+    ChaosTransport,
+    FaultPlan,
+    InjectedCrash,
 )

@@ -121,14 +121,30 @@ class TransportHeartbeat:
 
 
 def retry(fn: Callable[[], object], *, attempts: int = 3,
-          backoff_s: float = 0.1, retriable=(IOError, OSError)):
+          backoff_s: float = 0.1, retriable=(IOError, OSError),
+          sleep: Callable[[float], None] = time.sleep,
+          clock: Callable[[], float] = time.monotonic,
+          deadline_s: float | None = None,
+          max_backoff_s: float = 5.0):
+    """Call `fn` until it returns, retrying `retriable` failures with
+    exponential backoff. `sleep`/`clock` are injectable so transports can
+    service control traffic during the wait and tests can run without
+    wall-clock time; `deadline_s` bounds the TOTAL elapsed time (checked
+    before each backoff sleep) — the socket dial loop and the reliable
+    recv resend loop both run on this one primitive."""
     last = None
+    t0 = clock()
     for i in range(attempts):
         try:
             return fn()
         except retriable as e:           # noqa: PERF203
             last = e
-            time.sleep(backoff_s * (2 ** i))
+            if i == attempts - 1:        # no pointless sleep after the end
+                break
+            wait = min(backoff_s * (2 ** i), max_backoff_s)
+            if deadline_s is not None and clock() - t0 + wait > deadline_s:
+                break
+            sleep(wait)
     raise last
 
 
@@ -142,6 +158,7 @@ class ElasticPlan:
     new_shape: tuple[int, ...]
     moves: list[tuple[int, int]]         # (src_host, dst_host) transfers
     reshard_fraction: float              # fraction of bytes that move
+    bytes_moved: int = 0                 # reshard_fraction * total bytes
 
 
 def plan_remesh(old_shape: tuple[int, ...], new_shape: tuple[int, ...],
@@ -152,6 +169,9 @@ def plan_remesh(old_shape: tuple[int, ...], new_shape: tuple[int, ...],
     N owns slice [h/N, (h+1)/N). On re-factorization to M hosts, dst d
     needs bytes overlapping [d/M, (d+1)/M) — moves are the off-diagonal
     overlaps (contiguous-range reshard, the standard scalable scheme).
+    `bytes_per_host` sizes the old shards, so `bytes_moved` is the wire
+    cost of the transfer in bytes (the launcher budgets recovery time
+    against it).
     """
     n = int(np.prod(old_shape))
     m = int(np.prod(new_shape))
@@ -165,4 +185,5 @@ def plan_remesh(old_shape: tuple[int, ...], new_shape: tuple[int, ...],
             if ov > 1e-12 and s != d:
                 moves.append((s, d))
                 moved += ov
-    return ElasticPlan(old_shape, new_shape, moves, moved)
+    return ElasticPlan(old_shape, new_shape, moves, moved,
+                       int(round(moved * n * bytes_per_host)))

@@ -1,0 +1,106 @@
+"""Checkpoint durability: COMMIT discipline, corruption skip, exotic
+dtypes. The same atomic write-then-COMMIT pattern backs the party
+runtime's crash-recovery flight cursor (net/runtime.FlightCursor)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def _tree(seed: int):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 3)).astype(np.float32),
+            "b": rng.standard_normal(3).astype(np.float32),
+            "step": np.asarray(seed, np.int64)}
+
+
+def _assert_trees_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_restore_picks_newest_commit(tmp_path):
+    d = str(tmp_path)
+    for step in (1, 5, 3):
+        ckpt.save_checkpoint(d, step, _tree(step))
+    assert ckpt.latest_step(d) == 5
+    got, step = ckpt.restore_checkpoint(d, _tree(0))
+    assert step == 5
+    _assert_trees_equal(got, _tree(5))
+
+
+def test_restore_skips_partial_step_missing_commit(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, _tree(1))
+    ckpt.save_checkpoint(d, 2, _tree(2))
+    # simulate a crash mid-save of step 3: shard + manifest landed but
+    # the COMMIT mark never did
+    os.remove(os.path.join(ckpt.save_checkpoint(d, 3, _tree(3)), "COMMIT"))
+    assert ckpt.latest_step(d) == 2
+    got, step = ckpt.restore_checkpoint(d, _tree(0))
+    assert step == 2
+    _assert_trees_equal(got, _tree(2))
+
+
+def test_restore_skips_corrupt_shard_crc(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, _tree(1))
+    step_dir = ckpt.save_checkpoint(d, 2, _tree(2))
+    # bitrot in the newest shard: the stored crc no longer matches what
+    # the shard's bytes hash to
+    mpath = os.path.join(step_dir, "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["leaves"][0]["crc32"] ^= 0xDEAD
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    got, step = ckpt.restore_checkpoint(d, _tree(0))
+    # newest is COMMITted but corrupt -> restore falls back to step 1
+    assert step == 1
+    _assert_trees_equal(got, _tree(1))
+
+
+def test_restore_skips_corrupt_manifest_json(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, _tree(1))
+    step_dir = ckpt.save_checkpoint(d, 2, _tree(2))
+    with open(os.path.join(step_dir, "manifest.json"), "w") as f:
+        f.write("{ not json")
+    got, step = ckpt.restore_checkpoint(d, _tree(0))
+    assert step == 1
+
+
+def test_exotic_dtype_uint_view_roundtrip(tmp_path):
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    d = str(tmp_path)
+    rng = np.random.default_rng(0)
+    tree = {
+        "bf16": rng.standard_normal((3, 5)).astype(ml_dtypes.bfloat16),
+        "fp8": rng.standard_normal(7).astype(ml_dtypes.float8_e4m3fn),
+        "f32": rng.standard_normal(4).astype(np.float32),
+    }
+    ckpt.save_checkpoint(d, 1, tree)
+    # on disk the exotic leaves are uint views, logical dtype recorded
+    step_dir = os.path.join(d, "step_00000001")
+    manifest = json.load(open(os.path.join(step_dir, "manifest.json")))
+    by_logical = {e["logical_dtype"]: e["dtype"] for e in manifest["leaves"]}
+    assert by_logical["bfloat16"] == "uint16"
+    assert by_logical["float8_e4m3fn"] == "uint8"
+    got, step = ckpt.restore_checkpoint(d, tree)
+    assert step == 1
+    for k in tree:
+        assert got[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(
+            np.asarray(got[k]).view(np.uint8),
+            np.asarray(tree[k]).view(np.uint8))
+
+
+def test_gc_keeps_newest_k(tmp_path):
+    d = str(tmp_path)
+    for step in range(1, 6):
+        ckpt.save_checkpoint(d, step, _tree(step), keep=2)
+    steps = sorted(ckpt._steps(d))
+    assert steps == [4, 5]

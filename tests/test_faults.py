@@ -1,0 +1,292 @@
+"""Chaos-hardened wire: deterministic fault injection, reliable
+delivery, crash recovery, degraded 2-of-3.
+
+Most tests run mode="local" (threads over in-process queues — fast and
+deterministic); `chaos`+`wire`-marked tests spawn real party processes
+over localhost TCP and exercise TCP reconnect + supervisor respawn.
+"""
+import hashlib
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import net
+from repro.mpc import comm, ops, sharing
+from repro.mpc.ring import RING64, x64_scope
+from repro.net import faults as fx
+from repro.net import transport as tp
+
+
+def _capture(proto):
+    with x64_scope():
+        x = sharing.share(jax.random.PRNGKey(0),
+                          jnp.arange(12.0).reshape(3, 4), RING64, proto)
+        tape = comm.WireTape(x.backend.n_wire_parties)
+        with comm.ledger_scope() as led, comm.wire_tape_scope(tape):
+            y = ops.mul(x, x, jax.random.PRNGKey(1))
+            y = ops.force(y, jax.random.PRNGKey(2))
+            sharing.reveal(y)
+    return led, tape
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: determinism + serialization
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic():
+    _, tape = _capture("3pc")
+    a = fx.FaultPlan.from_tape(123, tape)
+    b = fx.FaultPlan.from_tape(123, tape)
+    assert a == b                      # same (seed, tape) -> same plan
+    assert a.n_faults >= 4             # drops + spike + reset + crash
+    c = fx.FaultPlan.from_tape(124, tape)
+    assert c != a                      # the seed is load-bearing
+
+
+def test_fault_plan_json_roundtrip():
+    _, tape = _capture("2pc")
+    plan = fx.FaultPlan.from_tape(7, tape, slow_party=1, slow_s=0.01)
+    again = fx.FaultPlan.from_json(plan.to_json())
+    assert again == plan
+    # serialized placement is introspectable (--chaos-plan files)
+    raw = json.loads(plan.to_json())
+    assert raw["seed"] == 7 and "drops" in raw and "crash" in raw
+
+
+def test_fault_plan_without_crash():
+    _, tape = _capture("3pc")
+    plan = fx.FaultPlan.from_tape(123, tape)
+    assert plan.crash is not None
+    respawn_plan = plan.without_crash()
+    assert respawn_plan.crash is None
+    assert respawn_plan.drops == plan.drops    # link faults stay armed
+
+
+def test_injected_crash_skips_except_exception():
+    # protocol code wraps ops in `except Exception` — a scheduled death
+    # must not be survivable there
+    assert issubclass(fx.InjectedCrash, BaseException)
+    assert not issubclass(fx.InjectedCrash, Exception)
+
+
+def test_link_frames_population():
+    _, tape = _capture("2pc")
+    frames = tape.link_frames()
+    assert sum(frames.values()) == sum(len(f.msgs) for f in tape.flights)
+    assert all(src != dst for src, dst in frames)
+
+
+# ---------------------------------------------------------------------------
+# reliable delivery primitives (no processes, no sockets)
+# ---------------------------------------------------------------------------
+
+def test_reliable_dedups_duplicate_frames():
+    base = tp.LocalTransport(2)
+    rel = tp.ReliableTransport(base)
+    rel.send(0, 1, b"first")                      # seq 0
+    base.send(0, 1, b"first", tp.DATA, seq=0)     # wire-level duplicate
+    rel.send(0, 1, b"second")                     # seq 1
+    assert rel.recv(1, 0, timeout=1.0) == b"first"
+    assert rel.recv(1, 0, timeout=1.0) == b"second"   # dup skipped
+    assert rel.dup_frames == 1
+
+
+def test_reliable_recovers_dropped_frame():
+    base = tp.LocalTransport(2)
+    chaos = fx.ChaosTransport(
+        base, fx.FaultPlan(seed=0, drops={(0, 1): (0,)}))
+    rel = tp.ReliableTransport(chaos, rto_s=0.01)
+    rel.send(0, 1, b"eaten")                      # dropped on the wire
+    rel.send(0, 1, b"later")
+    # single-threaded: the recv observes the gap and posts a resend
+    # request, which party 0's next transport touch services (in the
+    # runtime that touch happens from party 0's own thread)
+    with pytest.raises(tp.WireError):
+        rel.recv(1, 0, timeout=0.05)
+    rel._service_control(0)                       # sender honors request
+    assert rel.recv(1, 0, timeout=1.0) == b"eaten"
+    assert rel.recv(1, 0, timeout=1.0) == b"later"
+    assert chaos.dropped == 1 and rel.retries > 0
+    assert rel.resends_honored > 0
+
+
+def test_goodput_vs_retrans_channels():
+    base = tp.LocalTransport(2)
+    chaos = fx.ChaosTransport(
+        base, fx.FaultPlan(seed=0, drops={(0, 1): (1,)}))
+    rel = tp.ReliableTransport(chaos, rto_s=0.01)
+    payloads = [b"a" * 10, b"b" * 10, b"c" * 10]
+    for p in payloads:
+        rel.send(0, 1, p)
+    assert rel.recv(1, 0, timeout=1.0) == payloads[0]
+    with pytest.raises(tp.WireError):
+        rel.recv(1, 0, timeout=0.05)              # gap: frame 1 dropped
+    rel._service_control(0)
+    assert rel.recv(1, 0, timeout=1.0) == payloads[1]
+    assert rel.recv(1, 0, timeout=1.0) == payloads[2]
+    # goodput counted once per frame (drop included: priced at first
+    # transmission), recovery bytes on the separate RETRANS channel
+    assert base.total_data_bytes == 30
+    assert base.total_retrans_bytes > 0
+    assert rel.total_data_bytes == 30
+
+
+def test_local_purge_counts_lost_frames():
+    base = tp.LocalTransport(2)
+    base.send(0, 1, b"x" * 5, tp.DATA, seq=0)
+    base.send(0, 1, b"y" * 5, tp.DATA, seq=1)
+    assert base.purge(0, 1, tp.DATA) == 2
+    with pytest.raises(tp.WireError):
+        base.recv(1, 0, timeout=0.01)
+
+
+# ---------------------------------------------------------------------------
+# chaos replay: local mode (fast path, runs in tier-1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("proto", ["2pc", "3pc"])
+def test_chaos_local_replay_reconciles(proto):
+    led, tape = _capture(proto)
+    plan = fx.FaultPlan.from_tape(123, tape, crash=False)
+    assert plan.n_faults > 0
+    rep = net.PartyRuntime(tape, mode="local", fault_plan=plan).execute()
+    assert rep.bytes_match and rep.digests_ok
+    assert rep.wire_nbytes == led.nbytes       # goodput == ledger
+    assert rep.retries > 0
+    assert rep.retrans_bytes > 0
+    assert rep.faults_injected == plan.n_faults
+    assert rep.fault_plan == plan.to_json()
+
+
+def test_chaos_local_crash_respawn_resumes_from_cursor():
+    led, tape = _capture("3pc")
+    plan = fx.FaultPlan.from_tape(123, tape)
+    assert plan.crash is not None and plan.crash[1] >= 1   # mid-phase
+    rep = net.PartyRuntime(tape, mode="local", fault_plan=plan,
+                           recover=True).execute()
+    assert rep.bytes_match and rep.digests_ok
+    assert rep.respawns == 1
+    assert rep.recovery_time_s > 0
+    assert not rep.degraded
+
+
+def test_chaos_crash_without_recovery_policy_rejected():
+    _, tape = _capture("3pc")
+    plan = fx.FaultPlan.from_tape(123, tape)
+    with pytest.raises(ValueError):
+        net.PartyRuntime(tape, mode="local", fault_plan=plan)
+
+
+def test_degraded_two_of_three_completes():
+    led, tape = _capture("3pc")
+    plan = fx.FaultPlan.from_tape(7, tape, n_drops=0, n_spikes=0,
+                                  n_resets=0, crash_at_boundary=True)
+    assert plan.crash is not None and plan.crash[1] == 0
+    rep = net.PartyRuntime(tape, mode="local", fault_plan=plan,
+                           degraded=True).execute()
+    assert rep.degraded
+    assert rep.dead_parties == [plan.crash[0]]
+    assert rep.bytes_match and rep.digests_ok   # vs the FILTERED tape
+    assert rep.respawns == 0
+
+
+def test_filter_tape_drops_dead_party_messages():
+    _, tape = _capture("3pc")
+    filtered = net.filter_tape(tape, dead=2)
+    assert len(filtered.flights) == len(tape.flights)
+    for f in filtered.flights:
+        assert all(m.src != 2 and m.dst != 2 for m in f.msgs)
+        assert f.nbytes == sum(len(m.data) for m in f.msgs)
+
+
+def test_chaos_scores_bitwise_identical_to_fault_free():
+    led, tape = _capture("2pc")
+    clean = net.PartyRuntime(tape, mode="local").execute()
+    plan = fx.FaultPlan.from_tape(123, tape, crash=False)
+    chaotic = net.PartyRuntime(tape, mode="local", fault_plan=plan).execute()
+    # the digest chain is over delivered payloads: identical delivery
+    # under faults IS bitwise-identical replay
+    assert clean.digests_ok and chaotic.digests_ok
+    assert clean.wire_nbytes == chaotic.wire_nbytes == led.nbytes
+
+
+def test_expected_digest_chain_is_checkpointable():
+    _, tape = _capture("2pc")
+    want = net.expected_digests(tape, 2)
+    state = b""
+    for f in tape.flights:
+        for r in sorted({m.rnd for m in f.msgs} or {0}):
+            for m in f.msgs:
+                if m.rnd == r and m.dst == 0:
+                    state = hashlib.blake2b(state + m.data,
+                                            digest_size=16).digest()
+    assert want[0] == state.hex()
+
+
+# ---------------------------------------------------------------------------
+# socket wire: real processes, real TCP faults (marked)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@pytest.mark.wire
+def test_socket_wire_down_raises_immediately():
+    """Satellite gate: a dead link is LOUD. The peer closes, and both
+    send and recv raise WireDown promptly instead of blocking out their
+    timeout against a wire nobody is servicing."""
+    import threading
+    import time
+    ports = tp.free_ports(2)
+    out = {}
+
+    def party(p):
+        t = tp.SocketTransport(2, p, ports)
+        try:
+            t.send(p, 1 - p, b"hello")
+            t.recv(p, 1 - p, timeout=10.0)
+            if p == 1:
+                t.close()                 # dies without saying goodbye
+                out[p] = "closed"
+                return
+            deadline = time.monotonic() + 10.0
+            while t.link_down(1) is None and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert t.link_down(1) is not None
+            with pytest.raises(tp.WireDown):
+                t.send(0, 1, b"into the void")
+            t0 = time.monotonic()
+            with pytest.raises(tp.WireDown):
+                t.recv(0, 1, timeout=30.0)
+            assert time.monotonic() - t0 < 5.0    # loud, not a timeout
+            out[p] = "down-raised"
+        finally:
+            t.close()
+
+    ths = [threading.Thread(target=party, args=(p,)) for p in range(2)]
+    for th in ths:
+        th.start()
+    for th in ths:
+        th.join(timeout=30.0)
+    assert out.get(0) == "down-raised" and out.get(1) == "closed"
+
+
+@pytest.mark.chaos
+@pytest.mark.wire
+@pytest.mark.parametrize("proto", ["2pc", "3pc"])
+def test_socket_chaos_replay_recovers(proto):
+    """The headline gate: drops + a latency spike + a TCP reset + (3pc)
+    a party crash mid-phase, over real processes — replay completes,
+    goodput reconciles, digests match, retries observed."""
+    led, tape = _capture(proto)
+    plan = fx.FaultPlan.from_tape(123, tape)
+    rep = net.PartyRuntime(tape, mode="socket",
+                           profile=comm.PROFILES["pod_dcn"],
+                           timeout_s=60.0, fault_plan=plan,
+                           recover=True).execute()
+    assert rep.bytes_match and rep.digests_ok
+    assert rep.wire_nbytes == led.nbytes
+    assert rep.retries > 0
+    if plan.crash is not None:
+        assert rep.respawns >= 1
+        assert rep.recovery_time_s > 0

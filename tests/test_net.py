@@ -158,13 +158,16 @@ def test_plan_covers_every_message_once():
 def test_expected_digests_match_manual():
     _, tape = _capture("2pc")
     want = net.expected_digests(tape, 2)
-    h = hashlib.blake2b(digest_size=16)
+    # chained form: state = H(state || payload) — checkpointable, so a
+    # crashed party can resume the digest from its flight cursor
+    state = b""
     for f in tape.flights:
         for r in sorted({m.rnd for m in f.msgs} or {0}):
             for m in f.msgs:
                 if m.rnd == r and m.dst == 1:
-                    h.update(m.data)
-    assert want[1] == h.hexdigest()
+                    state = hashlib.blake2b(state + m.data,
+                                            digest_size=16).digest()
+    assert want[1] == state.hex()
 
 
 def test_fused_flight_is_single_merged_exchange():
