@@ -55,7 +55,7 @@ import jax  # noqa: E402
 from repro.configs.base import ArchConfig  # noqa: E402
 from repro.core import iosched  # noqa: E402
 from repro.core.proxy import ProxySpec  # noqa: E402
-from repro.engine import TraceEngine, abstract_shares  # noqa: E402
+from repro.engine import cached_probe, cached_probe_info  # noqa: E402
 from repro.mpc import costs  # noqa: E402
 from repro.mpc.comm import PROFILES, WAN, NetProfile  # noqa: E402
 from repro.mpc.ring import RING32, RING64  # noqa: E402
@@ -82,11 +82,11 @@ def probe_grid(cfg: ArchConfig, spec: ProxySpec, *, batch: int, seq: int,
     out = {}
     sched = iosched.SchedConfig()
     for rname, ring in RINGS.items():
-        pp_sh = abstract_shares(cfg, spec, seq, classes, ring, protocol)
         for mode, fused in (("eager", False), ("fused", True)):
             t0 = time.time()
-            led = TraceEngine(ring, protocol=protocol).probe(
-                pp_sh, cfg, spec, (batch, seq, cfg.d_model), fused=fused)
+            led = cached_probe(cfg, spec, batch=batch, seq=seq,
+                               classes=classes, ring=ring,
+                               protocol=protocol, fused=fused)
             out[f"{rname}_{mode}"] = {
                 "rounds": led.rounds,
                 "lat_rounds": led.lat_rounds,
@@ -212,12 +212,86 @@ def smoke_execute(protocol: str = "2pc") -> dict:
         out[rname] = {"eager_rounds": e.rounds, "fused_rounds": pb.rounds,
                       "round_reduction": red, "bitwise_identical": True,
                       "ledger_agrees": True, "mirror_exact": True,
+                      # measured device-side makespan of the fused phase
+                      # (per-wave dispatch/ready stamps, PhaseReport.device)
+                      "device_makespan_s": reports["fused"].device_makespan_s,
                       "offline_nbytes": pb.offline_nbytes,
                       "trunc_events": trunc_events,
                       "trunc_events_pr4": base_events,
                       "trunc_event_reduction": trunc_red,
                       "trunc_pair_nbytes": trunc_pair_bytes,
                       "trunc_pair_nbytes_pr4": base_bytes}
+    return out
+
+
+def mesh_smoke() -> dict:
+    """Execute the RING32 2pc smoke phase on a REAL device mesh
+    (forced host devices on CPU CI) and enforce the device-half gates:
+      * mesh="host": party axis -> "pod" devices, wave axis -> "data"
+        devices via NamedSharding device_put (GSPMD collectives at the
+        opens); mesh="shardmap": wave lanes split across the data axis
+        under jax.shard_map — BOTH must yield entropy scores bitwise
+        identical to the single-device run and ledger_agrees
+      * combine="interpret": the fused RING32 Beaver combines must
+        demonstrably run through kernels/ops.secure_matmul (kernel-path
+        dispatch counter > 0, ref-fallback counter == 0) instead of the
+        silent jnp reference
+      * device_makespan_s > 0 measured from the double-buffer loop's
+        per-wave dispatch/ready stamps
+    Geometry: 64 candidates / batch 8 / wave 4 -> 2 waves x 4 lanes, so
+    the lane count divides the data axis on an 8-device mesh (pod 2 x
+    data 4)."""
+    from benchmarks.common import tiny_exec_setup
+    from repro.core.executor import ExecConfig, WaveExecutor
+
+    seq, classes, pool_n, batch, wave = 8, 2, 64, 8, 4
+    cfg, spec, pp = tiny_exec_setup(0, seq=seq, n_classes=classes)
+    pool = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                             (pool_n, seq))
+    key = jax.random.key(7)
+    n_dev = len(jax.devices())
+    out = {"n_devices": n_dev}
+
+    ex0 = WaveExecutor(ExecConfig(wave=wave, batch=batch, ring=RING32))
+    ref = np.asarray(ex0.score_phase(key, pp, cfg, pool, spec).sh)
+    rep0 = ex0.reports[-1]
+    assert rep0.agrees(), "mesh: single-device reference ledger diverged"
+    out["none"] = {"device_makespan_s": rep0.device_makespan_s,
+                   "wall_s": rep0.wall_s}
+
+    for mode in ("host", "shardmap"):
+        ex = WaveExecutor(ExecConfig(wave=wave, batch=batch, ring=RING32,
+                                     mesh=mode, combine="interpret"))
+        ent = ex.score_phase(key, pp, cfg, pool, spec)
+        rep = ex.reports[-1]
+        dev = rep.device
+        assert np.array_equal(ref, np.asarray(ent.sh)), \
+            f"mesh={mode}: sharded execution changed entropy scores"
+        assert rep.agrees(), f"mesh={mode}: ledger_agrees failed"
+        assert dev.device_makespan_s > 0.0, \
+            f"mesh={mode}: no measured device makespan"
+        assert dev.combine_kernel > 0, \
+            f"mesh={mode}: fused RING32 combines never hit the " \
+            f"secure_matmul kernel (interpret mode)"
+        assert dev.combine_ref == 0, \
+            f"mesh={mode}: {dev.combine_ref} combines silently fell " \
+            f"back to the jnp reference"
+        if mode == "host" and n_dev >= 2 and n_dev % 2 == 0:
+            assert dev.mesh_axes.get("pod") == 2, \
+                f"host mesh did not map the 2pc party axis to a pod " \
+                f"axis: {dev.mesh_axes}"
+        out[mode] = {
+            "bitwise_identical": True,
+            "ledger_agrees": True,
+            "n_devices": dev.n_devices,
+            "mesh_axes": dev.mesh_axes,
+            "device_makespan_s": dev.device_makespan_s,
+            "wall_s": rep.wall_s,
+            "combine_kernel": dev.combine_kernel,
+            "combine_ref": dev.combine_ref,
+            "combine_padded": dev.combine_padded,
+            "devices_used": [w.devices_used for w in dev.waves],
+        }
     return out
 
 
@@ -374,15 +448,15 @@ def malicious_overhead(cfg: ArchConfig, spec: ProxySpec, *, batch: int,
     out = {}
     for mal, base in SEMI_HONEST_OF.items():
         for rname, ring in RINGS.items():
-            pp_m = abstract_shares(cfg, spec, seq, classes, ring, mal)
-            pp_b = abstract_shares(cfg, spec, seq, classes, ring, base)
-            shape = (batch, seq, cfg.d_model)
             leds = {}
-            for proto, pp_sh in ((mal, pp_m), (base, pp_b)):
+            for proto in (mal, base):
                 for mode, fused in (("eager", False), ("fused", True)):
-                    leds[proto, mode] = TraceEngine(
-                        ring, protocol=proto).probe(pp_sh, cfg, spec,
-                                                    shape, fused=fused)
+                    # memoized: the 2pc/3pc baselines here are the SAME
+                    # probes the probe_grid of a matching --protocol run
+                    # already paid for (~1 s each)
+                    leds[proto, mode] = cached_probe(
+                        cfg, spec, batch=batch, seq=seq, classes=classes,
+                        ring=ring, protocol=proto, fused=fused)
             te_m = _trunc_events(leds[mal, "eager"])
             te_b = _trunc_events(leds[base, "eager"])
             for mode in ("eager", "fused"):
@@ -422,6 +496,15 @@ def main(argv=None) -> int:
                          "--net; measures wire_makespan_s and reconciles "
                          "transport bytes against the ledger "
                          "(requires --smoke)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="execute the smoke phase on a real device mesh "
+                         "(party -> pod, wave -> data; forced host "
+                         "devices on CPU) in both host-GSPMD and "
+                         "shard_map placements, gating bitwise scores, "
+                         "ledger agreement, the secure_matmul kernel "
+                         "combine path, and a measured device_makespan_s "
+                         "(requires --smoke; run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--net", choices=sorted(PROFILES), default="wan",
                     help="NetProfile for BOTH the delay model (net_* "
                          "probe keys) and the socket pacer")
@@ -445,6 +528,14 @@ def main(argv=None) -> int:
     if args.chaos and args.wire == "none":
         ap.error("--chaos requires --wire local|socket (faults are "
                  "injected into a real transport)")
+    if args.mesh:
+        if not args.smoke:
+            ap.error("--mesh requires --smoke (only the smoke geometry "
+                     "is executed on the mesh)")
+        # only effective before backend init — the CI job sets XLA_FLAGS
+        # in the environment; this covers direct script invocations
+        from repro.parallel import sharding as _sharding
+        _sharding.force_host_devices(8)
 
     if args.smoke:
         cfg = ArchConfig(name="fusion-smoke", family="dense", n_layers=1,
@@ -479,6 +570,10 @@ def main(argv=None) -> int:
         result["smoke"] = smoke_execute("2pc")
         if args.protocol != "2pc":
             result[f"smoke_{args.protocol}"] = smoke_execute(args.protocol)
+        if args.mesh:
+            # device-mesh gates: wave/party axes physically sharded,
+            # kernel-path combines, measured device_makespan_s
+            result["mesh"] = mesh_smoke()
         if args.wire != "none":
             # real-wire gates: both party counts (2pc duplex pair, 3pc
             # ring) cross the transport; wire_makespan_s is measured
@@ -486,6 +581,8 @@ def main(argv=None) -> int:
         if args.chaos:
             result["chaos"] = chaos_smoke(args.wire, args.net,
                                           args.chaos_seed)
+    ci = cached_probe_info()
+    result["probe_cache"] = {"hits": ci.hits, "misses": ci.misses}
 
     for key, curve in result["malicious_overhead"].items():
         if curve["rounds_overhead"] < 0:
@@ -549,6 +646,15 @@ def main(argv=None) -> int:
                   f"wan_makespan={v['wan_makespan_s']:.1f}s")
         else:
             print(f"{k}: {v:.2%}")
+    if "mesh" in result and not args.csv:
+        mv = result["mesh"]
+        for mode in ("host", "shardmap"):
+            m = mv[mode]
+            print(f"mesh[{mode}] devices={m['n_devices']} "
+                  f"axes={m['mesh_axes']} "
+                  f"device_makespan={m['device_makespan_s']:.3f}s "
+                  f"kernel_combines={m['combine_kernel']} "
+                  f"padded={m['combine_padded']}")
     if "wire" in result and not args.csv:
         for proto in ("2pc", "3pc"):
             wv = result["wire"][proto]

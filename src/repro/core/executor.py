@@ -42,14 +42,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
 from repro.configs.base import ArchConfig
 from repro.core import iosched
 from repro.core import proxy as proxy_mod
 from repro.core.proxy import ProxySpec
-from repro.engine import MPCEngine, TraceEngine, proxy_entropy
+from repro.engine import MPCEngine, cached_probe, proxy_entropy
 from repro.engine.base import FULL_VARIANT
 from repro.mpc import comm, fusion, protocols
-from repro.mpc.comm import Ledger, NetProfile
+from repro.mpc.comm import DeviceReport, Ledger, NetProfile, WaveTiming
 from repro.mpc.ring import RING64, RingSpec, x64_scope
 from repro.mpc.sharing import AShare, share
 from repro.parallel import sharding
@@ -93,6 +96,22 @@ class ExecConfig:
     # degraded 2-of-3: a 3PC party that dies at a phase boundary is
     # dropped and the survivors finish the opens (replicated sharing)
     degraded: bool = False
+    # device mesh (parallel/sharding.py): "none" runs single-device;
+    # "host" builds a party x wave mesh over the local devices (forced
+    # host devices on CPU CI) and device_puts each wave's shares with
+    # party -> "pod", wave -> "data" — eager ops then run under GSPMD
+    # with cross-party collectives inserted at the opens; "shardmap"
+    # splits the wave lanes across the data axis under jax.shard_map
+    # (party replicated per device, one jit per wave so ledger records
+    # still fire every wave). Scores are bitwise identical in all three.
+    mesh: str = "none"
+    # Beaver post-open combine implementation for fused RING32 2PC
+    # matmuls (kernels/ops.secure_matmul): "auto" compiles the Pallas
+    # kernel on TPU and uses the jnp ref elsewhere; "interpret" runs the
+    # kernel body on CPU (CI's witness that the kernel path is live);
+    # "ref" forces the reference. Bitwise-identical int32 ring
+    # arithmetic in every mode.
+    combine: str = "auto"
 
     def sched(self) -> iosched.SchedConfig:
         return iosched.SchedConfig(coalesce=self.coalesce,
@@ -119,6 +138,16 @@ class PhaseReport:
     # ExecConfig.wire != "none": measured wire_makespan_s, reconciled
     # byte counts, payload digests
     wire: object | None = None
+    # device-side outcome (comm.DeviceReport): per-wave dispatch/ready
+    # timestamps from the double-buffer loop, mesh placement, and the
+    # secure_matmul kernel-vs-ref dispatch counters for the phase
+    device: DeviceReport | None = None
+
+    @property
+    def device_makespan_s(self) -> float:
+        """Measured device-side makespan (first dispatch -> last wave
+        ready) — the compute twin of the wire's wire_makespan_s."""
+        return self.device.device_makespan_s if self.device else 0.0
 
     def agrees(self) -> bool:
         """Realized flights == the makespan model's inputs, exactly."""
@@ -137,6 +166,14 @@ class WaveExecutor:
     def __init__(self, cfg: ExecConfig):
         if cfg.wire not in ("none", "local", "socket"):
             raise ValueError(f"unknown wire mode {cfg.wire!r}")
+        if cfg.mesh not in ("none", "host", "shardmap"):
+            raise ValueError(f"unknown mesh mode {cfg.mesh!r}")
+        if cfg.mesh == "shardmap" and cfg.wire != "none":
+            # wire capture forces the eager per-lane schedule; shard_map
+            # needs the coalesced wave — the host (GSPMD) mesh composes
+            # with wire capture, the shard_map one cannot
+            raise ValueError("mesh='shardmap' needs the coalesced "
+                             "schedule; use mesh='host' with --wire")
         if cfg.chaos_seed is not None and cfg.wire == "none":
             raise ValueError("chaos_seed needs a real wire "
                              "(wire='local' or 'socket')")
@@ -184,13 +221,33 @@ class WaveExecutor:
                                       proto)
         batch_keys = jax.random.split(jax.random.fold_in(key, 2), n_batches)
         # per-batch op-stream reference: the zero-FLOP eval_shape probe
-        # (fused exactly like the executed forwards below)
-        per_batch = TraceEngine(ring, variant, protocol=proto).probe(
-            pp_sh, arch_cfg, spec, (B, seq, arch_cfg.d_model), batch_keys[0],
-            fused=cfg.fuse)
+        # (fused exactly like the executed forwards below), memoized on
+        # the probe geometry — repeated phases of one schedule reuse it
+        per_batch = cached_probe(
+            arch_cfg, spec, batch=B, seq=seq,
+            classes=int(pp["cls_head"].shape[-1]), ring=ring,
+            protocol=proto, fused=cfg.fuse, variant=variant)
+
+        # device mesh: "host" realizes party -> pod / wave -> data via
+        # NamedSharding device_put (GSPMD inserts the cross-party
+        # collectives); "shardmap" splits wave lanes over the data axis
+        # with the party axis replicated per device (shard_map bodies
+        # index party components explicitly, without collectives)
+        rules = None
+        if cfg.mesh == "host":
+            rules = sharding.party_wave_rules(n_parties)
+        elif cfg.mesh == "shardmap":
+            rules = sharding.party_wave_rules(1, max_data=W)
+        dsize = sharding.data_axis_size(rules) if rules is not None else 1
+        dev = DeviceReport(
+            placement=cfg.mesh,
+            n_devices=(int(rules.mesh.devices.size) if rules is not None
+                       else 1),
+            mesh_axes=(dict(rules.mesh.shape) if rules is not None else {}))
 
         def fwd(sh, k):
-            eng = MPCEngine(ring=ring, protocol=proto).with_key(k)
+            eng = MPCEngine(ring=ring, protocol=proto,
+                            combine_impl=cfg.combine).with_key(k)
             with fusion.flight_scope(enabled=cfg.fuse):
                 return proxy_entropy(eng, pp_sh, arch_cfg,
                                      AShare(sh, ring, proto),
@@ -204,48 +261,95 @@ class WaveExecutor:
         tape = (comm.WireTape(protocols.get(proto).n_wire_parties)
                 if cfg.wire != "none" else None)
         scale = jnp.asarray(arch_cfg.d_model ** 0.5, jnp.float32)
+        from repro.kernels import ops as kops
+        smm0 = kops.smm_stats()
         results: list[jax.Array] = []
         pending: jax.Array | None = None
+        pending_wi = -1
+        rules_ctx = (sharding.rules_scope(rules) if rules is not None
+                     else contextlib.nullcontext())
         t0 = time.time()
-        for wi in range(n_waves):
-            b0, b1 = wi * W, min((wi + 1) * W, n_batches)
-            lanes = b1 - b0
-            wave_tok = jnp.asarray(tok[b0 * B:b1 * B]).reshape(lanes, B, seq)
-            x = jnp.take(pp["embed"], wave_tok, axis=0) * scale
-            x_sh = share(jax.random.fold_in(key, 100 + wi),
-                         x.astype(jnp.float32), ring, proto)
-            # party axis -> pod, wave axis -> data devices on a pod mesh
-            sh = sharding.shard(x_sh.sh, "pod", "wave", "batch", None, None)
-            keys = batch_keys[b0:b1]
-
-            with comm.ledger_scope() as wave_led, comm.wire_tape_scope(tape):
-                if cfg.coalesce:
-                    with comm.wave_scope(lanes):
-                        ent = jax.vmap(fwd, in_axes=(1, 0), out_axes=1)(
-                            sh, keys)
+        with rules_ctx:
+            if cfg.mesh == "host":
+                # weights resident once per phase: each party's share
+                # components on its pod slice, value dims replicated
+                pp_sh = sharding.place_party_tree(pp_sh)
+            for wi in range(n_waves):
+                b0, b1 = wi * W, min((wi + 1) * W, n_batches)
+                lanes = b1 - b0
+                wave_tok = jnp.asarray(
+                    tok[b0 * B:b1 * B]).reshape(lanes, B, seq)
+                x = jnp.take(pp["embed"], wave_tok, axis=0) * scale
+                x_sh = share(jax.random.fold_in(key, 100 + wi),
+                             x.astype(jnp.float32), ring, proto)
+                w_start = time.time() - t0
+                # party axis -> pod, wave axis -> data: a real device_put
+                # on a mesh; without one, the legacy no-op annotation
+                if rules is not None:
+                    sh = sharding.place(x_sh.sh, "pod", "wave", "batch",
+                                        None, None)
                 else:
-                    ent = jnp.stack([fwd(sh[:, li], keys[li])
-                                     for li in range(lanes)], axis=1)
-            phase_led.records.extend(wave_led.records)
-            if outer is not None:
-                outer.records.extend(wave_led.records)
+                    sh = sharding.shard(x_sh.sh, "pod", "wave", "batch",
+                                        None, None)
+                keys = batch_keys[b0:b1]
+                used = 1
 
-            ent = ent.reshape(n_parties, lanes * B)
-            # double buffer: block on wave i-1 only after dispatching i,
-            # so its wire time overlaps this wave's local compute
+                with comm.ledger_scope() as wave_led, \
+                        comm.wire_tape_scope(tape):
+                    if cfg.coalesce:
+                        vf = jax.vmap(fwd, in_axes=(1, 0), out_axes=1)
+                        if cfg.mesh == "shardmap" and dsize > 1 \
+                                and lanes % dsize == 0:
+                            # one fresh jit per wave: the re-trace is what
+                            # fires this wave's comm.record side effects
+                            # (a cached trace would silently skip them)
+                            in_sh = P(*([None, "data"]
+                                        + [None] * (sh.ndim - 2)))
+                            vf = jax.jit(shard_map(
+                                vf, mesh=rules.mesh,
+                                in_specs=(in_sh, P("data")),
+                                out_specs=P(None, "data", None),
+                                check_rep=False))
+                            used = dsize
+                        elif rules is not None:
+                            used = len(sh.sharding.device_set)
+                        with comm.wave_scope(lanes):
+                            ent = vf(sh, keys)
+                    else:
+                        if rules is not None:
+                            used = len(sh.sharding.device_set)
+                        ent = jnp.stack([fwd(sh[:, li], keys[li])
+                                         for li in range(lanes)], axis=1)
+                phase_led.records.extend(wave_led.records)
+                if outer is not None:
+                    outer.records.extend(wave_led.records)
+
+                ent = ent.reshape(n_parties, lanes * B)
+                dev.waves.append(WaveTiming(
+                    wave=wi, lanes=lanes, devices_used=used,
+                    start_s=w_start, dispatch_s=time.time() - t0))
+                # double buffer: block on wave i-1 only after dispatching
+                # i, so its wire time overlaps this wave's local compute
+                if pending is not None:
+                    jax.block_until_ready(pending)
+                    dev.waves[pending_wi].ready_s = time.time() - t0
+                    pending = None
+                if self.cfg.overlap:
+                    pending, pending_wi = ent, wi
+                else:
+                    jax.block_until_ready(ent)
+                    dev.waves[wi].ready_s = time.time() - t0
+                results.append(ent)
             if pending is not None:
                 jax.block_until_ready(pending)
-                pending = None
-            if self.cfg.overlap:
-                pending = ent
-            else:
-                jax.block_until_ready(ent)
-            results.append(ent)
-        if pending is not None:
-            jax.block_until_ready(pending)
+                dev.waves[pending_wi].ready_s = time.time() - t0
 
         out = jnp.concatenate(results, axis=1)[:, :n]
         wall_s = time.time() - t0
+        smm1 = kops.smm_stats()
+        dev.combine_kernel = smm1["kernel"] - smm0["kernel"]
+        dev.combine_ref = smm1["ref"] - smm0["ref"]
+        dev.combine_padded = smm1["padded"] - smm0["padded"]
         wire_rep = None
         if tape is not None:
             # replay the captured flight plan as real parties: reconcile
@@ -268,7 +372,8 @@ class WaveExecutor:
         self.reports.append(PhaseReport(
             ledger=phase_led, per_batch=per_batch, n_batches=n_batches,
             n_waves=n_waves, wall_s=wall_s, sched=self.cfg.sched(),
-            ring=ring, protocol=proto, fused=cfg.fuse, wire=wire_rep))
+            ring=ring, protocol=proto, fused=cfg.fuse, wire=wire_rep,
+            device=dev))
         return AShare(out, ring, proto)
 
 

@@ -44,8 +44,10 @@ def _phase_probe(n_layers: int, n_heads: int, mlp_dim: int, *,
                  batch: int, ring: RingSpec, fused: bool,
                  protocol: str = "2pc") -> Ledger:
     """Per-batch ledger of one phase proxy, probed from the executed
-    forward (weight-free: abstract_shares + eval_shape)."""
-    from repro.engine import TraceEngine, abstract_shares
+    forward (weight-free: abstract_shares + eval_shape). Delegates to
+    the engine-level `cached_probe` memo, so the search shares probe
+    results with bench_fusion and the executor (same geometry key)."""
+    from repro.engine import cached_probe
 
     dh = d_model // heads
     cfg = ArchConfig(name="sched-probe", family="dense",
@@ -53,9 +55,8 @@ def _phase_probe(n_layers: int, n_heads: int, mlp_dim: int, *,
                      n_heads=heads, n_kv_heads=heads, d_head=dh,
                      d_ff=0, vocab_size=2)
     spec = ProxySpec(n_layers, min(n_heads, heads), mlp_dim)
-    pp_sh = abstract_shares(cfg, spec, seq, classes, ring, protocol)
-    return TraceEngine(ring, protocol=protocol).probe(
-        pp_sh, cfg, spec, (batch, seq, d_model), fused=fused)
+    return cached_probe(cfg, spec, batch=batch, seq=seq, classes=classes,
+                        ring=ring, protocol=protocol, fused=fused)
 
 
 def schedule_delay(phases, n_pool: int, budget: int, *, d_model: int = 768,

@@ -14,8 +14,10 @@ from repro.engine.base import (FULL_VARIANT, VARIANTS, TensorEngine,
 from repro.engine.clear import ClearEngine
 from repro.engine.forward import proxy_entropy, proxy_logits
 from repro.engine.mpc import MPCEngine
-from repro.engine.trace import TraceEngine, abstract_shares
+from repro.engine.trace import (TraceEngine, abstract_shares, cached_probe,
+                                cached_probe_info)
 
 __all__ = ["FULL_VARIANT", "VARIANTS", "TensorEngine", "resolve_engine",
            "resolve_variant", "ClearEngine", "MPCEngine", "TraceEngine",
-           "abstract_shares", "proxy_entropy", "proxy_logits"]
+           "abstract_shares", "cached_probe", "cached_probe_info",
+           "proxy_entropy", "proxy_logits"]

@@ -12,6 +12,7 @@ run prices the 2PC dealer stream (offline channel included) or the
 3PC resharing stream.
 """
 import contextlib
+import functools
 
 import jax
 
@@ -77,6 +78,39 @@ class TraceEngine:
             "TraceEngine.probe(pp_sh, cfg, spec, batch_shape) instead of "
             "running a forward through it; use ClearEngine/MPCEngine to "
             "execute")
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_probe(cfg, spec, seq: int, classes: int, batch: int,
+                  ring: RingSpec, protocol: str, fused: bool,
+                  variant) -> Ledger:
+    pp_sh = abstract_shares(cfg, spec, seq, classes, ring, protocol)
+    return TraceEngine(ring, variant, protocol=protocol).probe(
+        pp_sh, cfg, spec, (batch, seq, cfg.d_model), fused=fused)
+
+
+def cached_probe(cfg, spec, *, batch: int, seq: int, classes: int,
+                 ring: RingSpec, protocol: str = "2pc",
+                 fused: bool = False, variant=None) -> Ledger:
+    """Per-batch probe ledger, memoized on the full probe geometry
+    (arch, proxy, batch/seq/classes, ring, protocol, fused, variant).
+
+    A probe costs ~1 s of abstract tracing and the same geometry is
+    re-probed per profile sweep / per executed phase — this cache turns
+    repeats into microseconds. `ArchConfig`/`ProxySpec`/`RingSpec` are
+    frozen (hashable) and the probe key is irrelevant under eval_shape,
+    so the memo is sound. Returns a fresh shallow copy so callers may
+    extend/mutate their ledger without corrupting the cache."""
+    led = _cached_probe(cfg, spec, seq, classes, batch, ring, protocol,
+                        fused, variant)
+    out = Ledger()
+    out.records.extend(led.records)
+    return out
+
+
+def cached_probe_info():
+    """lru cache stats for the shared probe memo (hits/misses)."""
+    return _cached_probe.cache_info()
 
 
 def abstract_shares(cfg, spec, seq_len: int, n_classes: int,

@@ -7,6 +7,8 @@ via the `impl` argument ("pallas" | "interpret" | "ref" | "auto").
 """
 from __future__ import annotations
 
+import logging
+
 import jax
 import jax.numpy as jnp
 
@@ -81,24 +83,81 @@ def _tileable(dim: int, blk: int) -> bool:
     return dim % min(blk, dim) == 0
 
 
-def secure_matmul(eps, dlt, a_sh, b_sh, c_sh, *, impl="auto", **kw):
+def _pad_target(dim: int, blk: int) -> int:
+    """Smallest tileable dim >= dim: a multiple of blk (dims <= blk are
+    already tileable at block min(blk, dim)). Bounded < 2x per dim."""
+    return dim if _tileable(dim, blk) else -(-dim // blk) * blk
+
+
+_log = logging.getLogger(__name__)
+_fallback_warned = False
+
+# kernel-vs-ref dispatch counters (trace-time): the executor snapshots
+# these around a phase to witness that fused RING32 combines actually
+# ran through the kernel, not the silent ref fallback
+_smm_stats = {"kernel": 0, "ref": 0, "padded": 0}
+
+
+def smm_stats() -> dict:
+    """Snapshot of the secure_matmul dispatch counters."""
+    return dict(_smm_stats)
+
+
+def reset_smm_stats() -> None:
+    for k in _smm_stats:
+        _smm_stats[k] = 0
+
+
+def _warn_fallback(shape) -> None:
+    global _fallback_warned
+    if not _fallback_warned:
+        _fallback_warned = True
+        _log.warning(
+            "secure_matmul: non-tileable shape %s fell back to the jnp "
+            "reference combine (pad=False). Results are bitwise "
+            "identical, but this shape is NOT running the kernel — "
+            "pass pad=True (default) to pad-to-tile instead. "
+            "(Further fallbacks are counted in smm_stats(), not logged.)",
+            tuple(shape))
+
+
+def secure_matmul(eps, dlt, a_sh, b_sh, c_sh, *, impl="auto", pad=True,
+                  **kw):
     """Beaver post-open combine, both parties fused (MPC hot path).
 
-    Non-tileable shapes fall back to the jnp reference — same wrapping
-    int32 ring arithmetic, so the result is bitwise-identical and
-    callers (MPCEngine.matmul on RING32) never need a shape guard.
+    Non-tileable shapes are zero-PADDED to the next block multiple by
+    default — exact in wrapping int32 ring arithmetic (zero rows/cols
+    contribute zero to every product term and the padded output region
+    is sliced away), so smoke geometries exercise the kernel instead of
+    silently dropping to the reference. `pad=False` restores the old
+    behaviour: fall back to the jnp reference, logged once per process
+    and counted in `smm_stats()` so silent-cap drops stay visible.
     """
     m = _mode(impl)
-    if m != "ref":
-        mm, kk = eps.shape
-        nn = dlt.shape[1]
-        blocks = (kw.get("bm", 128), kw.get("bn", 128), kw.get("bk", 128))
-        if not all(_tileable(d, blk)
-                   for d, blk in zip((mm, nn, kk), blocks)):
-            m = "ref"
+    mm, kk = eps.shape
+    nn = dlt.shape[1]
+    blocks = (kw.get("bm", 128), kw.get("bn", 128), kw.get("bk", 128))
+    dims = (mm, nn, kk)
+    tiled = all(_tileable(d, blk) for d, blk in zip(dims, blocks))
+    if m != "ref" and not tiled and not pad:
+        _warn_fallback((mm, kk, nn))
+        m = "ref"
     if m == "ref":
+        _smm_stats["ref"] += 1
         return jnp.stack([
             _ref.secure_matmul_combine(eps, dlt, a_sh[0], b_sh[0], c_sh[0], 0),
             _ref.secure_matmul_combine(eps, dlt, a_sh[1], b_sh[1], c_sh[1], 1),
         ])
-    return _smm(eps, dlt, a_sh, b_sh, c_sh, interpret=(m == "interpret"), **kw)
+    if not tiled:
+        pm, pn, pk = (_pad_target(d, blk) for d, blk in zip(dims, blocks))
+        eps = jnp.pad(eps, ((0, pm - mm), (0, pk - kk)))
+        dlt = jnp.pad(dlt, ((0, pk - kk), (0, pn - nn)))
+        a_sh = jnp.pad(a_sh, ((0, 0), (0, pm - mm), (0, pk - kk)))
+        b_sh = jnp.pad(b_sh, ((0, 0), (0, pk - kk), (0, pn - nn)))
+        c_sh = jnp.pad(c_sh, ((0, 0), (0, pm - mm), (0, pn - nn)))
+        _smm_stats["padded"] += 1
+    _smm_stats["kernel"] += 1
+    z = _smm(eps, dlt, a_sh, b_sh, c_sh, interpret=(m == "interpret"), **kw)
+    if not tiled:
+        z = z[:, :mm, :nn]
+    return z

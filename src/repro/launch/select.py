@@ -93,7 +93,8 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         fuse: bool = True, score_batch: int = 64, ring_bits: int = 64,
         protocol: str = "2pc", resume: bool = True,
         wire: str = "none", net: str = "wan",
-        chaos_seed: int | None = None, degraded: bool = False) -> dict:
+        chaos_seed: int | None = None, degraded: bool = False,
+        mesh: str = "none", combine: str = "auto") -> dict:
     task = make_classification_task(seed, n_pool=n_pool, n_test=400,
                                     seq=16, vocab=256, n_classes=4)
     cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
@@ -114,7 +115,8 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
         executor=ExecConfig(wave=wave, coalesce=coalesce, overlap=overlap,
                             fuse=fuse, protocol=protocol,
                             wire=wire, net=net,
-                            chaos_seed=chaos_seed, degraded=degraded))
+                            chaos_seed=chaos_seed, degraded=degraded,
+                            mesh=mesh, combine=combine))
     t0 = time.time()
     res = run_selection(key, params0, cfg, task.pool_tokens, sel,
                         n_classes=task.n_classes,
@@ -142,6 +144,11 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
                 "offline_nbytes": rep.ledger.offline_nbytes,
                 "makespan_wan_s": rep.makespan(WAN),
                 "wall_s": rep.wall_s,
+                # measured device-side makespan + mesh placement
+                # (comm.DeviceReport; per-wave stamps in "device")
+                "device_makespan_s": rep.device_makespan_s,
+                "device": rep.device.as_dict() if rep.device is not None
+                          else None,
                 # real-wire measurement when ExecConfig.wire != "none"
                 "wire": rep.wire.as_dict() if rep.wire is not None
                         else None})
@@ -223,6 +230,25 @@ def main() -> None:
                          "protocol (3pc/aby3trunc): place the crash at "
                          "a phase boundary and complete 2-of-3 with "
                          "the survivors instead of respawning")
+    ap.add_argument("--mesh", choices=["none", "host", "shardmap"],
+                    default="none",
+                    help="device mesh for the wave executor "
+                         "(parallel/sharding.py): 'host' device_puts "
+                         "each wave with party -> pod and wave -> data "
+                         "over the local devices (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on "
+                         "CPU); 'shardmap' splits wave lanes across the "
+                         "data axis under jax.shard_map. Each phase "
+                         "report gains a measured device_makespan_s "
+                         "(mode=mpc)")
+    ap.add_argument("--combine", choices=["auto", "pallas", "interpret",
+                                          "ref"],
+                    default="auto",
+                    help="Beaver post-open combine for fused RING32 2pc "
+                         "matmuls: the Pallas secure_matmul kernel "
+                         "('auto' compiles on TPU, 'interpret' runs the "
+                         "kernel body on CPU) or the jnp reference — "
+                         "bitwise identical either way")
     args = ap.parse_args()
     out = run(args.seed, args.pool, args.budget, args.mode,
               wave=args.wave, coalesce=not args.no_coalesce,
@@ -230,7 +256,8 @@ def main() -> None:
               score_batch=args.score_batch,
               ring_bits=args.ring, protocol=args.protocol,
               resume=not args.no_resume, wire=args.wire, net=args.net,
-              chaos_seed=args.chaos_seed, degraded=args.degraded)
+              chaos_seed=args.chaos_seed, degraded=args.degraded,
+              mesh=args.mesh, combine=args.combine)
     if out["executed"] is not None:
         ex = out["executed"]
         ph = ex["phases"]
@@ -242,6 +269,14 @@ def main() -> None:
             print(f"[select] executed {len(ph)} MPC phases, ledger_agrees="
                   f"{ex['ledger_agrees']}; per-phase makespan(WAN) "
                   + ", ".join(f"{p['makespan_wan_s']:.1f}s" for p in ph))
+        meshed = [p for p in ph if p.get("device")
+                  and p["device"]["placement"] != "none"]
+        if meshed:
+            d0 = meshed[0]["device"]
+            print(f"[select] device mesh ({d0['placement']}): "
+                  f"{d0['n_devices']} devices {d0['mesh_axes']}; measured "
+                  + ", ".join(f"{p['device_makespan_s']:.3f}s"
+                              for p in meshed))
         wired = [p["wire"] for p in ph if p.get("wire")]
         if wired:
             print("[select] real wire (" + wired[0]["mode"] + "): measured "

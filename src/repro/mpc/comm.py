@@ -137,6 +137,63 @@ class Ledger:
 # deterministic filler of exactly the modeled size — the wire carries
 # real frames either way, only the *content* is synthetic.
 
+@dataclasses.dataclass
+class WaveTiming:
+    """Device-side timestamps of one executed wave (seconds relative to
+    the phase's t0). `start_s` is when dispatch of the wave's forward
+    began, `dispatch_s` when the (async) dispatch returned, `ready_s`
+    when `block_until_ready` on the wave's result returned — under the
+    double-buffered schedule that is one wave later than its dispatch,
+    so ready - start includes the overlap the schedule is buying."""
+    wave: int
+    lanes: int
+    devices_used: int
+    start_s: float
+    dispatch_s: float
+    ready_s: float = 0.0
+
+
+@dataclasses.dataclass
+class DeviceReport:
+    """What one executed phase did on the DEVICE mesh — the compute-side
+    twin of net.WireReport. `placement` records how the wave/party axes
+    were realized: "none" (single device), "host" (NamedSharding
+    device_put: party -> pod, wave -> data, GSPMD collectives), or
+    "shardmap" (wave lanes split across the data axis under
+    jax.shard_map, party replicated per device). The combine_* counters
+    are the kernels/ops.secure_matmul dispatch deltas over the phase —
+    the witness that fused RING32 combines ran through the kernel
+    rather than the jnp ref fallback."""
+    placement: str
+    n_devices: int
+    mesh_axes: dict
+    waves: list = dataclasses.field(default_factory=list)
+    combine_kernel: int = 0
+    combine_ref: int = 0
+    combine_padded: int = 0
+
+    @property
+    def device_makespan_s(self) -> float:
+        """Measured device-side makespan: first dispatch start to last
+        wave ready, from the double-buffer loop's own timestamps."""
+        if not self.waves:
+            return 0.0
+        return (max(w.ready_s for w in self.waves)
+                - min(w.start_s for w in self.waves))
+
+    def as_dict(self) -> dict:
+        return {
+            "placement": self.placement,
+            "n_devices": self.n_devices,
+            "mesh_axes": dict(self.mesh_axes),
+            "device_makespan_s": self.device_makespan_s,
+            "combine_kernel": self.combine_kernel,
+            "combine_ref": self.combine_ref,
+            "combine_padded": self.combine_padded,
+            "waves": [dataclasses.asdict(w) for w in self.waves],
+        }
+
+
 @dataclasses.dataclass(frozen=True)
 class WireMsg:
     """One point-to-point message of a flight: src -> dst, in sub-round

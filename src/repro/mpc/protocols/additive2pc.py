@@ -225,12 +225,20 @@ class Additive2PC(BackendDefaults):
         eps_o, dlt_o = self._open_flight("beaver_matmul", (eps, dlt), ring,
                                          n=n, flops=2 * batch * m * k * n_out)
         # party-local: z_p = c_p + eps@b_p + a_p@dlt ; party0 adds eps@dlt
+        # Kernel eligibility: 2-D weights on the right. Batched left
+        # operands ((..., M, K) @ (K, N) — the forward's big projection
+        # matmuls) flatten their batch dims into rows: row-wise int32
+        # ring arithmetic is exact, so the flattened combine is bitwise
+        # identical to the per-batch inline one.
         if combine_impl is not None and ring.bits == 32 \
-                and x.sh.ndim == 3 and y.sh.ndim == 3:
+                and y.sh.ndim == 3 and x.sh.ndim >= 3:
             from repro.kernels import ops as kops
-            z = kops.secure_matmul(eps_o, dlt_o, a.sh, b.sh, c.sh,
+            eps2 = eps_o.reshape(-1, k)
+            z = kops.secure_matmul(eps2, dlt_o,
+                                   a.sh.reshape(2, -1, k), b.sh,
+                                   c.sh.reshape(2, -1, n_out),
                                    impl=combine_impl)
-            out = x.with_sh(z)
+            out = x.with_sh(z.reshape(c.sh.shape))
         else:
             eb = jnp.matmul(jnp.stack([eps_o, eps_o]), b.sh,
                             preferred_element_type=ring.dtype)

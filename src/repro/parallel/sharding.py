@@ -20,8 +20,10 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import threading
 
+import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -134,6 +136,83 @@ def fit_spec(rules: ShardRules, shape, logical_axes) -> P:
         else:
             out.append(None)
     return P(*out)
+
+
+def place(x, *logical):
+    """Physically place a concrete array on the ambient rules' mesh
+    (`jax.device_put`, not just an annotation). Outside a rules scope
+    this is a no-op, mirroring `shard`; non-dividing axes are dropped
+    the same way. This is what the wave executor calls on each wave's
+    input shares so the party axis lands on "pod" devices and the wave
+    axis spreads over "data" devices for real."""
+    r = current_rules()
+    if r is None:
+        return x
+    spec = fit_spec(r, x.shape, logical)
+    return jax.device_put(x, NamedSharding(r.mesh, spec))
+
+
+def place_party_tree(tree):
+    """device_put every array leaf of a share pytree with its leading
+    party axis on "pod" (remaining dims replicated). Used for the
+    proxy-weight shares: one placement per phase, after which every
+    eager op runs under GSPMD with the party components resident on
+    their pod's devices."""
+    r = current_rules()
+    if r is None:
+        return tree
+
+    def one(leaf):
+        spec = fit_spec(r, leaf.shape,
+                        ("pod",) + (None,) * (leaf.ndim - 1))
+        return jax.device_put(leaf, NamedSharding(r.mesh, spec))
+    return jax.tree_util.tree_map(one, tree)
+
+
+def force_host_devices(n: int) -> int:
+    """Ask XLA for `n` virtual host-platform devices (CPU CI's stand-in
+    for a pod). Only effective BEFORE the jax backend initializes —
+    set `XLA_FLAGS=--xla_force_host_platform_device_count=N` in the
+    environment (the CI smoke-mesh job does) to be safe; this helper
+    covers script entrypoints that run before any device query.
+    Returns the realized device count."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = f"{cur} {flag}".strip()
+    return len(jax.devices())
+
+
+def party_wave_rules(n_parties: int, *, devices=None,
+                     max_data: int | None = None) -> ShardRules:
+    """Mesh + rules for the MPC executor: party axis -> "pod", wave
+    axis -> "data".
+
+    pod = n_parties when the device count divides evenly (each party's
+    share components live on its own pod slice; GSPMD inserts the
+    cross-party collectives at the open/reconstruct sites), else pod
+    collapses to 1 and the party axis stays replicated. The remaining
+    devices form the "data" axis the wave dim shards over. `max_data`
+    caps the data axis (shard_map needs it to divide the lane count).
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = len(devices)
+    pod = n_parties if n % n_parties == 0 and n >= n_parties else 1
+    data = n // pod
+    if max_data is not None:
+        data = min(data, max_data)
+        while data > 1 and max_data % data != 0:
+            data -= 1
+    if pod > 1:
+        arr = np.array(devices[:pod * data]).reshape(pod, data)
+        mesh = Mesh(arr, ("pod", "data"))
+    else:
+        mesh = Mesh(np.array(devices[:data]), ("data",))
+    return ShardRules(mesh, mpc_pod_axis=True, fsdp=False)
+
+
+def data_axis_size(rules: ShardRules) -> int:
+    return axis_size(rules, rules.resolve("wave"))
 
 
 # ---------------------------------------------------------------------------
