@@ -56,7 +56,7 @@ from repro.configs.base import ArchConfig  # noqa: E402
 from repro.core import iosched  # noqa: E402
 from repro.core.proxy import ProxySpec  # noqa: E402
 from repro.engine import cached_probe, cached_probe_info  # noqa: E402
-from repro.mpc import costs  # noqa: E402
+from repro.mpc import costs, protocols  # noqa: E402
 from repro.mpc.comm import PROFILES, WAN, NetProfile  # noqa: E402
 from repro.mpc.ring import RING32, RING64  # noqa: E402
 
@@ -205,6 +205,20 @@ def smoke_execute(protocol: str = "2pc") -> dict:
             assert trunc_pair_bytes < base_bytes, \
                 f"trunc-pair bytes {trunc_pair_bytes} not below PR4 " \
                 f"baseline {base_bytes}"
+        if (ring is RING64 and trunc_events
+                and protocols.get(protocol).exact_trunc):
+            # the ring-parameterized headroom cap (scale.cap: 3f fits in
+            # 63 bits, so RING64 defers one more truncation than the
+            # RING32 2f cap) — the new RING64 floor, for the backends
+            # whose truncation is EXACT at any exponent (spdz2pc dealer
+            # pairs, aby3trunc trunc2); probabilistic local-trunc
+            # backends keep the 2f cap (ops._headroom_bits) and are not
+            # gated here. pr4_trunc_baseline stays FROZEN at the PR 4
+            # per-op stream, so the reduction key tracks the widening
+            # gap rather than moving the goalpost
+            assert trunc_events <= 16, \
+                f"{protocol}/ring64: {trunc_events} trunc events above " \
+                f"the 3f-headroom floor of 16"
         if protocol in DEALER_FREE:
             assert pb.offline_nbytes == 0, \
                 f"{protocol}/{rname}: folded dealer-free probe carries " \
@@ -221,6 +235,14 @@ def smoke_execute(protocol: str = "2pc") -> dict:
                       "trunc_event_reduction": trunc_red,
                       "trunc_pair_nbytes": trunc_pair_bytes,
                       "trunc_pair_nbytes_pr4": base_bytes}
+    # the ring-cap dividend in one number: how many MORE trunc events
+    # the 2f RING32 cap pays than the RING64 cap (1 on the exact-trunc
+    # backends spdz2pc/aby3trunc — the only ones allowed the 3f
+    # deferral; 0 on 3pc, whose probabilistic local trunc keeps 2f on
+    # both rings; 17 on semi-honest 2pc, whose RING64 truncation is
+    # recordless-local and never hits the wire at all)
+    out["ring64_trunc_event_delta"] = (out["ring32"]["trunc_events"]
+                                       - out["ring64"]["trunc_events"])
     return out
 
 
@@ -589,6 +611,16 @@ def main(argv=None) -> int:
             print(f"FAIL: {key}: hardened backend claims FEWER rounds "
                   f"than its semi-honest baseline", file=sys.stderr)
             return 1
+        if key.startswith("aby3trunc_ring64"):
+            # exact trunc2 unlocks the 3f headroom deferral the
+            # semi-honest 3pc baseline's probabilistic local trunc must
+            # forgo (ops._headroom_bits) — hardening strictly REDUCES
+            # truncation events here even as rounds stay above baseline
+            if curve["trunc_events"] >= curve["trunc_events_base"]:
+                print(f"FAIL: {key}: exact-trunc backend did not defer "
+                      f"past its semi-honest baseline's 2f cap",
+                      file=sys.stderr)
+                return 1
     if args.protocol == "spdz2pc":
         off = sum(v["offline_nbytes"] for v in result["probe"].values()
                   if isinstance(v, dict))
@@ -630,6 +662,19 @@ def main(argv=None) -> int:
             print(f"FAIL: fused RING32 probe reduces rounds by only "
                   f"{r32:.2%}", file=sys.stderr)
             return 1
+    # merge-update: different CI jobs write different sections (--mesh
+    # adds "mesh", --wire adds "wire"/"chaos", --protocol its smoke_*);
+    # each run overwrites only the sections it recomputed, so the
+    # checked-in artifact accumulates every job's trajectory instead of
+    # the last job clobbering the others
+    merged = {}
+    try:
+        with open(args.out) as f:
+            merged = json.load(f)
+    except (OSError, ValueError):
+        pass
+    merged.update(result)
+    result = merged
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     for k, v in result["probe"].items():

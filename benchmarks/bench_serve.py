@@ -1,0 +1,210 @@
+#!/usr/bin/env python
+"""Appraisal-service benchmark — sustained appraisals/hour vs sequential.
+
+Enqueues N appraisal sessions (tiny target + synthetic classification
+task, the Stage-2 smoke geometry) into `repro.serve.AppraisalServer`
+and compares its modeled service makespan at a fixed WAN profile
+against the N-sequential baseline: the same phases priced as
+back-to-back `run_selection` calls (no cross-session overlap, every
+phase executed, each phase paying its own pipeline-fill). The service
+wins on two axes — fingerprint-identical phases are served from the
+cross-session cache (request coalescing makes a concurrently-executing
+twin wait rather than duplicate), and executed phases from different
+sessions overlap comm against compute in the §4.4 stream model.
+
+Every session is replayed standalone through `run_selection` and its
+raw per-phase score shares (`SelectionResult.phase_scores`) compared
+bitwise — the scheduler moves flights, never values.
+
+`--smoke` enforces the acceptance gates (the CI smoke-serve job):
+  * serve appraisals/hour STRICTLY above the N-sequential baseline
+  * dealer_stall_s == 0 (offline material fully pipelined behind the
+    sessions' clear-side work)
+  * cross-session cache hits > 0 on the repeated session
+  * every session's score shares bitwise identical to standalone
+  * every per-session ledger satisfies iosched.ledger_agrees
+
+Emits `BENCH_serve.json` — the service-throughput trajectory baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+import numpy as np  # noqa: E402
+
+
+def build_spec(sid: str, task_seed: int, *, n_pool: int, protocol: str,
+               ring, wave: int):
+    """One synthetic appraisal session + the context to replay it
+    standalone (the parity witness)."""
+    import jax
+
+    from repro.configs.paper_targets import TINY_TARGET
+    from repro.core import target as tgt
+    from repro.core.executor import ExecConfig
+    from repro.core.proxy import ProxySpec
+    from repro.core.selection import SelectionConfig
+    from repro.data.tasks import make_classification_task
+    from repro.engine import MPCEngine
+    from repro.serve import SessionSpec
+
+    task = make_classification_task(task_seed, n_pool=n_pool, n_test=32,
+                                    seq=8, vocab=64, n_classes=2)
+    cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
+    key = jax.random.key(task_seed)
+    params0 = tgt.init_classifier(key, cfg, task.n_classes)
+    sel = SelectionConfig(
+        phases=[ProxySpec(1, 1, 2, 0.5), ProxySpec(1, 2, 4, 1.0)],
+        budget_frac=0.25, boot_frac=0.1,
+        engine=MPCEngine(ring=ring, protocol=protocol),
+        exvivo_steps=4, invivo_steps=2, finetune_steps=2,
+        score_batch=16, checkpoint_dir=None,
+        executor=ExecConfig(wave=wave, ring=ring, protocol=protocol))
+    spec = SessionSpec(sid=sid, key=key, target_params=params0,
+                       arch_cfg=cfg, pool_tokens=task.pool_tokens,
+                       sel=sel, n_classes=task.n_classes,
+                       boot_labels_fn=lambda i: task.pool_labels[i])
+    ctx = dict(key=key, params0=params0, cfg=cfg, task=task, sel=sel,
+               seed=task_seed)
+    return spec, ctx
+
+
+def run_bench(*, n_sessions: int, n_pool: int, protocol: str,
+              ring_bits: int, net: str, seed: int, wave: int) -> dict:
+    from repro.core.selection import run_selection
+    from repro.mpc.ring import RING32, RING64
+    from repro.serve import AppraisalServer
+
+    ring = RING32 if ring_bits == 32 else RING64
+
+    # session 1 duplicates session 0's seed: the cross-session cache /
+    # request-coalescing target (hits > 0 is a smoke gate)
+    seeds = [seed if i == 1 and n_sessions > 1 else seed + i
+             for i in range(n_sessions)]
+    srv = AppraisalServer(dealer_seed=seed)
+    sessions, ctxs = [], []
+    for i, s in enumerate(seeds):
+        spec, ctx = build_spec(f"s{i}", s, n_pool=n_pool,
+                               protocol=protocol, ring=ring, wave=wave)
+        sessions.append(srv.submit(spec))
+        ctxs.append(ctx)
+    t0 = time.time()
+    rep = srv.run()
+    serve_wall_s = time.time() - t0
+    srv.close()
+
+    # ---- N-sequential baseline + bitwise parity -------------------------
+    # one standalone run_selection per UNIQUE seed; every session (cached
+    # or executed) must match its seed's standalone scores bit for bit
+    standalone: dict[int, object] = {}
+    seq_wall_s = 0.0
+    for ctx in ctxs:
+        if ctx["seed"] in standalone:
+            continue
+        task, sel = ctx["task"], ctx["sel"]
+        t0 = time.time()
+        standalone[ctx["seed"]] = run_selection(
+            ctx["key"], ctx["params0"], ctx["cfg"], task.pool_tokens,
+            dataclasses.replace(sel), n_classes=task.n_classes,
+            boot_labels_fn=lambda i: task.pool_labels[i])
+        seq_wall_s += time.time() - t0
+    parity = {}
+    for sess, ctx in zip(sessions, ctxs):
+        std = standalone[ctx["seed"]]
+        parity[sess.sid] = bool(
+            len(sess.result.phase_scores) == len(std.phase_scores)
+            and all(np.array_equal(a, b) for a, b in
+                    zip(sess.result.phase_scores, std.phase_scores))
+            and sess.result.appraisal_entropy == std.appraisal_entropy
+            and np.array_equal(sess.result.selected, std.selected))
+
+    t = rep["throughput"]
+    return {
+        "config": {"n_sessions": n_sessions, "n_pool": n_pool,
+                   "protocol": protocol, "ring": ring.name, "net": net,
+                   "wave": wave, "seed": seed, "session_seeds": seeds},
+        "throughput": t,
+        "cache": rep["cache"],
+        "dealer": rep["dealer"],
+        "probe_cache": rep["probe_cache"],
+        "ledger_agrees": rep["ledger_agrees"],
+        "parity": parity,
+        "wall": {"serve_s": serve_wall_s,
+                 "sequential_unique_s": seq_wall_s},
+        "sessions": rep["sessions"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny queue + acceptance gates (CI smoke-serve)")
+    ap.add_argument("--sessions", type=int, default=3,
+                    help="appraisal sessions to enqueue (session 1 "
+                         "repeats session 0's seed)")
+    ap.add_argument("--pool", type=int, default=96,
+                    help="candidate pool size per session")
+    ap.add_argument("--protocol",
+                    choices=["2pc", "3pc", "spdz2pc", "aby3trunc"],
+                    default="2pc", help="secret-sharing backend")
+    ap.add_argument("--ring", type=int, choices=[64, 32], default=64,
+                    help="MPC ring width")
+    ap.add_argument("--net", default="wan",
+                    help="NetProfile for the makespan model")
+    ap.add_argument("--wave", type=int, default=2,
+                    help="vmap lanes per flight")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    result = run_bench(n_sessions=args.sessions, n_pool=args.pool,
+                       protocol=args.protocol, ring_bits=args.ring,
+                       net=args.net, seed=args.seed, wave=args.wave)
+    t = result["throughput"]
+
+    if args.smoke:
+        gates = {
+            "throughput_above_sequential":
+                t["serve_appraisals_per_hour"]
+                > t["sequential_appraisals_per_hour"],
+            "dealer_stall_zero":
+                result["dealer"]["dealer_stall_s"] == 0.0,
+            "cache_hits_positive": result["cache"]["hits"] > 0,
+            "bitwise_parity": all(result["parity"].values()),
+            "ledger_agrees": bool(result["ledger_agrees"]),
+        }
+        result["gates"] = gates
+        for name, ok in gates.items():
+            print(f"  gate {name}: {'PASS' if ok else 'FAIL'}")
+        if not all(gates.values()):
+            with open(args.out, "w") as f:
+                json.dump(result, f, indent=1, default=float)
+            print(f"wrote {args.out} (FAILED)")
+            return 1
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1, default=float)
+    print(f"[bench_serve] {t['n_sessions']} sessions "
+          f"({t['n_phases_executed']}/{t['n_phases_total']} phases "
+          f"executed): {t['serve_appraisals_per_hour']:.2f}/h served vs "
+          f"{t['sequential_appraisals_per_hour']:.2f}/h sequential "
+          f"({t['speedup']:.2f}x) at {result['config']['net']}; "
+          f"cache {result['cache']['hits']} hits "
+          f"(+{result['cache']['coalesced_waits']} coalesced waits); "
+          f"dealer stall {result['dealer']['dealer_stall_s']:.3f}s; "
+          f"parity {all(result['parity'].values())}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

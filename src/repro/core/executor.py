@@ -159,6 +159,35 @@ class PhaseReport:
         return iosched.makespan(self.per_batch, self.n_batches, net,
                                 self.sched)
 
+    def as_dict(self, net: NetProfile | None = None) -> dict:
+        """The per-phase report dict every driver emits — launch/select's
+        SELECT_report and serve's SERVE_report share this one shape so
+        downstream tooling reads both. `makespan_wan_s` stays pinned to
+        the WAN profile as the trajectory key; pass `net` to price the
+        same stream under another comm.PROFILES entry (adds net_*)."""
+        d = {
+            "n_batches": self.n_batches, "n_waves": self.n_waves,
+            "protocol": self.protocol,
+            "lat_rounds": self.ledger.lat_rounds,
+            "bw_rounds": self.ledger.bw_rounds,
+            "nbytes": self.ledger.nbytes,
+            "offline_nbytes": self.ledger.offline_nbytes,
+            "makespan_wan_s": self.makespan(comm.PROFILES["wan"]),
+            "wall_s": self.wall_s,
+            # measured device-side makespan + mesh placement
+            # (comm.DeviceReport; per-wave stamps in "device")
+            "device_makespan_s": self.device_makespan_s,
+            "device": self.device.as_dict() if self.device is not None
+                      else None,
+            # real-wire measurement when ExecConfig.wire != "none"
+            "wire": self.wire.as_dict() if self.wire is not None
+                    else None,
+        }
+        if net is not None and net.name != "wan":
+            d["net"] = net.name
+            d["net_makespan_s"] = self.makespan(net)
+        return d
+
 
 class WaveExecutor:
     """Runs the Stage-2 multiphase sieve through the §4.4 schedule."""
@@ -195,186 +224,262 @@ class WaveExecutor:
         per-batch PRNG keys and share masks are assigned once, so the
         schedule changes only WHEN flights happen, never their contents.
         """
-        cfg = self.cfg
-        ctx = x64_scope() if cfg.ring.bits >= 64 else contextlib.nullcontext()
-        with ctx:
-            return self._score_phase(key, pp, arch_cfg, tokens, spec, variant)
+        run = PhaseRun(self.cfg, key, pp, arch_cfg, tokens, spec, variant)
+        for wi in range(run.n_waves):
+            run.dispatch(wi)
+        run.drain()
+        ent, rep = run.finish()
+        self.reports.append(rep)
+        return ent
 
-    def _score_phase(self, key, pp, arch_cfg: ArchConfig, tokens,
-                     spec: ProxySpec, variant=FULL_VARIANT) -> AShare:
-        cfg = self.cfg
-        ring = cfg.ring
+
+class PhaseRun:
+    """One sieve phase as a STEPWISE schedule — the §4.4 wave loop with
+    the loop inverted out.
+
+    `WaveExecutor.score_phase` drives it sequentially (dispatch every
+    wave, drain, finish) and is behavior- and record-order-identical to
+    the pre-refactor closed loop. The serve/ appraisal server drives
+    SEVERAL PhaseRuns at once: while one session's dispatched wave is in
+    flight (its `pending` not yet blocked), the server dispatches another
+    session's wave — extending the PR 1 intra-phase double buffer to
+    inter-session overlap without touching numerics (each run's keys,
+    masks, and record order are exactly the sequential ones).
+
+      dispatch(wi)  build + share wave wi, run the forward under the
+                    per-wave ledger/tape scopes, then block the PREVIOUS
+                    pending wave (double-buffer discipline)
+      drain()       block the tail pending wave
+      finish()      concat scores, reconcile + replay the wire tape,
+                    return (AShare, PhaseReport)
+    """
+
+    def __init__(self, cfg: ExecConfig, key, pp, arch_cfg: ArchConfig,
+                 tokens, spec: ProxySpec, variant=FULL_VARIANT,
+                 outer: Ledger | None = None):
+        self.cfg = cfg
+        self.ring = ring = cfg.ring
+        self.key = key
+        self.pp = pp
+        self.arch_cfg = arch_cfg
+        self.spec = spec
+        self.variant = variant
         B, W = cfg.batch, max(1, cfg.wave)
-        n = int(tokens.shape[0])
-        seq = int(tokens.shape[1])
-        n_batches = -(-n // B)
-        n_waves = -(-n_batches // W)
+        self.B, self.W = B, W
+        self.n = n = int(tokens.shape[0])
+        self.seq = seq = int(tokens.shape[1])
+        self.n_batches = n_batches = -(-n // B)
+        self.n_waves = -(-n_batches // W)
         tok = np.asarray(tokens)
         full = n_batches * B
         if full > n:                                   # wrap-pad the tail,
             reps = -(-full // n)                       # tiling if B > n
             tok = np.concatenate([tok] * reps)[:full]
+        self.tok = tok
 
-        proto = cfg.protocol
-        n_parties = protocols.get(proto).n_parties
-        pp_sh = proxy_mod.share_proxy(jax.random.fold_in(key, 1), pp, ring,
-                                      proto)
-        batch_keys = jax.random.split(jax.random.fold_in(key, 2), n_batches)
-        # per-batch op-stream reference: the zero-FLOP eval_shape probe
-        # (fused exactly like the executed forwards below), memoized on
-        # the probe geometry — repeated phases of one schedule reuse it
-        per_batch = cached_probe(
-            arch_cfg, spec, batch=B, seq=seq,
-            classes=int(pp["cls_head"].shape[-1]), ring=ring,
-            protocol=proto, fused=cfg.fuse, variant=variant)
+        self.proto = proto = cfg.protocol
+        self.n_parties = protocols.get(proto).n_parties
 
         # device mesh: "host" realizes party -> pod / wave -> data via
         # NamedSharding device_put (GSPMD inserts the cross-party
         # collectives); "shardmap" splits wave lanes over the data axis
         # with the party axis replicated per device (shard_map bodies
         # index party components explicitly, without collectives)
-        rules = None
+        self.rules = None
         if cfg.mesh == "host":
-            rules = sharding.party_wave_rules(n_parties)
+            self.rules = sharding.party_wave_rules(self.n_parties)
         elif cfg.mesh == "shardmap":
-            rules = sharding.party_wave_rules(1, max_data=W)
-        dsize = sharding.data_axis_size(rules) if rules is not None else 1
-        dev = DeviceReport(
+            self.rules = sharding.party_wave_rules(1, max_data=W)
+        rules = self.rules
+        self.dsize = sharding.data_axis_size(rules) if rules is not None else 1
+        self.dev = DeviceReport(
             placement=cfg.mesh,
             n_devices=(int(rules.mesh.devices.size) if rules is not None
                        else 1),
             mesh_axes=(dict(rules.mesh.shape) if rules is not None else {}))
 
-        def fwd(sh, k):
-            eng = MPCEngine(ring=ring, protocol=proto,
-                            combine_impl=cfg.combine).with_key(k)
-            with fusion.flight_scope(enabled=cfg.fuse):
-                return proxy_entropy(eng, pp_sh, arch_cfg,
-                                     AShare(sh, ring, proto),
-                                     spec, variant).sh
-
-        outer = comm.get_ledger()
-        phase_led = Ledger()
+        # record into the ambient ledger at CONSTRUCTION time — a server
+        # builds each run under its session's ledger scope (or passes
+        # `outer` explicitly) and the records land per-session even when
+        # dispatches interleave
+        self.outer = comm.get_ledger() if outer is None else outer
+        self.phase_led = Ledger()
         # --wire: capture every executed flight's actual messages; the
         # tape is sized by the WIRE party count (spdz2pc stacks 4 share
         # rows but runs 2 parties)
-        tape = (comm.WireTape(protocols.get(proto).n_wire_parties)
-                if cfg.wire != "none" else None)
-        scale = jnp.asarray(arch_cfg.d_model ** 0.5, jnp.float32)
+        self.tape = (comm.WireTape(protocols.get(proto).n_wire_parties)
+                     if cfg.wire != "none" else None)
+        self.scale = jnp.asarray(arch_cfg.d_model ** 0.5, jnp.float32)
         from repro.kernels import ops as kops
-        smm0 = kops.smm_stats()
-        results: list[jax.Array] = []
-        pending: jax.Array | None = None
-        pending_wi = -1
-        rules_ctx = (sharding.rules_scope(rules) if rules is not None
-                     else contextlib.nullcontext())
-        t0 = time.time()
-        with rules_ctx:
+        self._kops = kops
+        self.smm0 = kops.smm_stats()
+        self.results: list[jax.Array] = []
+        self.pending: jax.Array | None = None
+        self.pending_wi = -1
+
+        with self._ctx():
+            self.pp_sh = proxy_mod.share_proxy(
+                jax.random.fold_in(key, 1), pp, ring, proto)
+            self.batch_keys = jax.random.split(
+                jax.random.fold_in(key, 2), n_batches)
+            # per-batch op-stream reference: the zero-FLOP eval_shape
+            # probe (fused exactly like the executed forwards below),
+            # memoized on the probe geometry — repeated phases of one
+            # schedule reuse it
+            self.per_batch = cached_probe(
+                arch_cfg, spec, batch=B, seq=seq,
+                classes=int(pp["cls_head"].shape[-1]), ring=ring,
+                protocol=proto, fused=cfg.fuse, variant=variant)
             if cfg.mesh == "host":
                 # weights resident once per phase: each party's share
                 # components on its pod slice, value dims replicated
-                pp_sh = sharding.place_party_tree(pp_sh)
-            for wi in range(n_waves):
-                b0, b1 = wi * W, min((wi + 1) * W, n_batches)
-                lanes = b1 - b0
-                wave_tok = jnp.asarray(
-                    tok[b0 * B:b1 * B]).reshape(lanes, B, seq)
-                x = jnp.take(pp["embed"], wave_tok, axis=0) * scale
-                x_sh = share(jax.random.fold_in(key, 100 + wi),
-                             x.astype(jnp.float32), ring, proto)
-                w_start = time.time() - t0
-                # party axis -> pod, wave axis -> data: a real device_put
-                # on a mesh; without one, the legacy no-op annotation
-                if rules is not None:
-                    sh = sharding.place(x_sh.sh, "pod", "wave", "batch",
-                                        None, None)
+                self.pp_sh = sharding.place_party_tree(self.pp_sh)
+        self.t0 = time.time()
+
+    def _ctx(self):
+        """The ambient scopes every step runs under — re-entered per
+        call so interleaved runs (serve) never leak scopes into each
+        other: x64 for RING64 arithmetic, sharding rules for the mesh."""
+        stack = contextlib.ExitStack()
+        if self.cfg.ring.bits >= 64:
+            stack.enter_context(x64_scope())
+        if self.rules is not None:
+            stack.enter_context(sharding.rules_scope(self.rules))
+        return stack
+
+    def lanes(self, wi: int) -> int:
+        b0, b1 = wi * self.W, min((wi + 1) * self.W, self.n_batches)
+        return b1 - b0
+
+    def _fwd(self, sh, k):
+        cfg = self.cfg
+        eng = MPCEngine(ring=self.ring, protocol=self.proto,
+                        combine_impl=cfg.combine).with_key(k)
+        with fusion.flight_scope(enabled=cfg.fuse):
+            return proxy_entropy(eng, self.pp_sh, self.arch_cfg,
+                                 AShare(sh, self.ring, self.proto),
+                                 self.spec, self.variant).sh
+
+    def dispatch(self, wi: int) -> None:
+        """Run wave `wi` and leave it in flight (cfg.overlap) — blocking
+        the previously pending wave only after this one is dispatched,
+        so its wire time hides behind this wave's local compute."""
+        cfg = self.cfg
+        B, W, seq = self.B, self.W, self.seq
+        rules, dsize = self.rules, self.dsize
+        with self._ctx():
+            b0, b1 = wi * W, min((wi + 1) * W, self.n_batches)
+            lanes = b1 - b0
+            wave_tok = jnp.asarray(
+                self.tok[b0 * B:b1 * B]).reshape(lanes, B, seq)
+            x = jnp.take(self.pp["embed"], wave_tok, axis=0) * self.scale
+            x_sh = share(jax.random.fold_in(self.key, 100 + wi),
+                         x.astype(jnp.float32), self.ring, self.proto)
+            w_start = time.time() - self.t0
+            # party axis -> pod, wave axis -> data: a real device_put
+            # on a mesh; without one, the legacy no-op annotation
+            if rules is not None:
+                sh = sharding.place(x_sh.sh, "pod", "wave", "batch",
+                                    None, None)
+            else:
+                sh = sharding.shard(x_sh.sh, "pod", "wave", "batch",
+                                    None, None)
+            keys = self.batch_keys[b0:b1]
+            used = 1
+
+            with comm.ledger_scope() as wave_led, \
+                    comm.wire_tape_scope(self.tape):
+                if cfg.coalesce:
+                    vf = jax.vmap(self._fwd, in_axes=(1, 0), out_axes=1)
+                    if cfg.mesh == "shardmap" and dsize > 1 \
+                            and lanes % dsize == 0:
+                        # one fresh jit per wave: the re-trace is what
+                        # fires this wave's comm.record side effects
+                        # (a cached trace would silently skip them)
+                        in_sh = P(*([None, "data"]
+                                    + [None] * (sh.ndim - 2)))
+                        vf = jax.jit(shard_map(
+                            vf, mesh=rules.mesh,
+                            in_specs=(in_sh, P("data")),
+                            out_specs=P(None, "data", None),
+                            check_rep=False))
+                        used = dsize
+                    elif rules is not None:
+                        used = len(sh.sharding.device_set)
+                    with comm.wave_scope(lanes):
+                        ent = vf(sh, keys)
                 else:
-                    sh = sharding.shard(x_sh.sh, "pod", "wave", "batch",
-                                        None, None)
-                keys = batch_keys[b0:b1]
-                used = 1
+                    if rules is not None:
+                        used = len(sh.sharding.device_set)
+                    ent = jnp.stack([self._fwd(sh[:, li], keys[li])
+                                     for li in range(lanes)], axis=1)
+            self.phase_led.records.extend(wave_led.records)
+            if self.outer is not None:
+                self.outer.records.extend(wave_led.records)
 
-                with comm.ledger_scope() as wave_led, \
-                        comm.wire_tape_scope(tape):
-                    if cfg.coalesce:
-                        vf = jax.vmap(fwd, in_axes=(1, 0), out_axes=1)
-                        if cfg.mesh == "shardmap" and dsize > 1 \
-                                and lanes % dsize == 0:
-                            # one fresh jit per wave: the re-trace is what
-                            # fires this wave's comm.record side effects
-                            # (a cached trace would silently skip them)
-                            in_sh = P(*([None, "data"]
-                                        + [None] * (sh.ndim - 2)))
-                            vf = jax.jit(shard_map(
-                                vf, mesh=rules.mesh,
-                                in_specs=(in_sh, P("data")),
-                                out_specs=P(None, "data", None),
-                                check_rep=False))
-                            used = dsize
-                        elif rules is not None:
-                            used = len(sh.sharding.device_set)
-                        with comm.wave_scope(lanes):
-                            ent = vf(sh, keys)
-                    else:
-                        if rules is not None:
-                            used = len(sh.sharding.device_set)
-                        ent = jnp.stack([fwd(sh[:, li], keys[li])
-                                         for li in range(lanes)], axis=1)
-                phase_led.records.extend(wave_led.records)
-                if outer is not None:
-                    outer.records.extend(wave_led.records)
+            ent = ent.reshape(self.n_parties, lanes * B)
+            self.dev.waves.append(WaveTiming(
+                wave=wi, lanes=lanes, devices_used=used,
+                start_s=w_start, dispatch_s=time.time() - self.t0))
+            # double buffer: block on wave i-1 only after dispatching
+            # i, so its wire time overlaps this wave's local compute
+            if self.pending is not None:
+                jax.block_until_ready(self.pending)
+                self.dev.waves[self.pending_wi].ready_s = \
+                    time.time() - self.t0
+                self.pending = None
+            if cfg.overlap:
+                self.pending, self.pending_wi = ent, wi
+            else:
+                jax.block_until_ready(ent)
+                self.dev.waves[wi].ready_s = time.time() - self.t0
+            self.results.append(ent)
 
-                ent = ent.reshape(n_parties, lanes * B)
-                dev.waves.append(WaveTiming(
-                    wave=wi, lanes=lanes, devices_used=used,
-                    start_s=w_start, dispatch_s=time.time() - t0))
-                # double buffer: block on wave i-1 only after dispatching
-                # i, so its wire time overlaps this wave's local compute
-                if pending is not None:
-                    jax.block_until_ready(pending)
-                    dev.waves[pending_wi].ready_s = time.time() - t0
-                    pending = None
-                if self.cfg.overlap:
-                    pending, pending_wi = ent, wi
-                else:
-                    jax.block_until_ready(ent)
-                    dev.waves[wi].ready_s = time.time() - t0
-                results.append(ent)
-            if pending is not None:
-                jax.block_until_ready(pending)
-                dev.waves[pending_wi].ready_s = time.time() - t0
+    def drain(self) -> None:
+        """Block the tail pending wave (the loop's final barrier)."""
+        if self.pending is not None:
+            with self._ctx():
+                jax.block_until_ready(self.pending)
+            self.dev.waves[self.pending_wi].ready_s = time.time() - self.t0
+            self.pending = None
 
-        out = jnp.concatenate(results, axis=1)[:, :n]
-        wall_s = time.time() - t0
-        smm1 = kops.smm_stats()
-        dev.combine_kernel = smm1["kernel"] - smm0["kernel"]
-        dev.combine_ref = smm1["ref"] - smm0["ref"]
-        dev.combine_padded = smm1["padded"] - smm0["padded"]
+    def finish(self) -> tuple[AShare, PhaseReport]:
+        """Concatenate scores, reconcile/replay the wire tape, and seal
+        the PhaseReport. Call after every wave dispatched + drain()."""
+        cfg = self.cfg
+        with self._ctx():
+            out = jnp.concatenate(self.results, axis=1)[:, :self.n]
+        wall_s = time.time() - self.t0
+        smm1 = self._kops.smm_stats()
+        dev = self.dev
+        dev.combine_kernel = smm1["kernel"] - self.smm0["kernel"]
+        dev.combine_ref = smm1["ref"] - self.smm0["ref"]
+        dev.combine_padded = smm1["padded"] - self.smm0["padded"]
         wire_rep = None
-        if tape is not None:
+        if self.tape is not None:
             # replay the captured flight plan as real parties: reconcile
             # record-for-record against the phase ledger, then measure
             from repro import net
-            net.reconcile(phase_led, tape)
+            net.reconcile(self.phase_led, self.tape)
             fault_plan = None
             if cfg.chaos_seed is not None:
                 from repro.net import faults
                 fault_plan = faults.FaultPlan.from_tape(
-                    cfg.chaos_seed, tape,
+                    cfg.chaos_seed, self.tape,
                     crash_at_boundary=cfg.degraded)
             wire_rep = net.PartyRuntime(
-                tape, mode=cfg.wire,
+                self.tape, mode=cfg.wire,
                 profile=(comm.PROFILES[cfg.net] if cfg.wire == "socket"
                          else None),
                 fault_plan=fault_plan,
                 recover=fault_plan is not None and not cfg.degraded,
                 degraded=cfg.degraded).execute()
-        self.reports.append(PhaseReport(
-            ledger=phase_led, per_batch=per_batch, n_batches=n_batches,
-            n_waves=n_waves, wall_s=wall_s, sched=self.cfg.sched(),
-            ring=ring, protocol=proto, fused=cfg.fuse, wire=wire_rep,
-            device=dev))
-        return AShare(out, ring, proto)
+        rep = PhaseReport(
+            ledger=self.phase_led, per_batch=self.per_batch,
+            n_batches=self.n_batches, n_waves=self.n_waves, wall_s=wall_s,
+            sched=cfg.sched(), ring=self.ring, protocol=self.proto,
+            fused=cfg.fuse, wire=wire_rep, device=dev)
+        return AShare(out, self.ring, self.proto), rep
 
 
 def run_variants(key, pp, arch_cfg: ArchConfig, tokens, spec: ProxySpec,

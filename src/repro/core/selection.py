@@ -88,6 +88,28 @@ class SelectionResult:
     appraisal_entropy: float
     exec_reports: list[PhaseReport] = dataclasses.field(default_factory=list)
     resumed_phases: int = 0           # phases restored from checkpoints
+    # raw per-phase score shares (np.asarray(ent_sh.sh), MPC mode) — the
+    # bitwise-parity witness bench_serve compares across drivers
+    phase_scores: list[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class PhaseRequest:
+    """One sieve phase's executable work order, yielded by
+    `selection_plan`: score `tokens` with proxy `pp` under `spec`, send
+    the entropy AShare (plus the executor's PhaseReports) back in. The
+    driver owns HOW it runs — run_selection builds one WaveExecutor per
+    request; serve/ feeds requests from many sessions through
+    interleaved PhaseRuns and a cross-session cache keyed on
+    `fingerprint` + the phase geometry."""
+    phase: int
+    key: jax.Array                    # the per-phase ks split
+    pp: dict                          # proxy params (model-owner side)
+    tokens: np.ndarray                # surviving candidates' tokens
+    spec: ProxySpec
+    keep: int                         # survivors after QuickSelect
+    batch: int                        # executor batch for this phase
+    fingerprint: str | None           # run fingerprint (cache/ckpt key)
 
 
 def two_phase_default(seq_len_heads: int = 12) -> list[ProxySpec]:
@@ -119,11 +141,21 @@ def _score_clear(engine, pp, cfg, tokens, spec,
     return np.concatenate(out)
 
 
-def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
-                  sel: SelectionConfig, *, n_classes: int,
-                  boot_labels_fn=None) -> SelectionResult:
-    """Full pipeline. `boot_labels_fn(idx) -> labels` models the clear
-    purchase of the bootstrap sample (labels delivered with the data)."""
+def selection_plan(key, target_params, cfg: ArchConfig, pool_tokens,
+                   sel: SelectionConfig, *, n_classes: int,
+                   boot_labels_fn=None):
+    """The full pipeline as a GENERATOR: stages 1/3 and every clear-side
+    step run inline; each MPC scoring phase is yielded as a
+    `PhaseRequest` and the driver sends `(ent_sh, reports)` back.
+
+    `run_selection` drives one plan sequentially (one WaveExecutor per
+    request — identical to the pre-generator closed loop, same PRNG
+    split order). The serve/ AppraisalServer drives many plans at once,
+    interleaving their waves and substituting cached scores; because
+    QuickSelect, appraisal, and checkpointing all stay INSIDE the plan,
+    any driver that sends back the right scores gets bitwise-identical
+    survivors and appraisals for free. Returns (via StopIteration.value)
+    the SelectionResult."""
     n = pool_tokens.shape[0]
     budget = int(round(sel.budget_frac * n))
     n_boot = max(8, int(round(sel.boot_frac * n)))
@@ -138,17 +170,19 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
     fp = None
     resume_from = 0
     completed: dict[int, dict] = {}
-    if sel.checkpoint_dir:        # fp hashes target weights — skip if unused
+    if sel.checkpoint_dir or sel.mode == "mpc":
+        # fp hashes target weights + pool: the checkpoint guard, and the
+        # serve cross-session cache key (MPC plans always compute it)
         fp = _run_fingerprint(sel, n, budget, boot_idx, target_params,
                               pool_tokens)
-        if sel.resume:
-            for d in _load_phase_checkpoints(sel.checkpoint_dir):
-                if d.get("fp") == fp and d["phase"] < len(sel.phases):
-                    completed[d["phase"]] = d
-            # only a contiguous prefix is resumable (a later-phase file
-            # may survive while an earlier one was overwritten)
-            while resume_from in completed:
-                resume_from += 1
+    if sel.checkpoint_dir and sel.resume:
+        for d in _load_phase_checkpoints(sel.checkpoint_dir):
+            if d.get("fp") == fp and d["phase"] < len(sel.phases):
+                completed[d["phase"]] = d
+        # only a contiguous prefix is resumable (a later-phase file
+        # may survive while an earlier one was overwritten)
+        while resume_from in completed:
+            resume_from += 1
     resumed_appraisal = (completed[resume_from - 1].get("appraisal", 0.0)
                          if resume_from else 0.0)
 
@@ -179,6 +213,7 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
     keeps = _phase_keep(len(surviving), budget - n_boot, sel.phases)
     survivors_log = []
     exec_reports: list[PhaseReport] = []
+    phase_scores: list[np.ndarray] = []
     appraisal = resumed_appraisal
     for pi, (ph, pp, keep) in enumerate(zip(sel.phases, proxies, keeps)):
         key, ks = jax.random.split(key)
@@ -188,11 +223,11 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
             continue
         tok = pool_tokens[surviving]
         if sel.mode == "mpc":
-            execu = WaveExecutor(dataclasses.replace(
-                sel.executor, batch=min(sel.score_batch, len(surviving))))
-            ent_sh = execu.score_phase(ks, pp, cfg, tok, ph,
-                                       variant=sel.variant)
-            exec_reports.extend(execu.reports)
+            ent_sh, reports = yield PhaseRequest(
+                phase=pi, key=ks, pp=pp, tokens=tok, spec=ph, keep=keep,
+                batch=min(sel.score_batch, len(surviving)), fingerprint=fp)
+            exec_reports.extend(reports)
+            phase_scores.append(np.asarray(ent_sh.sh))
             with x64_scope():      # quickselect compares int64 shares
                 # fused runs issue per-wave comparison batches and let
                 # the flight batcher fuse them into one flight/partition
@@ -215,7 +250,31 @@ def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
 
     selected = np.sort(np.concatenate([boot_idx, surviving]))
     return SelectionResult(selected, boot_idx, survivors_log, appraisal,
-                           exec_reports, resumed_phases=resume_from)
+                           exec_reports, resumed_phases=resume_from,
+                           phase_scores=phase_scores)
+
+
+def run_selection(key, target_params, cfg: ArchConfig, pool_tokens,
+                  sel: SelectionConfig, *, n_classes: int,
+                  boot_labels_fn=None) -> SelectionResult:
+    """Full pipeline. `boot_labels_fn(idx) -> labels` models the clear
+    purchase of the bootstrap sample (labels delivered with the data).
+
+    The sequential driver over `selection_plan`: one fresh WaveExecutor
+    per yielded phase — exactly the pre-generator control flow."""
+    plan = selection_plan(key, target_params, cfg, pool_tokens, sel,
+                          n_classes=n_classes, boot_labels_fn=boot_labels_fn)
+    sent = None
+    try:
+        while True:
+            req = plan.send(sent)
+            execu = WaveExecutor(dataclasses.replace(sel.executor,
+                                                     batch=req.batch))
+            ent_sh = execu.score_phase(req.key, req.pp, cfg, req.tokens,
+                                       req.spec, variant=sel.variant)
+            sent = (ent_sh, execu.reports)
+    except StopIteration as done:
+        return done.value
 
 
 def _run_fingerprint(sel: SelectionConfig, n_pool: int, budget: int,

@@ -135,23 +135,9 @@ def run(seed: int = 0, n_pool: int = 800, budget: float = 0.2,
                     "resumed_phases": res.resumed_phases}
         for rep in res.exec_reports:
             executed["ledger_agrees"] &= rep.agrees()
-            executed["phases"].append({
-                "n_batches": rep.n_batches, "n_waves": rep.n_waves,
-                "protocol": rep.protocol,
-                "lat_rounds": rep.ledger.lat_rounds,
-                "bw_rounds": rep.ledger.bw_rounds,
-                "nbytes": rep.ledger.nbytes,
-                "offline_nbytes": rep.ledger.offline_nbytes,
-                "makespan_wan_s": rep.makespan(WAN),
-                "wall_s": rep.wall_s,
-                # measured device-side makespan + mesh placement
-                # (comm.DeviceReport; per-wave stamps in "device")
-                "device_makespan_s": rep.device_makespan_s,
-                "device": rep.device.as_dict() if rep.device is not None
-                          else None,
-                # real-wire measurement when ExecConfig.wire != "none"
-                "wire": rep.wire.as_dict() if rep.wire is not None
-                        else None})
+            # the shared per-phase dict shape (PhaseReport.as_dict) —
+            # SERVE_report.json emits the identical keys
+            executed["phases"].append(rep.as_dict())
 
     def finetune_and_eval(idx, tag):
         p, _ = tgt.finetune(jax.random.fold_in(key, 7), params0, cfg,

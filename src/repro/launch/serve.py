@@ -1,10 +1,19 @@
-"""Serving driver: batched prefill + decode with a continuous queue.
+"""Serving driver: batched prefill + decode, plus the appraisal service.
 
 Smoke-scale on CPU (examples/serve_demo.py); same code shape as the pod
-deployment. Structure: requests arrive with prompts, are batched to the
-configured slot count, prefilled once, then decoded step-locked; finished
-sequences free their slot for the next queued request (continuous
-batching at slot granularity).
+deployment. Two serving modes share this driver:
+
+  token decoding (default)   requests arrive with prompts, are batched
+      to the configured slot count, prefilled once, then decoded
+      step-locked; finished sequences free their slot for the next
+      queued request (continuous batching at slot granularity).
+  --appraise                 requests are (data-owner, model-owner)
+      APPRAISAL sessions: the repro.serve.AppraisalServer decomposes
+      each into its multiphase MPC schedule, continuously batches waves
+      across sessions, pipelines the offline dealer, and serves
+      fingerprint-identical phases from the cross-session cache. Writes
+      SERVE_report.json whose per-phase dicts are PhaseReport.as_dict —
+      the exact shape of SELECT_report's `executed` block.
 """
 from __future__ import annotations
 
@@ -87,6 +96,58 @@ class Server:
                 "outputs": {r.rid: r.out for r in done}}
 
 
+def appraise(n_sessions: int = 3, n_pool: int = 96, protocol: str = "2pc",
+             ring_bits: int = 64, seed: int = 0, repeat_first: bool = True,
+             out_path: str | None = "SERVE_report.json") -> dict:
+    """Run an appraisal-service queue and emit SERVE_report.json.
+
+    Builds `n_sessions` synthetic appraisal sessions (tiny target +
+    synthetic task, the Stage-2 smoke geometry); with `repeat_first` the
+    second session duplicates the first — the cross-session cache serves
+    its phases without re-execution (hits > 0 is a CI gate)."""
+    from repro.configs.paper_targets import TINY_TARGET
+    from repro.core import target as tgt
+    from repro.core.executor import ExecConfig
+    from repro.core.proxy import ProxySpec
+    from repro.core.selection import SelectionConfig
+    from repro.data.tasks import make_classification_task
+    from repro.engine import MPCEngine
+    from repro.mpc.ring import RING32, RING64
+    from repro.serve import AppraisalServer, SessionSpec
+
+    ring = RING32 if ring_bits == 32 else RING64
+
+    def spec(sid: str, task_seed: int) -> SessionSpec:
+        task = make_classification_task(task_seed, n_pool=n_pool, n_test=32,
+                                        seq=8, vocab=64, n_classes=2)
+        cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
+        key = jax.random.key(task_seed)
+        params0 = tgt.init_classifier(key, cfg, task.n_classes)
+        sel = SelectionConfig(
+            phases=[ProxySpec(1, 1, 2, 0.5), ProxySpec(1, 2, 4, 1.0)],
+            budget_frac=0.25, boot_frac=0.1,
+            engine=MPCEngine(ring=ring, protocol=protocol),
+            exvivo_steps=4, invivo_steps=2, finetune_steps=2,
+            score_batch=16, checkpoint_dir=None,
+            executor=ExecConfig(wave=2, ring=ring, protocol=protocol))
+        return SessionSpec(sid=sid, key=key, target_params=params0,
+                           arch_cfg=cfg, pool_tokens=task.pool_tokens,
+                           sel=sel, n_classes=task.n_classes,
+                           boot_labels_fn=lambda i: task.pool_labels[i])
+
+    srv = AppraisalServer(dealer_seed=seed)
+    for i in range(n_sessions):
+        task_seed = seed if (repeat_first and i == 1) else seed + i
+        srv.submit(spec(f"s{i}", task_seed))
+    report = srv.run()
+    srv.close()
+    if out_path:
+        import json
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1, default=float)
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2_0_5b", choices=ARCH_IDS)
@@ -104,7 +165,35 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full-size architecture (default is the smoke "
                          "geometry)")
+    ap.add_argument("--appraise", action="store_true",
+                    help="serve APPRAISAL sessions through the "
+                         "repro.serve AppraisalServer instead of token "
+                         "decoding; writes SERVE_report.json")
+    ap.add_argument("--sessions", type=int, default=3,
+                    help="appraisal sessions to enqueue (--appraise)")
+    ap.add_argument("--pool", type=int, default=96,
+                    help="candidate pool size per session (--appraise)")
+    ap.add_argument("--protocol",
+                    choices=["2pc", "3pc", "spdz2pc", "aby3trunc"],
+                    default="2pc", help="MPC backend (--appraise)")
+    ap.add_argument("--ring", type=int, choices=[64, 32], default=64,
+                    help="MPC ring width (--appraise)")
+    ap.add_argument("--out", default="SERVE_report.json",
+                    help="report path (--appraise)")
     args = ap.parse_args()
+    if args.appraise:
+        rep = appraise(n_sessions=args.sessions, n_pool=args.pool,
+                       protocol=args.protocol, ring_bits=args.ring,
+                       seed=args.seed, out_path=args.out)
+        t = rep["throughput"]
+        print(f"[serve] {t['n_sessions']} appraisals: "
+              f"{t['serve_appraisals_per_hour']:.2f}/h served vs "
+              f"{t['sequential_appraisals_per_hour']:.2f}/h sequential "
+              f"({t['speedup']:.2f}x); cache {rep['cache']['hits']} hits/"
+              f"{rep['cache']['misses']} misses; dealer stall "
+              f"{rep['dealer']['dealer_stall_s']:.3f}s; "
+              f"ledger_agrees={rep['ledger_agrees']} -> {args.out}")
+        return
     sc = ServeConfig(arch=args.arch, smoke=not args.full, slots=args.slots,
                      max_len=args.max_len, max_new=args.max_new,
                      seed=args.seed)

@@ -100,6 +100,18 @@ class Ledger:
     def serial_time(self, net: NetProfile, flops_per_s: float = 10e12) -> float:
         return net.time(self.rounds, self.nbytes, self.flops / flops_per_s)
 
+    def offline_by_op(self) -> dict[str, tuple[int, int]]:
+        """op -> (numel, nbytes) totals over the offline (dealer)
+        records — the per-op demand one phase batch puts on the dealer
+        channel. The serve/ dealer pool multiplies these by wave lanes
+        to size its pre-generation orders from a TraceEngine probe."""
+        out: dict[str, tuple[int, int]] = {}
+        for r in self.records:
+            if r.tag == "offline":
+                n, b = out.get(r.op, (0, 0))
+                out[r.op] = (n + r.numel, b + r.nbytes)
+        return out
+
     def by_op(self) -> dict[str, CostRecord]:
         out: dict[str, CostRecord] = {}
         for r in self.records:

@@ -417,9 +417,14 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
     element count (layout lineage). That is the cross-op deferred-
     truncation contract this mirror certifies record-for-record.
     """
-    from repro.mpc import fusion, scale as lattice
+    from repro.mpc import fusion, protocols, scale as lattice
 
     f = ring.frac_bits
+    # headroom-cap bits handed to the scale lattice: mirrors
+    # ops._headroom_bits — only exact-trunc backends (spdz2pc,
+    # aby3trunc) may defer to the ring-wide 3f cap; probabilistic
+    # local-trunc backends keep 2f (bits=None)
+    hbits = ring.bits if protocols.get(protocol).exact_trunc else None
     w, wk = heads, min(kv_heads, heads)
     t = bsz * seq
     events: list = []
@@ -448,13 +453,13 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
         k = lattice.pow2_exponent(c)
         if k is not None:             # free exponent fold
             return V(v.fb - k, n_out)
-        _, shift, out_fb = lattice.mul_public_plan(v.fb, c, f)
+        _, shift, out_fb = lattice.mul_public_plan(v.fb, c, f, hbits)
         if shift:
-            forced(v, name, f)
+            forced(v, name, v.fb - shift)
         return V(out_fb, n_out)
 
     def mul2(x: V, y: V, name: str, n: int) -> V:
-        px, py, out_fb = lattice.mul_plan(x.fb, y.fb, f)
+        px, py, out_fb = lattice.mul_plan(x.fb, y.fb, f, hbits)
         if px:
             forced(x, f"{name}.x", x.fb - px)
         if py and y is not x:
@@ -464,7 +469,7 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
 
     def mm(x: V, y: V, name: str, batch: int, m: int, kk: int,
            n: int) -> V:
-        px, py, out_fb = lattice.mul_plan(x.fb, y.fb, f)
+        px, py, out_fb = lattice.mul_plan(x.fb, y.fb, f, hbits)
         if px:
             forced(x, f"{name}.x", x.fb - px)
         if py and y is not x:
@@ -492,7 +497,7 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
         # centering sub: exact lift unless mu's pow2 fold topped the 2f
         # cap (layer >= 2, pow2 d) — then mu down-truncs KEYED, billed
         # at its pre-broadcast rows (lineage)
-        align_fb = lattice.align_target(x_fb, mu.fb, f)
+        align_fb = lattice.align_target(x_fb, mu.fb, f, hbits)
         if mu.fb > align_fb:
             forced(mu, "ln.mu.align", align_fb)
         xc = V(align_fb, t * d_model)
@@ -517,7 +522,7 @@ def proxy_exec_cost(bsz: int, seq: int, d_model: int, heads: int,
         probs = mlp(scores, bsz * w * seq, seq, mlp_hidden, seq, "mlp_sm")
         o = mm(probs, v_, "av", bsz * w, seq, seq, d_head)
         out = mm(o, W, "out", 1, t, w * d_head, d_model)
-        x_fb = lattice.align_target(x_fb, out.fb, f)   # residual add
+        x_fb = lattice.align_target(x_fb, out.fb, f, hbits)  # residual
     pooled = mul_pub(V(x_fb, bsz * d_model), 1.0 / seq, "pool.force",
                      bsz * d_model)
     logits = mm(pooled, W, "head", 1, bsz, d_model, classes)

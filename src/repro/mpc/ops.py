@@ -99,6 +99,17 @@ def force(x: Share, key: jax.Array | None = None, *,
     return out
 
 
+def _headroom_bits(x: Share) -> int | None:
+    """Ring bit width handed to the scale lattice's headroom cap — only
+    when the backend's truncation is EXACT at any shift
+    (`backend.exact_trunc`). Probabilistic local truncation
+    (additive2pc's RING64 shift, replicated3pc's regrouping) wraps a
+    share w.p. ~ encoded/2**bits per element; at a 3f exponent that is
+    2**f times the validated 2f regime, so those backends keep the 2f
+    cap (`scale.cap(f, None)`)."""
+    return x.ring.bits if x.backend.exact_trunc else None
+
+
 def _aligned(xs: list[Share], key: jax.Array | None = None) -> list[Share]:
     """Bring operands to a common exponent for add/sub/concat: lift the
     lower ones (exact, free); trunc down only in the above-cap case
@@ -113,7 +124,7 @@ def _aligned(xs: list[Share], key: jax.Array | None = None) -> list[Share]:
     f = xs[0].ring.frac_bits
     t = xs[0].fb
     for x in xs[1:]:
-        t = scale.align_target(t, x.fb, f)
+        t = scale.align_target(t, x.fb, f, _headroom_bits(xs[0]))
     out = []
     for i, x in enumerate(xs):
         if x.fb != t:
@@ -164,9 +175,10 @@ def mul_public(x: Share, v, *, key: jax.Array | None = None) -> Share:
     if k is not None:
         sh = -x.sh if float(v) < 0 else x.sh
         return x.with_scale(sh, x.fb - k)
-    _, shift, out_fb = scale.mul_public_plan(x.fb, v, x.ring.frac_bits)
+    _, shift, out_fb = scale.mul_public_plan(x.fb, v, x.ring.frac_bits,
+                                             _headroom_bits(x))
     if shift:
-        x = force(x, key)
+        x = force(x, key, to=x.fb - shift)
     enc = x.ring.encode(jnp.asarray(v))
     return x.with_scale(x.sh * enc, out_fb)
 
@@ -180,8 +192,10 @@ def matmul_public(x: Share, w, *, key: jax.Array | None = None,
                   w_encoded: jax.Array | None = None) -> Share:
     """x @ w with public (already known to all parties) w; emits at
     fb+f like `mul_public` — consumers force."""
-    if x.excess > 0:
-        x = force(x, key)
+    px, _, _ = scale.mul_plan(x.fb, x.ring.frac_bits, x.ring.frac_bits,
+                              _headroom_bits(x))
+    if px:
+        x = force(x, key, to=x.fb - px)
     enc = w_encoded if w_encoded is not None else x.ring.encode(jnp.asarray(w))
     z = jnp.matmul(x.sh, enc, preferred_element_type=x.ring.dtype)
     return x.with_scale(z, x.fb + x.ring.frac_bits)
@@ -235,9 +249,12 @@ def trunc(x: Share, *, key: jax.Array | None = None,
 
 
 def _forced_operands(x: Share, y: Share, key: jax.Array):
-    """Apply scale.mul_plan: trunc inputs only as far as the 2f headroom
-    cap requires. A squared operand (x is y) forces once and reuses."""
-    px, py, out_fb = scale.mul_plan(x.fb, y.fb, x.ring.frac_bits)
+    """Apply scale.mul_plan: trunc inputs only as far as the ring's
+    headroom cap requires (2f; 3f on RING64 exact-trunc backends). A
+    squared operand
+    (x is y) forces once and reuses."""
+    px, py, out_fb = scale.mul_plan(x.fb, y.fb, x.ring.frac_bits,
+                                    _headroom_bits(x))
     if x is y:
         if px:
             x = y = force(x, jax.random.fold_in(key, 3), to=x.fb - px)

@@ -45,6 +45,10 @@ from repro.mpc.protocols.replicated3pc import Replicated3PC
 
 class ABY3Trunc(Replicated3PC):
     name = "aby3trunc"
+    # trunc2 is exact at any shift/exponent, so the scale lattice may
+    # defer up to the ring-wide 3f headroom cap (the keyless boundary
+    # fallback is never on the executed forward path)
+    exact_trunc = True
 
     def trunc(self, x, key: jax.Array | None, *, shift: int | None = None):
         """Two-phase exact truncation (see module docstring). One

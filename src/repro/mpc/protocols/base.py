@@ -42,6 +42,15 @@ class BackendDefaults:
 
     n_wire_parties = 2
 
+    # True when `trunc(shift=)` is EXACT at any shift and any carried
+    # exponent (dealer pair / trunc2 subprotocol). Probabilistic local
+    # truncation (additive2pc's RING64 shift, replicated3pc's
+    # regrouping) wraps a share with probability ~ encoded/2**bits per
+    # element — tolerable in the validated 2f regime, 2**f times worse
+    # at a 3f exponent — so only exact-trunc backends may defer under
+    # the ring-wide 3f headroom cap (ops._headroom_bits).
+    exact_trunc = False
+
     def reconstruct(self, sh: jax.Array) -> jax.Array:
         out = sh[0]
         for i in range(1, sh.shape[0]):
@@ -59,6 +68,26 @@ class BackendDefaults:
         also correct for spdz2pc, whose partial opens send value rows
         only)."""
         return [(0, 1, sh[0]), (1, 0, sh[1])]
+
+    def dealer_material(self, rng, op: str, ring: RingSpec, elems: int):
+        """Synthesize `elems` ring elements of dealer (offline-channel)
+        material for offline op `op` — the bytes a crypto provider
+        streams ahead of the phase. Every offline record (Beaver/
+        sacrifice triples, truncation pairs, MAC keys) already counts
+        its TOTAL element footprint in `numel`, so one uniform draw of
+        that many ring elements is shape-correct for all of them. The
+        serve/ dealer pool pre-generates these on a worker thread;
+        dealer-free schemes (replicated 3pc) never place an order.
+
+        `rng` is a numpy Generator — pool material is pre-staged bytes,
+        deliberately OUTSIDE the execution's jax PRNG stream (online
+        values stay key-derived, so scores are driver-invariant)."""
+        if elems <= 0:
+            return None
+        udt = {32: "uint32", 64: "uint64"}[ring.bits]
+        buf = rng.integers(0, (1 << ring.bits) - 1, size=int(elems),
+                           dtype=udt, endpoint=True)
+        return buf.view(f"int{ring.bits}")
 
 
 @runtime_checkable

@@ -230,6 +230,9 @@ class SPDZ2PC(BackendDefaults):
     # value + p0/p1 MAC, and partial opens exchange value rows only
     # (BackendDefaults.open_msgs already routes rows 0<->1)
     n_wire_parties = 2
+    # dealer MAC'd trunc pairs are exact at any shift/exponent, so the
+    # scale lattice may defer up to the ring-wide 3f headroom cap
+    exact_trunc = True
 
     # -- sharing --------------------------------------------------------
     def share_encoded(self, key: jax.Array, enc: jax.Array,

@@ -1,0 +1,183 @@
+"""Pipelined offline dealer — pre-generates correlated randomness.
+
+The additive-2pc and spdz2pc backends consume dealer material (Beaver
+triples, sacrifice triples, truncation pairs, MAC keys) whose bytes land
+on the ledger's OFFLINE channel: priced separately from the online wire
+precisely because a crypto provider can stream them AHEAD of the phase.
+Standalone runs leave that pipelining implicit; the appraisal server
+makes it real. At session admission the server sizes each phase's
+demand from its TraceEngine probe (`Ledger.offline_by_op` x the wave
+fan-out) and `stage()`s production orders; a worker thread then
+synthesizes the material (`ProtocolBackend.dealer_material`) into a
+bounded per-(op, ring) pool WHILE the session's clear-side proxy
+generation runs. Online waves `acquire()` their allocation just before
+dispatch — if the pool already holds it (the steady state), acquisition
+is instant; only an actual wait accrues `dealer_stall_s`, the report's
+headline pipelining metric (0 at smoke scale).
+
+Material is pool-plumbing, not execution input: online values stay
+key-derived from the session's jax PRNG stream, so scores are bitwise
+identical to standalone runs no matter how the dealer is scheduled.
+The pool holds pre-staged BYTES of the right shape — the offline
+channel realized — and `capacity_elems` bounds how far ahead the
+dealer may run per (op, ring) key.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.mpc import protocols
+from repro.mpc.ring import RingSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Order:
+    """One production order: `elems` ring elements of offline material
+    for `op` under `ring`, synthesized by `protocol`'s backend. The
+    shift dimension is implicit: the only truncation pairs a dealer
+    serves are the ring's canonical frac_bits shift."""
+    op: str
+    ring: RingSpec
+    protocol: str
+    elems: int
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.op, self.ring.name)
+
+
+def phase_orders(per_batch, n_batches: int, ring: RingSpec,
+                 protocol: str) -> list[Order]:
+    """Dealer orders for one phase: the probe's per-batch offline
+    footprint (`Ledger.offline_by_op`) times the batch fan-out."""
+    return [Order(op=op, ring=ring, protocol=protocol,
+                  elems=numel * n_batches)
+            for op, (numel, _) in sorted(per_batch.offline_by_op().items())
+            if numel > 0]
+
+
+class DealerPool:
+    """Bounded per-(op, ring) pool of pre-generated dealer material,
+    filled by a background worker thread, drained by online waves."""
+
+    def __init__(self, capacity_elems: int = 1 << 26, seed: int = 0,
+                 chunk_elems: int = 1 << 16):
+        self.capacity_elems = int(capacity_elems)
+        self.chunk_elems = int(chunk_elems)
+        self._rng = np.random.default_rng(seed)
+        self._cv = threading.Condition()
+        self._orders: deque[Order] = deque()
+        self._avail: dict[tuple, list[np.ndarray]] = {}
+        self._avail_elems: dict[tuple, int] = {}
+        self._stop = False
+        self.staged_elems = 0
+        self.produced_elems = 0
+        self.produced_nbytes = 0
+        self.consumed_elems = 0
+        self.dealer_stall_s = 0.0
+        self.stalls = 0
+        self._thread = threading.Thread(target=self._work, daemon=True,
+                                        name="dealer")
+        self._thread.start()
+
+    # ---- producer side --------------------------------------------------
+    def stage(self, orders: list[Order]) -> None:
+        """Enqueue production orders (admission-time pre-staging). The
+        pool bound applies per key: an order beyond `capacity_elems`
+        ahead of consumption is clipped and re-ordered on demand by the
+        acquire path (bounded memory beats a silent unbounded queue)."""
+        with self._cv:
+            for o in orders:
+                have = (self._avail_elems.get(o.key, 0)
+                        + sum(q.elems for q in self._orders
+                              if q.key == o.key))
+                room = max(0, self.capacity_elems - have)
+                clipped = dataclasses.replace(o, elems=min(o.elems, room))
+                if clipped.elems > 0:
+                    self._orders.append(clipped)
+                    self.staged_elems += clipped.elems
+            self._cv.notify_all()
+
+    def _work(self) -> None:
+        while True:
+            with self._cv:
+                while not self._orders and not self._stop:
+                    self._cv.wait()
+                if self._stop and not self._orders:
+                    return
+                order = self._orders.popleft()
+            backend = protocols.get(order.protocol)
+            left = order.elems
+            while left > 0:
+                n = min(left, self.chunk_elems)
+                buf = backend.dealer_material(self._rng, order.op,
+                                              order.ring, n)
+                left -= n
+                with self._cv:
+                    self._avail.setdefault(order.key, []).append(buf)
+                    self._avail_elems[order.key] = \
+                        self._avail_elems.get(order.key, 0) + n
+                    self.produced_elems += n
+                    self.produced_nbytes += buf.nbytes
+                    self._cv.notify_all()
+
+    # ---- consumer side --------------------------------------------------
+    def acquire(self, orders: list[Order], timeout_s: float = 60.0) -> None:
+        """Consume one wave's offline allocation. Instant when the pool
+        holds it; otherwise a top-up order covers the shortfall and the
+        wait — only the wait — lands in `dealer_stall_s`."""
+        for o in orders:
+            if o.elems <= 0:
+                continue
+            with self._cv:
+                if self._avail_elems.get(o.key, 0) < o.elems:
+                    # demand the pool bound clipped (or a mis-sized
+                    # probe missed): order the shortfall and stall
+                    short = o.elems - self._avail_elems.get(o.key, 0)
+                    self._orders.append(dataclasses.replace(o, elems=short))
+                    self.staged_elems += short
+                    self._cv.notify_all()
+                    self.stalls += 1
+                    t0 = time.perf_counter()
+                    deadline = t0 + timeout_s
+                    while self._avail_elems.get(o.key, 0) < o.elems:
+                        if not self._cv.wait(timeout=deadline
+                                             - time.perf_counter()):
+                            raise TimeoutError(
+                                f"dealer pool starved for {o.key}")
+                    self.dealer_stall_s += time.perf_counter() - t0
+                left = o.elems
+                bufs = self._avail[o.key]
+                while left > 0:
+                    head = bufs[0]
+                    if len(head) <= left:
+                        bufs.pop(0)
+                        left -= len(head)
+                    else:
+                        bufs[0] = head[left:]
+                        left = 0
+                self._avail_elems[o.key] -= o.elems
+                self.consumed_elems += o.elems
+
+    def close(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=10.0)
+
+    def stats(self) -> dict:
+        with self._cv:
+            return {
+                "staged_elems": self.staged_elems,
+                "produced_elems": self.produced_elems,
+                "produced_nbytes": self.produced_nbytes,
+                "consumed_elems": self.consumed_elems,
+                "pooled_elems": sum(self._avail_elems.values()),
+                "dealer_stall_s": self.dealer_stall_s,
+                "stalls": self.stalls,
+            }

@@ -194,6 +194,45 @@ class TestForcedGuard:
         assert np.allclose(np.asarray(reveal(z2)),
                            np.asarray([1.5, 0.5]) ** 4, atol=2e-2)
 
+    def test_cap_is_ring_parameterized(self):
+        """RING64 has sign + headroom for a third fraction (3f = 48 <
+        63); RING32 does not (3f = 36 > 31); no bit width means the
+        conservative 2f contract."""
+        assert scale.cap(RING64.frac_bits, RING64.bits) == \
+            3 * RING64.frac_bits
+        assert scale.cap(RING32.frac_bits, RING32.bits) == \
+            2 * RING32.frac_bits
+        assert scale.cap(16) == 32
+
+    def test_double_mul_chain_defers_on_ring64(self, x64):
+        """The exact chain that forces a dealer trunc on RING32 rides
+        to 3f force-free under the RING64 headroom cap — but ONLY on a
+        backend whose truncation is exact at any exponent (aby3trunc
+        trunc2 here; spdz2pc's MAC'd pairs likewise). This is the
+        ring-cap dividend bench_fusion tracks as
+        ring64_trunc_event_delta."""
+        vals = jnp.asarray([3.0, -2.5, 1.25])
+        x = share(_k(40), vals, RING64, "aby3trunc")
+        y = share(_k(41), vals, RING64, "aby3trunc")
+        z = share(_k(42), vals, RING64, "aby3trunc")
+        a = mops.mul(x, y, _k(43))
+        assert a.excess == RING64.frac_bits
+        with ledger_scope() as led:
+            b = mops.mul(a, z, _k(44))
+        assert not [r.op for r in led.records if "trunc" in r.op], \
+            "3f fits RING64 headroom: no forced truncation"
+        assert b.fb == 3 * RING64.frac_bits
+        want = np.asarray(vals) ** 3
+        assert np.allclose(np.asarray(reveal(b)), want, atol=2e-2)
+        # the exactness guard: default 2pc's RING64 truncation is a
+        # probabilistic local shift (wrap prob ~ encoded/2**63 — 2**16x
+        # worse at 3f), so the lattice denies it the deferral: the same
+        # chain forces back under the 2f cap and stays correct
+        x2, y2, z2 = (share(_k(45 + i), vals, RING64) for i in range(3))
+        b2 = mops.mul(mops.mul(x2, y2, _k(48)), z2, _k(49))
+        assert b2.fb == 2 * RING64.frac_bits
+        assert np.allclose(np.asarray(reveal(b2)), want, atol=2e-2)
+
     def test_force_memo_spans_consumers(self):
         """Two independent consumers of one deferred tensor pay ONE
         truncation (the ops.force cache) — the event reduction the

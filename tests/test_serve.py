@@ -1,0 +1,201 @@
+"""Appraisal service: dealer pool, phase cache, scheduler parity.
+
+Contracts (ISSUE 10):
+  1. DEALER — the background pool produces exactly the staged demand
+     (per-op/per-ring element accounting from the same TraceEngine
+     probes the executor reconciles against); an un-staged acquire
+     still completes (top-up) but bills the wait into dealer_stall_s;
+     dealer-free backends stage nothing.
+  2. CACHE — put/get roundtrips bitwise in memory and across a
+     persist_dir handoff (disk hit); the key separates fingerprint,
+     ring, and protocol.
+  3. SERVER — interleaving two identical + queued sessions yields
+     scores/survivors bitwise identical to standalone `run_selection`,
+     with the duplicate's phases served from cache/coalescing, every
+     per-session ledger reconciled, and the modeled service makespan
+     strictly below the N-sequential baseline.
+  4. GUARDS — sessions reject wire/mesh executor modes (the
+     interleaver owns the schedule).
+"""
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs.paper_targets import TINY_TARGET
+from repro.core import target as tgt
+from repro.core.executor import ExecConfig
+from repro.core.proxy import ProxySpec
+from repro.core.selection import PhaseRequest, SelectionConfig, run_selection
+from repro.data.tasks import make_classification_task
+from repro.engine import MPCEngine, cached_probe
+from repro.mpc.ring import RING32, RING64
+from repro.serve import (AppraisalServer, DealerPool, Order, PhaseCache,
+                         SessionSpec, phase_key, phase_orders)
+from repro.serve.session import AppraisalSession
+
+
+# ---------------------------------------------------------------------------
+# 1. dealer pool
+# ---------------------------------------------------------------------------
+
+def _probe(protocol, ring=RING32):
+    cfg = dataclasses.replace(TINY_TARGET, vocab_size=64)
+    return cached_probe(cfg, ProxySpec(1, 1, 2), batch=4, seq=8, classes=2,
+                        ring=ring, protocol=protocol, fused=True), cfg
+
+
+class TestDealerPool:
+    def test_orders_mirror_probe_offline_channel(self):
+        pb, _ = _probe("2pc")
+        orders = phase_orders(pb, 3, RING32, "2pc")
+        assert orders and all(o.elems > 0 for o in orders)
+        want = {op: numel * 3
+                for op, (numel, _) in pb.offline_by_op().items()}
+        got = {o.op: o.elems for o in orders}
+        assert got == want, "per-batch offline numel x n_batches"
+
+    def test_dealer_free_backend_stages_nothing(self):
+        pb, _ = _probe("3pc")
+        assert phase_orders(pb, 3, RING32, "3pc") == []
+
+    def test_staged_acquire_is_stall_free(self):
+        orders = [Order("offline.mul_triple", RING32, "2pc", 3000),
+                  Order("offline.trunc_pair", RING32, "2pc", 1000)]
+        pool = DealerPool(seed=1)
+        try:
+            pool.stage(orders)
+            deadline = time.time() + 30
+            while pool.stats()["pooled_elems"] < 4000:
+                assert time.time() < deadline, pool.stats()
+                time.sleep(0.01)
+            pool.acquire(orders)
+            st = pool.stats()
+            assert st["dealer_stall_s"] == 0.0 and st["stalls"] == 0
+            assert st["consumed_elems"] == 4000
+            assert st["produced_elems"] >= 4000
+        finally:
+            pool.close()
+
+    def test_unstaged_acquire_tops_up_and_bills_stall(self):
+        orders = [Order("offline.mul_triple", RING64, "2pc", 2048)]
+        pool = DealerPool(seed=2)
+        try:
+            pool.acquire(orders)          # nothing pre-staged
+            st = pool.stats()
+            assert st["consumed_elems"] == 2048
+            assert st["stalls"] == 1 and st["dealer_stall_s"] > 0.0
+        finally:
+            pool.close()
+
+
+# ---------------------------------------------------------------------------
+# 2. phase cache
+# ---------------------------------------------------------------------------
+
+def _req(fingerprint="aa" * 8, phase=0, keep=8, batch=4):
+    cfg = dataclasses.replace(TINY_TARGET, vocab_size=64)
+    return PhaseRequest(phase=phase, key=None, pp=None,
+                        tokens=np.zeros((16, 8), np.int32),
+                        spec=ProxySpec(1, 1, 2), keep=keep, batch=batch,
+                        fingerprint=fingerprint)
+
+
+class TestPhaseCache:
+    def test_memory_roundtrip_bitwise(self):
+        c = PhaseCache()
+        key = phase_key(_req(), RING64, "2pc")
+        assert c.get(key) is None
+        scores = np.arange(16, dtype=np.int64) * (1 << 40) - 7
+        c.put(key, scores, None)
+        got, rep = c.get(key)
+        assert np.array_equal(got, scores) and rep is None
+        assert c.stats()["hits"] == 1 and c.stats()["misses"] == 1
+
+    def test_key_separates_fingerprint_ring_protocol(self):
+        base = phase_key(_req(), RING64, "2pc")
+        assert phase_key(_req(fingerprint="bb" * 8), RING64, "2pc") != base
+        assert phase_key(_req(), RING32, "2pc") != base
+        assert phase_key(_req(), RING64, "spdz2pc") != base
+        assert phase_key(_req(phase=1), RING64, "2pc") != base
+        assert phase_key(_req(), RING64, "2pc") == base
+
+    def test_persist_dir_survives_process_handoff(self, tmp_path):
+        key = phase_key(_req(), RING64, "2pc")
+        scores = np.arange(8, dtype=np.int64) - 3
+        c1 = PhaseCache(persist_dir=str(tmp_path))
+        c1.put(key, scores, None)
+        c2 = PhaseCache(persist_dir=str(tmp_path))   # fresh memory
+        got, _ = c2.get(key)
+        assert np.array_equal(got, scores)
+        assert c2.stats()["disk_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# 3. server end-to-end parity (tiny: one phase, two twin sessions)
+# ---------------------------------------------------------------------------
+
+def _spec(sid, seed, n_pool=32):
+    task = make_classification_task(seed, n_pool=n_pool, n_test=16, seq=8,
+                                    vocab=64, n_classes=2)
+    cfg = dataclasses.replace(TINY_TARGET, vocab_size=task.vocab)
+    key = jax.random.key(seed)
+    params0 = tgt.init_classifier(key, cfg, task.n_classes)
+    sel = SelectionConfig(
+        phases=[ProxySpec(1, 1, 2, 1.0)], budget_frac=0.5, boot_frac=0.25,
+        engine=MPCEngine(protocol="2pc"), exvivo_steps=2, invivo_steps=1,
+        finetune_steps=1, score_batch=8, checkpoint_dir=None,
+        executor=ExecConfig(wave=2, protocol="2pc"))
+    ctx = dict(key=key, params0=params0, cfg=cfg, task=task, sel=sel)
+    return SessionSpec(sid=sid, key=key, target_params=params0,
+                       arch_cfg=cfg, pool_tokens=task.pool_tokens, sel=sel,
+                       n_classes=task.n_classes,
+                       boot_labels_fn=lambda i: task.pool_labels[i]), ctx
+
+
+@pytest.mark.slow
+class TestServerParity:
+    def test_twin_sessions_match_standalone_bitwise(self):
+        srv = AppraisalServer(max_active=2)
+        spec_a, ctx = _spec("a", 3)
+        spec_b, _ = _spec("b", 3)            # twin -> cache/coalescing
+        sa, sb = srv.submit(spec_a), srv.submit(spec_b)
+        rep = srv.run()
+        srv.close()
+        std = run_selection(ctx["key"], ctx["params0"], ctx["cfg"],
+                            ctx["task"].pool_tokens,
+                            dataclasses.replace(ctx["sel"]),
+                            n_classes=ctx["task"].n_classes,
+                            boot_labels_fn=lambda i:
+                            ctx["task"].pool_labels[i])
+        for s in (sa, sb):
+            assert all(np.array_equal(x, y) for x, y in
+                       zip(s.result.phase_scores, std.phase_scores))
+            assert s.result.appraisal_entropy == std.appraisal_entropy
+            assert np.array_equal(s.result.selected, std.selected)
+        # the twin never re-executed: one executed phase for two sessions
+        t = rep["throughput"]
+        assert t["n_phases_executed"] < t["n_phases_total"]
+        assert rep["cache"]["hits"] + rep["cache"]["coalesced_waits"] > 0
+        assert rep["ledger_agrees"] is True
+        assert (t["serve_appraisals_per_hour"]
+                > t["sequential_appraisals_per_hour"])
+        assert rep["dealer"]["dealer_stall_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 4. guards
+# ---------------------------------------------------------------------------
+
+class TestGuards:
+    @pytest.mark.parametrize("kw", [dict(wire="local"), dict(mesh="host")])
+    def test_session_rejects_wire_and_mesh(self, kw):
+        spec, _ = _spec("x", 0)
+        bad = dataclasses.replace(
+            spec, sel=dataclasses.replace(
+                spec.sel, executor=dataclasses.replace(spec.sel.executor,
+                                                       **kw)))
+        with pytest.raises(ValueError, match="wire='none'"):
+            AppraisalSession(bad)
